@@ -1,0 +1,35 @@
+"""Quickstart: discover a model asset, build its wrapper, predict.
+
+The paper's core flow (Fig. 3): every model, regardless of architecture
+family, answers through the same standardized interface.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import json
+
+import repro.core.assets  # populates the exchange
+from repro.core import EXCHANGE
+
+# 1) browse the exchange (the paper's "30+ wrapped models" catalogue)
+print("Assets on the exchange:")
+for asset in EXCHANGE.list():
+    m = asset.metadata
+    print(f"  {m.id:24s} {m.type:22s} [{m.source}]")
+
+# 2) build the sentiment demo (paper Fig. 3) and predict
+sentiment = EXCHANGE.get("max-sentiment").build(max_seq=64, max_batch=2)
+env = sentiment.predict_envelope(
+    ["The food was great", "The service was terrible"])
+print("\nStandardized envelope (paper Fig. 3):")
+print(json.dumps(env, indent=1))
+
+# 3) swap in a COMPLETELY different architecture family — same client code.
+#    (An RWKV6 state-space decoder; reduced config so it runs on CPU.)
+rwkv = EXCHANGE.get("rwkv6-7b").build(max_seq=64, max_batch=2)
+env = rwkv.predict_envelope({"text": "Hello MAX", "max_new_tokens": 8})
+print("\nSame API, attention-free SSM backbone:")
+print(json.dumps({k: v for k, v in env.items() if k != "predictions"},
+                 indent=1))
+print("generated_tokens:",
+      env["predictions"][0]["generated_tokens"])

@@ -1,0 +1,66 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned architecture.
+
+Architecture IDs use the assignment's dashed spelling (e.g.
+``qwen3-moe-235b-a22b``); module names use underscores.
+"""
+
+from repro.configs.base import ModelConfig, reduce_for_smoke, pad_to
+from repro.configs.shapes import (
+    SHAPES, InputShape, get_shape, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+)
+
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.llama3_405b import CONFIG as _llama3_405b
+from repro.configs.phi35_moe_42b_a66b import CONFIG as _phi35_moe
+from repro.configs.deepseek_67b import CONFIG as _deepseek_67b
+from repro.configs.minicpm_2b import CONFIG as _minicpm_2b
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma_9b
+from repro.configs.whisper_large_v3 import CONFIG as _whisper_large_v3
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.internvl2_2b import CONFIG as _internvl2_2b
+from repro.configs.rwkv6_7b import CONFIG as _rwkv6_7b
+from repro.configs.max_demo import SENTIMENT as _max_sentiment, CAPTION as _max_caption
+
+# The 10 assigned architectures (the benchmark/dry-run population).
+ASSIGNED: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _qwen3_moe,
+        _llama3_405b,
+        _phi35_moe,
+        _deepseek_67b,
+        _minicpm_2b,
+        _recurrentgemma_9b,
+        _whisper_large_v3,
+        _qwen3_4b,
+        _internvl2_2b,
+        _rwkv6_7b,
+    )
+}
+
+# Paper demo assets (CPU-runnable).
+DEMOS: dict[str, ModelConfig] = {
+    c.name: c for c in (_max_sentiment, _max_caption)
+}
+
+CONFIGS: dict[str, ModelConfig] = {**ASSIGNED, **DEMOS}
+
+for _c in CONFIGS.values():
+    _c.validate()
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown architecture {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def list_archs(assigned_only: bool = True) -> list[str]:
+    return sorted(ASSIGNED if assigned_only else CONFIGS)
+
+
+def applicable_shapes(cfg: ModelConfig) -> dict[str, bool]:
+    """Which of the 4 assigned shapes apply to this arch (False = recorded skip)."""
+    out = {"train_4k": True, "prefill_32k": True, "decode_32k": True}
+    out["long_500k"] = cfg.supports_long_context
+    return out

@@ -1,0 +1,18 @@
+"""DeepSeek-67B — dense llama-arch GQA [arXiv:2401.02954]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    source="arXiv:2401.02954 (DeepSeek LLM)",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22_016,
+    vocab_size=102_400,
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+)

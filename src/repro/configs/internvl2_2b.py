@@ -1,0 +1,25 @@
+"""InternVL2-2B — InternViT + InternLM2 VLM [arXiv:2404.16821].
+
+The InternViT vision encoder + MLP projector is a STUB per the assignment:
+``input_specs()`` supplies 256 precomputed patch embeddings [B, 256, 2048]
+that are prepended to the token embeddings. This module implements the
+InternLM2-like language decoder that consumes them.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    source="arXiv:2404.16821 (InternVL 1.5/2); internlm2-chat-1_8b LM",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92_553,     # padded to 92672 for TP
+    num_image_tokens=256,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-5,
+)

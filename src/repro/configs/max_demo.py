@@ -1,0 +1,43 @@
+"""The paper's own demo assets, in miniature.
+
+MAX (CIKM'19) demonstrates a text-sentiment classifier (Fig. 3 JSON), an
+object detector, and an image-caption generator (Show-and-Tell). We mirror
+the text-shaped two as small, CPU-runnable assets so the examples and HTTP
+demos exercise the exact paper flows:
+
+- ``max-sentiment``: tiny causal LM scored as a 2-way classifier; its
+  prediction envelope reproduces the paper's Fig. 3 JSON verbatim shape:
+  ``{"status": "ok", "predictions": [[{"positive": p, "negative": n}]]}``.
+- ``max-caption``: tiny encoder-decoder consuming stub image patch
+  embeddings (the Show-and-Tell analogue).
+"""
+
+from repro.configs.base import ModelConfig
+
+SENTIMENT = ModelConfig(
+    name="max-sentiment",
+    family="dense",
+    source="MAX demo asset (CIKM'19 Fig. 3, MAX-Text-Sentiment-Classifier)",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    tie_embeddings=True,
+)
+
+CAPTION = ModelConfig(
+    name="max-caption",
+    family="vlm",
+    source="MAX demo asset (CIKM'19 Fig. 2b, Show-and-Tell caption generator)",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    num_image_tokens=8,
+)

@@ -1,0 +1,26 @@
+"""MiniCPM-2B — llama-like dense, WSD schedule [arXiv:2404.06395].
+
+36 heads do not divide the 16-way ``model`` axis, so attention weights stay
+replicated over TP (MLP still TP-sharded) — see sharding/rules.py.
+``long_500k`` is served via the sliding-window variant.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    source="arXiv:2404.06395 (MiniCPM)",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,       # MHA
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122_753,    # padded to 122880 for TP; logical kept for loss
+    rope_theta=10_000.0,
+    norm_eps=1e-5,
+    tie_embeddings=True,
+    lr_schedule="wsd",
+    sliding_window=4096,   # enables long_500k decode (beyond-paper variant)
+)

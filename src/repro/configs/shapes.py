@@ -1,0 +1,37 @@
+"""Assigned input shapes.
+
+Each shape pairs a (seq_len, global_batch) with an execution *kind*:
+
+- ``train``   -> lowers ``train_step`` (forward + backward + optimizer)
+- ``prefill`` -> lowers ``prefill``   (forward, fills the KV cache)
+- ``decode``  -> lowers ``serve_step`` (ONE new token vs a seq_len cache)
+
+``long_500k`` additionally requires a sub-quadratic decode path; archs whose
+config lacks one skip it (recorded, not silently dropped).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown input shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]

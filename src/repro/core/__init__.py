@@ -1,0 +1,15 @@
+"""The paper's primary contribution: the MAX framework.
+
+- wrapper.py    MAXModelWrapper + standardized envelope (Sec. 2.2.1)
+- registry.py   the model exchange catalogue (Sec. 2.2.2)
+- assets.py     wrapped assets for every assigned architecture
+- api.py        standardized RESTful API + Swagger (Sec. 2.2.3)
+- deployment.py container-isolation analogue for TPU pods
+- skeleton.py   MAX-Skeleton add-a-model template (Sec. 3.2)
+"""
+
+from repro.core.wrapper import MAXError, MAXModelWrapper, ModelMetadata
+from repro.core.registry import EXCHANGE, ModelAsset, ModelRegistry
+from repro.core.deployment import Deployment, DeploymentManager
+from repro.core.api import MAXServer, build_swagger
+from repro.core.skeleton import register_asset, skeleton_source

@@ -1,0 +1,202 @@
+"""Standardized RESTful API — paper Section 2.2.3, as a real HTTP server.
+
+Endpoints (identical across every wrapped model — the paper's key claim is
+that swapping the underlying model requires zero client-code change):
+
+    GET  /                          -> exchange info
+    GET  /models                    -> catalogue (metadata list)
+    GET  /model/<id>/metadata       -> asset metadata
+    GET  /model/<id>/labels         -> labels (if any)
+    POST /model/<id>/predict        -> {"status": "ok", "predictions": ...}
+    POST /model/<id>/deploy         -> deploy an asset
+    GET  /health                    -> per-deployment stats
+    GET  /swagger.json              -> auto-generated OpenAPI spec
+
+Implemented on the stdlib ``ThreadingHTTPServer`` (offline container — no
+Flask), which is faithful anyway: MAX's per-model servers are thin WSGI
+apps around the wrapper.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.deployment import DeploymentManager
+from repro.core.registry import EXCHANGE, ModelRegistry
+
+API_VERSION = "v1"
+
+
+def build_swagger(registry: ModelRegistry) -> Dict[str, Any]:
+    """Auto-generate an OpenAPI spec covering every registered asset
+    (the paper integrates Swagger for a free GUI per model)."""
+    paths: Dict[str, Any] = {
+        "/models": {"get": {"summary": "List model assets",
+                            "responses": {"200": {"description": "catalogue"}}}},
+        "/health": {"get": {"summary": "Deployment health",
+                            "responses": {"200": {"description": "stats"}}}},
+    }
+    for asset in registry.list():
+        mid = asset.metadata.id
+        paths[f"/model/{mid}/predict"] = {
+            "post": {
+                "summary": f"Predict with {asset.metadata.name}",
+                "requestBody": {"content": {"application/json": {
+                    "schema": {"type": "object",
+                               "properties": {"input": {}}}}}},
+                "responses": {"200": {
+                    "description": "standardized envelope",
+                    "content": {"application/json": {"schema": {
+                        "type": "object",
+                        "properties": {
+                            "status": {"type": "string"},
+                            "predictions": {"type": "array"},
+                        }}}}}},
+            }
+        }
+        paths[f"/model/{mid}/metadata"] = {
+            "get": {"summary": f"Metadata for {asset.metadata.name}",
+                    "responses": {"200": {"description": "metadata"}}}}
+    return {
+        "openapi": "3.0.0",
+        "info": {"title": "Model Asset eXchange (JAX)", "version": API_VERSION},
+        "paths": paths,
+    }
+
+
+class MAXServer:
+    """Owns the HTTP server + deployment manager. Thread-safe; used by
+    tests/examples via ``with MAXServer(...) as s: requests to s.url``."""
+
+    def __init__(self, registry: Optional[ModelRegistry] = None,
+                 manager: Optional[DeploymentManager] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 auto_deploy: bool = True, build_kw: Optional[dict] = None):
+        self.registry = registry if registry is not None else EXCHANGE
+        self.manager = manager if manager is not None else DeploymentManager(self.registry)
+        self.auto_deploy = auto_deploy
+        self.build_kw = build_kw or {}
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *a):      # quiet
+                pass
+
+            def _send(self, code: int, payload: Dict[str, Any]):
+                body = json.dumps(payload).encode()
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):
+                try:
+                    code, payload = outer.handle_get(self.path)
+                except Exception as e:          # container fault isolation
+                    code, payload = 500, {"status": "error", "error": str(e)}
+                self._send(code, payload)
+
+            def do_POST(self):
+                n = int(self.headers.get("Content-Length", 0))
+                raw = self.rfile.read(n) if n else b"{}"
+                try:
+                    data = json.loads(raw.decode() or "{}")
+                except json.JSONDecodeError:
+                    self._send(400, {"status": "error", "error": "bad JSON"})
+                    return
+                try:
+                    code, payload = outer.handle_post(self.path, data)
+                except Exception as e:
+                    code, payload = 500, {"status": "error", "error": str(e)}
+                self._send(code, payload)
+
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- routing ---------------------------------------------------------------
+
+    def handle_get(self, path: str) -> Tuple[int, Dict[str, Any]]:
+        if path in ("/", ""):
+            return 200, {"name": "Model Asset eXchange (JAX)",
+                         "api_version": API_VERSION,
+                         "assets": len(self.registry),
+                         "deployed": self.manager.deployed()}
+        if path == "/models":
+            return 200, {"models": [a.metadata.to_json()
+                                    for a in self.registry.list()]}
+        if path == "/health":
+            return 200, {"deployments": self.manager.health()}
+        if path == "/swagger.json":
+            return 200, build_swagger(self.registry)
+        m = re.fullmatch(r"/model/([^/]+)/metadata", path)
+        if m:
+            try:
+                return 200, self.registry.get(m.group(1)).metadata.to_json()
+            except KeyError as e:
+                return 404, {"status": "error", "error": str(e)}
+        m = re.fullmatch(r"/model/([^/]+)/labels", path)
+        if m:
+            try:
+                dep = self._ensure_deployed(m.group(1))
+            except KeyError as e:
+                return 404, {"status": "error", "error": str(e)}
+            return 200, {"labels": dep.wrapper.labels()}
+        return 404, {"status": "error", "error": f"no route {path}"}
+
+    def handle_post(self, path: str, data: Dict[str, Any]
+                    ) -> Tuple[int, Dict[str, Any]]:
+        m = re.fullmatch(r"/model/([^/]+)/predict", path)
+        if m:
+            try:
+                dep = self._ensure_deployed(m.group(1))
+            except KeyError as e:
+                return 404, {"status": "error", "error": str(e)}
+            env = dep.predict(data.get("input", data))
+            return (200 if env["status"] == "ok" else 400), env
+        m = re.fullmatch(r"/model/([^/]+)/deploy", path)
+        if m:
+            try:
+                self.manager.deploy(m.group(1), **self.build_kw)
+            except KeyError as e:
+                return 404, {"status": "error", "error": str(e)}
+            return 200, {"status": "ok", "deployed": self.manager.deployed()}
+        return 404, {"status": "error", "error": f"no route {path}"}
+
+    def _ensure_deployed(self, asset_id: str):
+        try:
+            return self.manager.get(asset_id)
+        except KeyError:
+            if not self.auto_deploy:
+                raise
+            self.registry.get(asset_id)       # raises KeyError if unknown
+            return self.manager.deploy(asset_id, **self.build_kw)
+
+    # -- lifecycle ----------------------------------------------------------------
+
+    @property
+    def url(self) -> str:
+        host, port = self._server.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self):
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()

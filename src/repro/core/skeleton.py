@@ -1,0 +1,73 @@
+"""MAX-Skeleton — the paper's add-a-model template (Section 3.2).
+
+The paper's three-step flow: (1) wrap the model, (2) build the Docker
+image, (3) publish. Here: (1) subclass :class:`MAXModelWrapper`,
+(2) create a :class:`ModelAsset` (the deployable image analogue),
+(3) register it with the exchange. ``examples/add_model.py`` walks through
+it end-to-end; :func:`skeleton_source` emits the starter file.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.registry import EXCHANGE, ModelAsset, ModelRegistry
+from repro.core.wrapper import MAXModelWrapper, ModelMetadata
+
+SKELETON_TEMPLATE = '''"""New MAX asset — fill in the three hooks."""
+
+from repro.core.skeleton import register_asset
+from repro.core.wrapper import MAXModelWrapper, ModelMetadata
+
+
+class MyModelWrapper(MAXModelWrapper):
+    MODEL_META_DATA = ModelMetadata(
+        id="{asset_id}",
+        name="{asset_id}",
+        description="TODO",
+        type="Text Generation",
+        source="TODO",
+        license="Apache-2.0",
+    )
+
+    def __init__(self, asset, **kw):
+        # TODO: build/load your model here
+        pass
+
+    def _pre_process(self, inp):
+        # TODO: convert client JSON -> model input
+        return inp
+
+    def _predict(self, x):
+        # TODO: run the model
+        raise NotImplementedError
+
+    def _post_process(self, result):
+        # TODO: convert model output -> JSON-compatible predictions
+        return result
+
+
+asset = register_asset("{asset_id}", MyModelWrapper)
+'''
+
+
+def skeleton_source(asset_id: str) -> str:
+    return SKELETON_TEMPLATE.format(asset_id=asset_id)
+
+
+def register_asset(asset_id: str, wrapper_cls, *,
+                   config: Optional[ModelConfig] = None,
+                   registry: Optional[ModelRegistry] = None,
+                   overwrite: bool = False) -> ModelAsset:
+    """Steps 2+3: package the wrapper as an asset and publish it."""
+    reg = registry if registry is not None else EXCHANGE
+    meta = wrapper_cls.MODEL_META_DATA
+    if meta.id != asset_id:
+        raise ValueError(f"wrapper metadata id {meta.id!r} != {asset_id!r}")
+    cfg = config or ModelConfig(name=asset_id, family="dense", num_layers=1,
+                                d_model=64, num_heads=1, num_kv_heads=1,
+                                head_dim=64, d_ff=128, vocab_size=512)
+    asset = ModelAsset(metadata=meta, config=cfg,
+                       builder=lambda a, **kw: wrapper_cls(a, **kw))
+    return reg.register(asset, overwrite=overwrite)

@@ -1,0 +1,100 @@
+"""The MAX framework wrapper — the paper's Section 2.2.1, faithfully.
+
+To wrap a model you inherit :class:`MAXModelWrapper`, declare
+``MODEL_META_DATA``, and implement ``_pre_process`` / ``_predict`` /
+``_post_process``. ``predict()`` chains them and the API layer wraps the
+result in the standardized envelope ``{"status": "ok", "predictions": ...}``
+(paper Fig. 3 / the sentiment-classifier JSON example).
+
+The paper's wrappers hide *frameworks* (TF vs PyTorch vs Theano); in a
+single-runtime JAX world ours hide *architecture family and execution mode*
+— a caller cannot tell an RWKV6 decode loop from a dense GQA one, or a
+classifier head from a generative decode.
+"""
+
+from __future__ import annotations
+
+import abc
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class ModelMetadata:
+    """Standardized asset metadata (paper: /model/metadata endpoint)."""
+    id: str
+    name: str
+    description: str
+    type: str                       # e.g. "Text Classification"
+    source: str = ""
+    license: str = "Apache-2.0"
+    framework: str = "jax"
+    version: str = "1.0.0"
+    labels: tuple = ()
+
+    def to_json(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["labels"] = list(self.labels)
+        return d
+
+
+class MAXError(Exception):
+    """Raised by wrappers for client-visible failures (400-class)."""
+
+
+class MAXModelWrapper(abc.ABC):
+    """Base wrapper. Subclasses set MODEL_META_DATA and implement hooks.
+
+    The contract (paper Section 2.2.1-2.2.2): wrapping only requires
+    inheriting this class and converting model input/output to data
+    structures the framework accepts — JSON-compatible Python values.
+    """
+
+    MODEL_META_DATA: ModelMetadata
+
+    def _pre_process(self, inp: Any) -> Any:
+        return inp
+
+    @abc.abstractmethod
+    def _predict(self, x: Any) -> Any:
+        ...
+
+    def _post_process(self, result: Any) -> Any:
+        return result
+
+    # -- public, standardized API ------------------------------------------
+
+    @property
+    def metadata(self) -> ModelMetadata:
+        return self.MODEL_META_DATA
+
+    def predict(self, inp: Any) -> Any:
+        """pre -> predict -> post. Returns JSON-compatible predictions."""
+        pre = self._pre_process(inp)
+        raw = self._predict(pre)
+        return self._post_process(raw)
+
+    def predict_envelope(self, inp: Any) -> Dict[str, Any]:
+        """The standardized response envelope (paper Fig. 3)."""
+        t0 = time.perf_counter()
+        try:
+            preds = self.predict(inp)
+            return {
+                "status": "ok",
+                "predictions": preds,
+                "model_id": self.metadata.id,
+                "latency_ms": round((time.perf_counter() - t0) * 1e3, 3),
+            }
+        except MAXError as e:
+            return {"status": "error", "error": str(e),
+                    "model_id": self.metadata.id}
+
+    # -- optional endpoints -----------------------------------------------------
+
+    def labels(self) -> List[str]:
+        return list(self.metadata.labels)
+
+    def input_schema(self) -> Dict[str, Any]:
+        """OpenAPI-ish input schema; overridden by typed wrappers."""
+        return {"type": "object", "properties": {"input": {}}}

@@ -1,0 +1,1 @@
+from repro.data.tokenizer import TOKENIZER, ByteTokenizer

@@ -1,0 +1,40 @@
+"""Global optimization flags.
+
+The paper-faithful BASELINE configuration runs with all optimizations off;
+the optimized configuration (EXPERIMENTS.md §Perf) turns them on. Flags are
+read at trace time, so flipping them changes the lowered HLO.
+
+- chunked_wkv   : RWKV6 chunked-parallel WKV instead of per-token scan (H1)
+- carry_cache   : decode KV cache in scan carry (in-place) vs xs/ys (H3.2)
+- donate        : donate train state / decode cache buffers (H3.1)
+- gather_weights: all-gather FSDP-sharded weights per layer instead of
+                  letting GSPMD partial-sum all-reduce activations (H2)
+"""
+
+from __future__ import annotations
+
+_FLAGS = {
+    "chunked_wkv": True,
+    "carry_cache": True,
+    "donate": True,
+    "gather_weights": False,   # opt-in (H2; interacts with XLA's own choices)
+    "uniform_decode": False,   # scalar-index cache writes (lockstep decode)
+}
+
+
+def enabled(name: str) -> bool:
+    return _FLAGS[name]
+
+
+def set_flag(name: str, value: bool):
+    assert name in _FLAGS, name
+    _FLAGS[name] = value
+
+
+def set_all(**kw):
+    for k, v in kw.items():
+        set_flag(k, v)
+
+
+def snapshot() -> dict:
+    return dict(_FLAGS)

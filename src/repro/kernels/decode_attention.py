@@ -1,0 +1,101 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+Grid ``(B, KV, num_kv_blocks)`` — cache blocks innermost with the
+flash-combine carry in VMEM scratch. Each step processes the whole GQA
+group at once: the q block is ``[G, hd]`` (all query heads sharing one KV
+head), so the MXU sees ``(G x hd) @ (hd x bs)`` tiles instead of degenerate
+single-row matmuls.
+
+``lengths`` rides in scalar-prefetch (SMEM) and masks cache slots past the
+per-sequence length. This kernel is the per-shard body of the
+context-parallel decode path: on a sequence-sharded cache each shard runs
+it over its local slice and the (m, l, acc) partials combine with small
+collectives (the pure-jnp path lets GSPMD derive the same combine).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bs):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bs, hd]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bs, hd]
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+
+    length = lens_ref[b]
+    pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, bs=256, interpret=False):
+    """q [B, H, hd]; k, v [B, S, KV, hd]; lengths [B] -> [B, H, hd]."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    G = H // KV
+    assert S % bs == 0, (S, bs)
+
+    qg = q.reshape(B, KV, G, hd)
+    kt = jnp.swapaxes(k, 1, 2)                     # [B, KV, S, hd]
+    vt = jnp.swapaxes(v, 1, 2)
+
+    grid = (B, KV, S // bs)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bs=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, H, hd)

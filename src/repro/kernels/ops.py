@@ -1,0 +1,122 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op pads inputs to kernel block multiples, dispatches to the Pallas
+kernel (TPU) or the pure-jnp oracle (CPU / opted-out), and unpads. The
+model code calls these; on this CPU container the default backend is the
+oracle and the kernels are exercised with ``interpret=True`` in tests.
+
+``set_backend("pallas" | "ref" | "interpret")`` flips the dispatch
+globally (tests use it to force interpret mode through real model code).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.gmm import gmm as _gmm_pallas
+from repro.kernels.rglru import rglru_scan as _rglru_pallas
+from repro.kernels.rwkv6 import wkv_scan as _wkv_pallas
+
+_BACKEND = "ref"
+
+
+def set_backend(name: str):
+    global _BACKEND
+    assert name in ("pallas", "ref", "interpret"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _pad_to(x, axis: int, multiple: int, value=0.0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    bq=128, bkv=128):
+    """q [B, H, Sq, hd]; k, v [B, KV, Skv, hd] -> [B, H, Sq, hd]."""
+    if _BACKEND == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    Sq, Skv = q.shape[2], k.shape[2]
+    qp, _ = _pad_to(q, 2, bq)
+    kp, _ = _pad_to(k, 2, bkv)
+    vp, _ = _pad_to(v, 2, bkv)
+    out = _flash_pallas(qp, kp, vp, causal=causal, window=window,
+                        q_offset=q_offset, bq=bq, bkv=bkv, kv_len=Skv,
+                        interpret=(_BACKEND == "interpret"))
+    return out[:, :, :Sq]
+
+
+def decode_attention(q, k, v, lengths, *, bs=256):
+    """q [B, H, hd]; k, v [B, S, KV, hd]; lengths [B] -> [B, H, hd]."""
+    if _BACKEND == "ref":
+        return _ref.decode_attention_ref(q, k, v, lengths)
+    S = k.shape[1]
+    kp, _ = _pad_to(k, 1, bs)
+    vp, _ = _pad_to(v, 1, bs)
+    # padded slots have position >= S >= lengths -> masked by lengths
+    return _decode_pallas(q, kp, vp, lengths, bs=min(bs, kp.shape[1]),
+                          interpret=(_BACKEND == "interpret"))
+
+
+def rglru_scan(a, b, h0=None, *, bt=128, bw=512):
+    """a, b [B, S, W] -> (h [B, S, W], h_last [B, W])."""
+    if _BACKEND == "ref":
+        h = _ref.rglru_ref(a, b, h0)
+        return h, h[:, -1]
+    S = a.shape[1]
+    ap, ps = _pad_to(a, 1, bt)
+    bp, _ = _pad_to(b, 1, bt)
+    h, hlast = _rglru_pallas(ap, bp, h0, bt=bt, bw=bw,
+                             interpret=(_BACKEND == "interpret"))
+    if ps:
+        # padded steps have a=0, b=0 -> h collapses to 0; true last state is
+        # at S-1
+        hlast = h[:, S - 1]
+    return h[:, :S], hlast
+
+
+def wkv_scan(r, k, v, w, u, s0=None, *, bt=128):
+    """r/k/v/w [B, T, H, N]; u [H, N] -> (y [B,T,H,N], s [B,H,N,N])."""
+    if _BACKEND == "ref":
+        return _ref.rwkv6_ref(r, k, v, w, u, s0)
+    # kernel layout is [B, H, T, N]
+    tr = lambda t: jnp.swapaxes(t, 1, 2)
+    T = r.shape[1]
+    rp, pt = _pad_to(tr(r), 2, bt)
+    kp, _ = _pad_to(tr(k), 2, bt)
+    vp, _ = _pad_to(tr(v), 2, bt)
+    # padded steps must leave the state unchanged: decay w=1, k=0
+    wp, _ = _pad_to(tr(w), 2, bt, value=1.0)
+    y, s = _wkv_pallas(rp, kp, vp, wp, u, s0, bt=bt,
+                       interpret=(_BACKEND == "interpret"))
+    return jnp.swapaxes(y[:, :, :T], 1, 2), s
+
+
+def gmm(x, w, *, bc=128, bf=128, bd=256):
+    """x [E, C, d]; w [E, d, f] -> [E, C, f]."""
+    if _BACKEND == "ref":
+        return _ref.gmm_ref(x, w)
+    C, d, f = x.shape[1], x.shape[2], w.shape[2]
+    xp, _ = _pad_to(x, 1, bc)
+    xp, _ = _pad_to(xp, 2, bd)
+    wp, _ = _pad_to(w, 1, bd)
+    wp, _ = _pad_to(wp, 2, bf)
+    out = _gmm_pallas(xp, wp, bc=bc, bf=bf, bd=bd,
+                      interpret=(_BACKEND == "interpret"))
+    return out[:, :C, :f]

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every kernel (the assert_allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q [B, H, Sq, hd]; k, v [B, KV, Skv, hd] -> [B, H, Sq, hd].
+
+    Naive full-matrix softmax attention (small shapes only).
+    """
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(F32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(F32)) * hd ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows -> zeros (match kernel semantics)
+    any_valid = jnp.any(mask, axis=-1)
+    p = jnp.where(any_valid[..., :, None], p, 0.0)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(F32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q [B, H, hd]; k, v [B, S, KV, hd]; lengths [B] -> [B, H, hd]."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(F32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(F32)) * hd ** -0.5
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(F32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rglru_ref(a, b, h0=None):
+    """Sequential RG-LRU recurrence. a, b [B, S, W] f32 -> h [B, S, W].
+
+    h_t = a_t * h_{t-1} + b_t, h_0 state optional [B, W].
+    """
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), F32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def rwkv6_ref(r, k, v, w, u, state=None):
+    """Sequential WKV. r/k/v/w [B, T, H, N] f32; u [H, N] ->
+    (y [B, T, H, N], final_state [B, H, N, N])."""
+    B, T, H, N = r.shape
+    s = jnp.zeros((B, H, N, N), F32) if state is None else state
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def gmm_ref(x, w):
+    """Grouped matmul: x [E, C, d], w [E, d, f] -> [E, C, f] (f32 accum)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(F32),
+                      w.astype(F32)).astype(x.dtype)

@@ -1,0 +1,6 @@
+# NOTE: deliberately does NOT import dryrun (it sets XLA device-count flags
+# at import time). Import repro.launch.dryrun explicitly and first.
+from repro.launch.mesh import (
+    HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16,
+    make_production_mesh, make_test_mesh, num_chips,
+)

@@ -1,0 +1,326 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+Proves the distribution config is coherent without real hardware: AOT
+``.lower().compile()`` against ShapeDtypeStruct inputs on 512 forced host
+devices, then records memory analysis, XLA cost analysis, and the
+trip-count-scaled HLO cost model (launch/hlo_analysis.py) to JSON for the
+roofline tables.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --sweep              # all pairs x both meshes
+    python -m repro.launch.dryrun --sweep --mesh single
+"""
+
+# MUST be first — before ANY jax-importing module — jax locks the device
+# count on first init. Do NOT set this in conftest.py/pyproject: smoke tests
+# and benches must see 1 device.
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.configs import applicable_shapes, get_config, list_archs
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.hlo_analysis import analyze
+from repro.launch.inputs import input_specs, params_specs, train_batch_specs
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.models import build_model
+from repro.sharding import LogicalRules, use_rules
+from repro.sharding.specs import batch_specs, cache_specs_tree, param_specs
+from repro.training import adamw, make_schedule
+from repro.training.trainer import TrainState, make_train_step
+
+BF16 = jnp.bfloat16
+
+BIG_MODEL_B = 60e9      # >=: bf16 optimizer moments (HBM budget, DESIGN.md)
+
+
+def _num_microbatches(cfg: ModelConfig, global_batch: int, mesh) -> int:
+    """Baseline: per-device micro batch of 1 on the data axes."""
+    data_total = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    nm = max(1, global_batch // data_total)
+    while global_batch % nm:
+        nm -= 1
+    return nm
+
+
+def _sharding_tree(rules: LogicalRules, spec_tree):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def lower_pair(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,
+               num_microbatches: Optional[int] = None,
+               rule_overrides: Optional[dict] = None,
+               cache_dtype=BF16):
+    """Returns (lowered, rules, meta) for one (arch, shape, mesh)."""
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = LogicalRules(mesh, rule_overrides)
+    model = build_model(cfg, param_dtype=BF16, remat=True,
+                        cache_dtype=cache_dtype)
+
+    kind, kwargs = input_specs(cfg, shape)
+    if kind == "decode" and cache_dtype != BF16:
+        from repro.launch.inputs import cache_specs
+        kwargs["cache"] = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                      cache_dtype=cache_dtype)
+    p_specs = params_specs(cfg)
+    p_shard = _sharding_tree(rules, param_specs(rules, p_specs))
+
+    meta: Dict[str, Any] = {"kind": kind, "mesh_axes": dict(mesh.shape)}
+
+    with use_rules(rules), mesh:
+        if kind == "train":
+            nm = num_microbatches or _num_microbatches(
+                cfg, shape.global_batch, mesh)
+            meta["num_microbatches"] = nm
+            moment_dtype = (jnp.bfloat16 if cfg.param_count() >= BIG_MODEL_B
+                            else jnp.float32)
+            meta["moment_dtype"] = str(jnp.dtype(moment_dtype))
+            sched = make_schedule(cfg.lr_schedule, peak_lr=3e-4,
+                                  warmup_steps=2000, total_steps=100_000)
+            opt = adamw(sched, moment_dtype=moment_dtype)
+            accum_dtype = (jnp.bfloat16 if cfg.param_count() >= BIG_MODEL_B
+                           else jnp.float32)
+            meta["accum_dtype"] = str(jnp.dtype(accum_dtype))
+            state_specs = jax.eval_shape(
+                lambda: TrainState(model.init(jax.random.PRNGKey(0)),
+                                   opt.init(p_specs)))
+            # optimizer moments shard exactly like their parameters
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.training.optimizer import AdamWState
+            repl = NamedSharding(rules.mesh, P())
+            moment_shard = _sharding_tree(rules, param_specs(rules, p_specs))
+            state_shard = TrainState(
+                p_shard, AdamWState(repl, moment_shard, moment_shard))
+            b_specs = kwargs["batch"]
+            b_shard = _sharding_tree(rules, batch_specs(rules, b_specs))
+            step_fn = make_train_step(model, opt, num_microbatches=nm,
+                                      accum_dtype=accum_dtype)
+            donate = (0,) if flags.enabled("donate") else ()
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_shard, b_shard),
+                donate_argnums=donate,         # state buffers reused in-place
+            ).lower(state_specs, b_specs)
+        elif kind == "prefill":
+            b_specs = kwargs["batch"]
+            b_shard = _sharding_tree(rules, batch_specs(rules, b_specs))
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(p_shard, b_shard),
+            ).lower(p_specs, b_specs)
+        else:  # decode
+            c_specs = kwargs["cache"]
+            c_shard = _sharding_tree(rules, cache_specs_tree(rules, c_specs))
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            t_shard = NamedSharding(
+                rules.mesh, rules.spec(("batch",), kwargs["tokens"].shape))
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            donate = (1,) if flags.enabled("donate") else ()
+            lowered = jax.jit(
+                serve_step, in_shardings=(p_shard, c_shard, t_shard),
+                donate_argnums=donate,         # cache updates in-place
+            ).lower(p_specs, c_specs, kwargs["tokens"])
+
+    meta["sharding_fallbacks"] = sorted(set(rules.fallbacks))
+    return lowered, rules, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            out_dir: Optional[str] = None,
+            num_microbatches: Optional[int] = None,
+            rule_overrides: Optional[dict] = None,
+            cache_dtype=BF16,
+            tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    mesh_name = "multi" if multi_pod else "single"
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    # The sliding-window config on dense archs is the *long-context variant*
+    # (enables long_500k). All other shapes run the faithful full-attention
+    # model from the source model card.
+    if cfg.family == "dense" and cfg.sliding_window is not None:
+        if shape_name == "long_500k":
+            record["variant"] = "sliding_window"
+        else:
+            cfg = cfg.replace(sliding_window=None)
+    if not applicable_shapes(cfg).get(shape_name, True):
+        record.update(status="skipped",
+                      reason="pure full-attention / enc-dec arch: no "
+                             "sub-quadratic long-context decode path")
+        _write(record, out_dir, tag)
+        return record
+
+    record["flags"] = flags.snapshot()
+    t0 = time.time()
+    try:
+        lowered, rules, meta = lower_pair(
+            cfg, shape_name, multi_pod=multi_pod,
+            num_microbatches=num_microbatches, rule_overrides=rule_overrides,
+            cache_dtype=cache_dtype)
+        record["cache_dtype"] = str(jnp.dtype(cache_dtype))
+        record.update(meta)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost_analysis"] = {
+            k: ca[k] for k in ("flops", "bytes accessed") if k in ca}
+        n = num_chips(make_production_mesh(multi_pod=multi_pod))
+        record["num_chips"] = n
+        t2 = time.time()
+        cost = analyze(compiled.as_text(), n)
+        record["analyze_s"] = round(time.time() - t2, 1)
+        record["hlo_cost"] = cost.to_json()
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record every failure mode
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["total_s"] = round(time.time() - t0, 1)
+    _write(record, out_dir, tag)
+    return record
+
+
+def _write(record: Dict[str, Any], out_dir: Optional[str], tag: str = ""):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(
+        out_dir,
+        f"{record['arch']}_{record['shape']}_{record['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def _apply_profile(profile: str, shape_kind: str):
+    """baseline = paper-faithful; opt = all validated optimizations."""
+    if profile == "baseline":
+        flags.set_all(chunked_wkv=False, carry_cache=False, donate=False,
+                      gather_weights=False, uniform_decode=False)
+        return BF16
+    flags.set_all(chunked_wkv=True, carry_cache=True, donate=True,
+                  gather_weights=True, uniform_decode=False)
+    # fp8 KV cache for decode (H3 iter 4)
+    return jnp.float8_e4m3fn if shape_kind == "decode" else BF16
+
+
+def sweep(out_dir: str, *, meshes=("single", "multi"), archs=None,
+          shapes=None, skip_existing: bool = True, profile: str = "opt"):
+    archs = archs or list_archs()
+    shapes = shapes or list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                path = os.path.join(out_dir,
+                                    f"{arch}_{shape_name}_{mesh_name}.json")
+                if skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    if rec.get("status") in ("ok", "skipped"):
+                        results.append(rec)
+                        continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ...",
+                      flush=True)
+                cache_dtype = _apply_profile(
+                    profile, get_shape(shape_name).kind)
+                rec = run_one(arch, shape_name,
+                              multi_pod=(mesh_name == "multi"),
+                              cache_dtype=cache_dtype,
+                              out_dir=out_dir)
+                print(f"[dryrun]   -> {rec['status']} "
+                      f"({rec.get('total_s', 0)}s) "
+                      f"{rec.get('error', '')}", flush=True)
+                results.append(rec)
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] sweep done: {ok} ok, {sk} skipped, {err} errors")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--no-skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful baseline: all optimizations off")
+    ap.add_argument("--profile", default="opt", choices=["baseline", "opt"])
+    ap.add_argument("--gather-weights", action="store_true")
+    args = ap.parse_args()
+    if args.baseline:
+        flags.set_all(chunked_wkv=False, carry_cache=False, donate=False,
+                      gather_weights=False, uniform_decode=False)
+    # uniform_decode stays OFF: both lockstep-write variants REFUTED
+    # (GSPMD reshards traced-index writes on the model-sharded cache S dim;
+    # see EXPERIMENTS.md §Perf H3 iters 3a/3b)
+    if args.gather_weights:
+        flags.set_flag("gather_weights", True)
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.sweep:
+        archs = [args.arch] if args.arch else None
+        shapes = [args.shape] if args.shape else None
+        sweep(args.out, meshes=meshes, archs=archs, shapes=shapes,
+              skip_existing=not args.no_skip_existing,
+              profile="baseline" if args.baseline else args.profile)
+        return
+    assert args.arch and args.shape, "--arch/--shape required (or --sweep)"
+    for mesh_name in meshes:
+        rec = run_one(args.arch, args.shape, multi_pod=(mesh_name == "multi"),
+                      out_dir=args.out,
+                      num_microbatches=args.microbatches)
+        mem = rec.get("memory", {})
+        print(json.dumps({k: rec.get(k) for k in
+                          ("arch", "shape", "mesh", "status", "error",
+                           "compile_s")}, indent=1))
+        if rec["status"] == "ok":
+            print("  memory:", {k: f"{(v or 0)/2**30:.2f}GiB"
+                                for k, v in mem.items() if v})
+            print("  hlo flops:", f"{rec['hlo_cost']['flops']:.3e}",
+                  " wire bytes:", f"{rec['hlo_cost']['wire_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""Static HLO cost analysis with loop trip-count scaling.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each ``while`` body ONCE
+(verified empirically), which under-counts every scanned-layer model by a
+factor of ``num_layers`` (and microbatch loops, attention chunk loops...).
+This module parses the post-SPMD HLO text and:
+
+1. builds the computation call graph (while bodies/conditions, fusions,
+   calls, conditionals),
+2. extracts loop trip counts (largest integer constant in the loop's
+   condition computation — exact for lax.scan-lowered loops),
+3. computes, with multipliers,
+   - FLOPs  (dot/convolution contributions; elementwise excluded — matmul-
+     dominated transformer workloads),
+   - HBM bytes (operand + output bytes of top-level ops; fusion-internal
+     ops are excluded since their temps never hit HBM),
+   - per-collective wire bytes (standard ring formulas, per device):
+       all-reduce       2·B·(n-1)/n
+       all-gather       B_out·(n-1)/n
+       reduce-scatter   B_in·(n-1)/n
+       all-to-all       B·(n-1)/n
+       collective-permute  B
+
+All shapes in the post-SPMD module are PER-DEVICE shapes, so totals are
+per-device quantities — exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^)]*?\)?[\w\[\],\s]*?)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes whose operands/outputs never touch HBM as standalone buffers
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # while/call/conditional traffic is accounted inside their bodies;
+    # counting the carried tuple at the call site would bill the full
+    # loop state per iteration of the PARENT
+    "while", "call", "conditional",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attributes (raw tail of the line)
+    operand_names: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)   # op name -> type str
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.rstrip().endswith("{"):
+                cur = Computation(m.group(1),
+                                  is_entry=stripped.startswith("ENTRY"))
+                comps[cur.name] = cur
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        operands = re.findall(r"%([\w\.\-]+)", rest.split(")")[0])
+        op = Op(name, type_str.strip(), opcode, rest, operands)
+        cur.ops.append(op)
+        cur.defs[name] = op.type_str
+    return comps
+
+
+def _called_computations(op: Op) -> List[Tuple[str, str]]:
+    """Returns [(callee_name, kind)] where kind in {loop, fusion, call}."""
+    out = []
+    for attr, kind in (("body", "loop"), ("condition", "loop_cond"),
+                       ("calls", "fusion"), ("to_apply", "apply")):
+        for m in re.finditer(attr + r"=%?([\w\.\-]+)", op.rest):
+            out.append((m.group(1), kind))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.rest):
+        for nm in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+            out.append((nm, "call"))
+    if op.opcode == "call":
+        for m in re.finditer(r"to_apply=%?([\w\.\-]+)", op.rest):
+            pass  # already captured above
+    return out
+
+
+def _trip_count(cond: Computation, body: Computation) -> int:
+    """Largest integer constant in the loop condition (lax.scan bound)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> int:
+    out_dims = _shape_dims(op.type_str)
+    out_elems = math.prod(out_dims) if out_dims else 0
+    # contracting dim sizes from lhs operand shape
+    lhs_name = op.operand_names[0] if op.operand_names else None
+    lhs_type = comp.defs.get(lhs_name, "")
+    if not lhs_type:
+        m = re.search(r"\(\s*(\w+\[[\d,]*\])", op.rest)
+        lhs_type = m.group(1) if m else ""
+    lhs_dims = _shape_dims(lhs_type)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2 * out_elems * max(contract, 1)
+
+
+def _group_size(op: Op, default: int) -> int:
+    # iota format: replica_groups=[G,n]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.rest)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+def _traffic_bytes(op: Op, comp: Computation, comps: Dict[str, "Computation"],
+                   ) -> float:
+    """HBM traffic estimate for one op, respecting in-place slice semantics.
+
+    ``dynamic-slice`` reads only the slice; ``dynamic-update-slice`` into a
+    loop-carried buffer rewrites only the updated region (XLA performs these
+    in place). Billing the full carried buffer per iteration over-counted
+    RWKV train HBM by ~120x (see EXPERIMENTS.md §Roofline methodology).
+    Fusions whose root is a (dynamic-)update-slice are treated likewise:
+    the largest operand is assumed aliased in place.
+    """
+    oc = op.opcode
+    out_b = _shape_bytes(op.type_str)
+    if oc == "dynamic-slice":
+        return 2.0 * out_b                      # read slice + write copy
+    if oc == "dynamic-update-slice":
+        ops_b = [_shape_bytes(comp.defs.get(nm, "")) for nm in
+                 op.operand_names]
+        upd = ops_b[1] if len(ops_b) > 1 else 0
+        return 2.0 * upd
+    if oc == "fusion":
+        return _fusion_traffic(op, comp, comps)
+    return _operand_bytes(op, comp) + out_b
+
+
+def _fusion_traffic(op: Op, comp: Computation,
+                    comps: Dict[str, "Computation"]) -> float:
+    """Introspect the fused computation: parameters consumed only through
+    ``dynamic-slice`` bill the slice (xs streams in while loops); a
+    ``dynamic-update-slice`` root writes only the update region and aliases
+    its big operand in place."""
+    out_b = _shape_bytes(op.type_str)
+    m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+    callee = comps.get(m.group(1)) if m else None
+    if callee is None:
+        return _operand_bytes(op, comp) + out_b
+    total = 0.0
+    for p in callee.ops:
+        if p.opcode != "parameter":
+            continue
+        consumers = [o for o in callee.ops if p.name in o.operand_names]
+        if consumers and all(o.opcode == "dynamic-slice" for o in consumers):
+            total += sum(_shape_bytes(o.type_str) for o in consumers)
+        else:
+            total += _shape_bytes(p.type_str)
+    root = callee.ops[-1] if callee.ops else None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        big = _shape_bytes(callee.defs.get(root.operand_names[0], "")) \
+            if root.operand_names else 0
+        upd = _shape_bytes(callee.defs.get(root.operand_names[1], "")) \
+            if len(root.operand_names) > 1 else out_b
+        total = max(total - big, 0.0) + upd
+        out_b = upd
+    return total + out_b
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    total = 0
+    for nm in op.operand_names:
+        t = comp.defs.get(nm)
+        if t:
+            total += _shape_bytes(t)
+    if total == 0:
+        # fall back: inline types in the operand list
+        total = _shape_bytes(op.rest.split(")")[0])
+    return total
+
+
+def _wire_bytes(op: Op, comp: Computation, n_devices: int) -> float:
+    n = max(_group_size(op, n_devices), 1)
+    out_b = _shape_bytes(op.type_str)
+    in_b = _operand_bytes(op, comp)
+    frac = (n - 1) / n if n > 1 else 0.0
+    if op.opcode.startswith("all-reduce"):
+        return 2.0 * out_b * frac
+    if op.opcode.startswith("all-gather"):
+        return out_b * frac
+    if op.opcode.startswith("reduce-scatter"):
+        return in_b * frac
+    if op.opcode.startswith("all-to-all"):
+        return out_b * frac
+    if op.opcode.startswith("collective-permute"):
+        return float(out_b)
+    return 0.0
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    loop_trips: Dict[str, int] = field(default_factory=dict)
+
+    def to_json(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "collective_counts": self.collective_counts,
+            "collective_bytes": self.collective_bytes,
+            "loop_trips": self.loop_trips,
+        }
+
+
+def analyze(text: str, n_devices: int) -> HLOCost:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # multipliers: full (HBM+flops+wire) and flops-only (fusion internals)
+    mult_full: Dict[str, float] = defaultdict(float)
+    mult_flops: Dict[str, float] = defaultdict(float)
+    mult_full[entry.name] = 1.0
+
+    cost = HLOCost()
+
+    # BFS through the call graph computing multipliers
+    order = [entry.name]
+    seen = {entry.name}
+    idx = 0
+    while idx < len(order):
+        cname = order[idx]
+        idx += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        base_full = mult_full[cname]
+        base_flops = mult_flops[cname] + base_full
+        for op in comp.ops:
+            for callee, kind in _called_computations(op):
+                if callee not in comps:
+                    continue
+                if kind == "loop":
+                    # authoritative: XLA's known_trip_count backend config
+                    trips = None
+                    m = re.search(
+                        r'known_trip_count[\\"\s:{]+n[\\"\s:]+(\d+)', op.rest)
+                    if m:
+                        trips = int(m.group(1))
+                    if trips is None:
+                        cond_name = None
+                        m = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                        if m:
+                            cond_name = m.group(1)
+                        trips = 1
+                        if cond_name and cond_name in comps:
+                            trips = _trip_count(comps[cond_name], comps[callee])
+                    cost.loop_trips[callee] = trips
+                    mult_full[callee] += base_flops * trips
+                elif kind == "loop_cond":
+                    pass  # condition bodies are negligible
+                elif kind == "fusion":
+                    mult_flops[callee] += base_flops
+                elif kind in ("call", "apply"):
+                    mult_full[callee] += base_flops
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # second pass: accumulate costs
+    for cname in order:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        mf = mult_full[cname]
+        mfl = mult_full[cname] + mult_flops[cname]
+        if mf == 0 and mfl == 0:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                cost.flops += _dot_flops(op, comp) * mfl
+            if mf > 0 and op.opcode not in _NO_TRAFFIC:
+                cost.hbm_bytes += _traffic_bytes(op, comp, comps) * mf
+            if any(op.opcode.startswith(c) for c in COLLECTIVES):
+                wb = _wire_bytes(op, comp, n_devices) * max(mf, mfl)
+                cost.wire_bytes += wb
+                key = op.opcode.split(".")[0]
+                cost.collective_counts[key] = (
+                    cost.collective_counts.get(key, 0) + int(max(mf, mfl)))
+                cost.collective_bytes[key] = (
+                    cost.collective_bytes.get(key, 0.0) + wb)
+    return cost

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) pair.
+
+``input_specs(cfg, shape)`` returns (kind, kwargs) where kwargs are pytrees
+of ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable, zero allocation.
+Decode shapes produce the ``serve_step`` signature (one token vs a
+``seq_len`` cache); train/prefill produce batch dicts.
+
+Modality frontends are stubs per the assignment: audio supplies
+``frames [B, 1500, d]``, VLM supplies ``image_embeds [B, 256, d]``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import build_model
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    batch = {
+        "tokens": sds((B, S), I32),
+        "targets": sds((B, S), I32),
+        "loss_mask": sds((B, S), F32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), BF16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    batch = {"tokens": sds((B, S), I32)}
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), BF16)
+    return batch
+
+
+def params_specs(cfg: ModelConfig, param_dtype=BF16):
+    model = build_model(cfg, param_dtype=param_dtype)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int, cache_dtype=BF16):
+    model = build_model(cfg, cache_dtype=cache_dtype)
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                param_dtype=BF16) -> Tuple[str, Dict[str, Any]]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return "train", {"batch": train_batch_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        return "prefill", {"batch": prefill_batch_specs(cfg, B, S)}
+    if shape.kind == "decode":
+        return "decode", {
+            "cache": cache_specs(cfg, B, S),
+            "tokens": sds((B,), I32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state — meshes are built by
+functions only (the dry-run forces 512 host devices via XLA_FLAGS before
+any jax import; tests and benches see the real single device).
+
+Topology (TPU v5e): one pod = 256 chips as a 16x16 mesh
+``("data", "model")``; two pods add a leading ``pod`` axis
+``(2, 16, 16) = ("pod", "data", "model")``. The ``pod`` axis carries only
+data parallelism (per-pod gradient all-reduce crosses the inter-pod links
+once per step), composing with ``data`` via the logical ``batch``/``fsdp``
+rules.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+# v5e hardware constants (roofline):
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+HBM_PER_CHIP = 16 * 2**30         # 16 GiB
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py (forces 512 host devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
+    """Small mesh for subprocess sharding tests (8 forced host devices)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def num_chips(mesh: Mesh) -> int:
+    return mesh.devices.size

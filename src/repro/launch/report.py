@@ -1,0 +1,286 @@
+"""Assemble EXPERIMENTS.md from dry-run records + the §Perf iteration log.
+
+    PYTHONPATH=src python -m repro.launch.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import fmt_s, load_rows, to_markdown
+
+HEADER = """# EXPERIMENTS — MAX (CIKM'19) as a multi-pod JAX framework
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM per chip. Meshes: single pod (16, 16) = ("data", "model");
+multi-pod (2, 16, 16) = ("pod", "data", "model"). All numbers are derived
+from AOT `.lower().compile()` artifacts on 512 forced host devices — no TPU
+in the container (see §Methodology).
+
+## §Validation vs the paper's own claims
+
+The paper is a demo/system paper with no quantitative tables; its claims are
+architectural, and each is validated by a test or benchmark:
+
+| Paper claim | Where validated |
+|---|---|
+| Wrap any model behind `_pre_process/_predict/_post_process` | tests/test_core_wrapper.py (hook chain); examples/add_model.py wraps a non-LLM |
+| Standardized JSON envelope `{"status": "ok", "predictions": [...]}` (Fig. 3) | test_core_wrapper.py::test_sentiment_envelope_matches_paper_fig3 — byte-for-byte shape |
+| Swap the underlying model with zero client change | test_api_http.py::test_model_swap_zero_client_change — one client fn, 4 architecture families |
+| RESTful endpoints + auto Swagger per model | test_api_http.py (metadata/labels/predict/swagger round-trips over real HTTP) |
+| Registry of wrapped assets (30+ in the paper) | 12+ assets incl. all 10 assigned archs; test_core_wrapper.py |
+| Container isolation per model | core/deployment.py (program/arena/mesh-slice isolation); fault isolation tested via bad-input requests |
+| MAX-Skeleton add-a-model flow | core/skeleton.py + examples/add_model.py + test_skeleton_flow |
+| Wrapper adds negligible overhead | benchmarks: fig3_wrapper_* (envelope vs raw jit call) |
+
+## §Dry-run
+
+Every (architecture x input-shape x mesh) combination lowers AND compiles
+for the production meshes: **80 combinations = 10 archs x 4 shapes x
+{single pod 256 chips, 2 pods 512 chips}**, of which 12 are *recorded
+skips* (`long_500k` on the 6 pure-full-attention/enc-dec archs — see
+DESIGN.md §Arch-applicability) and the rest compile successfully.
+
+Two full sweeps are recorded:
+
+- `experiments/dryrun_baseline/` — paper-faithful baseline (all §Perf
+  optimizations off),
+- `experiments/dryrun_opt/` — optimized configuration (chunked WKV,
+  carry-cache decode, buffer donation, weight-gather FSDP, fp8 KV cache
+  for decode).
+
+Per-record JSON: memory analysis (argument/output/temp/alias bytes per
+device), XLA cost analysis, trip-count-scaled HLO cost model
+(FLOPs / HBM bytes / per-collective wire bytes), sharding fallbacks, and
+microbatch/moment-dtype choices.
+
+### Methodology notes
+
+1. **Loop scaling.** `compiled.cost_analysis()` visits `while` bodies once
+   (verified: a 10-iteration scan reports 1x flops). Our analyzer
+   (launch/hlo_analysis.py) parses the post-SPMD HLO, reads XLA's
+   `known_trip_count` backend config, and scales body costs through the
+   call graph. Validated on closed-form programs (tests/test_hlo_analysis.py)
+   and against MODEL_FLOPS (llama3-405b train: HLO/analytic = 1.29, i.e.
+   the remat recompute overhead — 8/6 ~ 1.33 expected).
+2. **HBM traffic.** Post-fusion operand+output bytes, with in-place
+   semantics for dynamic-slice / dynamic-update-slice (incl. fusion
+   introspection: fusion parameters consumed only via dynamic-slice bill
+   the slice). Without this the sequential-scan archs over-count by >100x.
+3. **Wire bytes.** Ring formulas per collective from per-device HLO shapes
+   and `replica_groups`: all-reduce 2B(n-1)/n, all-gather/reduce-scatter/
+   all-to-all B(n-1)/n, collective-permute B.
+4. **CPU-pipeline caveats.** XLA:CPU's SPMD pipeline (a) never forms
+   reduce-scatters — gradient partial sums lower as full all-reduces, and
+   (b) does not sink dtype converts below collectives. Both inflate the
+   collective term of train shapes vs a real TPU lowering; §Perf H2
+   quantifies the gap analytically.
+
+## §Roofline
+"""
+
+PERF = r"""
+## §Perf — hypothesis -> change -> measure -> validate
+
+Three pairs hillclimbed (selection per assignment): **rwkv6-7b train_4k**
+(worst roofline fraction), **llama3-405b train_4k** (most collective-bound),
+**llama3-405b decode_32k** (most representative of the paper's serving
+technique). All numbers: single-pod mesh, per-chip terms in seconds.
+
+### H1 — rwkv6-7b train_4k (memory term 105,623 s at baseline*)
+
+*Baseline measured with the pre-fix traffic model; re-measured baseline
+under the final analyzer: see the baseline table. The catastrophic term was
+real either way: the per-token WKV scan round-trips the [B,H,64,64] f32
+state through HBM 4096 times per layer.
+
+| iter | hypothesis | change | before -> after (mem term) | verdict |
+|---|---|---|---|---|
+| 1 | per-token state HBM traffic dominates; carrying state per *chunk* cuts it by the chunk length | chunked WKV, relative-decay D-tensor form (chunk 32) | 105,623 s -> 2,134 s | **confirmed** (49x) but still memory-bound: the 5-D decay tensor materializes |
+| 2 | factorizing the intra-chunk interaction into two MXU matmuls removes the 5-D tensor; a decay clamp (d <= 1.5) bounds `exp(-logW)` so the factorization is f32-safe | `_wkv_chunked` factorized (chunk 16) + `DECAY_CLAMP` | 2,134 s -> 836 s | **confirmed** direction; remaining traffic traced to the *analyzer* billing full carried buffers per iteration |
+| 3 | the traffic model, not the program, bills in-place loop slices as full-buffer traffic | analyzer: in-place semantics for DS/DUS + fusion introspection | 836 s -> 27.7 s | **confirmed** — and exposed the true profile: rwkv6 train is now *collective*-bound (60.5 s, FSDP all-reduces -> fixed by H2's weight-gather, shared fix) |
+
+Chunked == sequential to 2.6e-5 (tests/test_recurrent.py + direct check);
+the Pallas WKV kernel achieves the same state-locality on TPU by carrying
+S in VMEM scratch (kernels/rwkv6.py).
+
+### H2 — llama3-405b train_4k (collective term 2,988 s at baseline)
+
+Napkin: 6ND/chip = 9.97e15 flops -> compute 50 s (65 s with remat).
+Megatron-SP collective floor ~ 4x activations/layer ~ 3.2e12 B -> ~65 s.
+Baseline wire = 1.49e14 B = 2,988 s — 45x over the floor.
+
+| iter | hypothesis | change | before -> after (wire) | verdict |
+|---|---|---|---|---|
+| 1 | GSPMD partial-sums fsdp-sharded contractions and all-reduces activations; gathering weights per layer (ZeRO-3 schedule) is 40x cheaper | `maybe_gather_params` at layer-body top (fwd + remat'd bwd) | 2,988 s -> 2,229 s | **partially confirmed** (all-reduce 8.3e13 -> 4.7e13); all-gather unchanged — dominated by f32 *weight* gathers in the backward pass, not activations. **Corollary finding:** blindly gathering MoE *expert* weights destroys the expert-parallel schedule (qwen3-moe train compute 5.2 s -> 49.5 s, useful ratio 0.06) — expert leaves are excluded from the gather (sharding/specs.py) |
+| 2 | my forced q/k/v head-sharding annotations add a resharding boundary; dropping them under the gather schedule removes gathers | conditional annotate | 2,229 s -> 2,453 s | **refuted** — propagation chose worse shardings; reverted |
+| 3 | the f32 full-weight all-reduce tuple is the *gradient* reduction: unannotated f32 grad accumulators got replicated by the solver | `shard_like_params` on accumulators | no change | **refuted on this backend** — inspection shows XLA:CPU satisfies the constraint by slicing *after* a full all-reduce; it never forms reduce-scatters. Kept (correct + required for TPU, where SPMD emits reduce-scatter directly) |
+| 4 | bf16 gradient accumulation halves grad-collective bytes | `accum_dtype=bf16` for >=60B params (+ cast-at-source variant) | wire unchanged; live memory 55.7 -> 52.2 GiB | **refuted for wire** (convert not sunk below the all-reduce on CPU pipeline); **confirmed for memory**; kept |
+
+**Finding:** on a TPU lowering (reduce-scatter formation + bf16 backward
+weight gathers), the same HLO's collective term is analytically
+~(6.4e13/2 [bf16 gathers] + 4.7e13/16 [reduce-scatter]) / 50 GB/s ~ 700 s,
+and the grad reduction overlaps the microbatch loop — the structural fixes
+land here (weight-gather schedule + sharded accumulators), the remaining
+gap is backend, not model. Memory: llama3-405b train does NOT fit a single
+v5e-256 pod (52 GiB/chip live; weights+moments alone are 9.6 GiB before
+activations) — it fits the 2-pod mesh at ~26 GiB only with further
+microbatching; the honest conclusion is 405B-train wants >= 4 pods or a
+sharded-optimizer regime beyond this repo's scope.
+
+### H3 — llama3-405b decode_32k (the paper's serving case; did not fit: 42.6 GiB/chip)
+
+| iter | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| 1 | no donation: cache counted in args AND outputs | `donate_argnums` on cache (and train state) | live 42.6 -> 37.0 GiB | **confirmed** (args halved) — exposed 25.8 GiB temps: the layer scan double-buffers the cache as xs->ys streams |
+| 2 | carrying the cache through the scan (in-place DUS) removes the second stack | carry-cache decode | temps 25.8 -> 7.7 GiB; live -> 19.0 GiB; mem term 4.35 s | **confirmed** |
+| 3a | per-batch scatter writes defeat in-place updates; lockstep (scalar-index) writes lower cleaner | uniform-decode DUS (two-level) | mem 4.35 -> 8.15 s | **refuted** — GSPMD reshards traced-index writes on the model-sharded cache S dim |
+| 3b | a single-level DUS straight into the [L,B,S,KV,hd] carry avoids the slice write-back | single DUS | mem -> 12.0 s | **refuted** — worse; per-batch scatter was already optimal under sequence sharding. Both variants kept behind `uniform_decode` flag as negative results |
+| 4 | fp8 KV cache halves cache bytes end-to-end (vLLM-style; attention upcasts on read) | `cache_dtype=float8_e4m3fn` | mem 4.35 -> 2.34 s; live 19.0 -> **15.1 GiB — FITS** | **confirmed**; drift vs bf16 cache 4.9e-2 on random-weight logits (tests) |
+
+Stopping rule hit for all three pairs (3 consecutive <5% or refuted
+iterations on the dominant term).
+
+Prefill rows show 1.00x baseline->optimized by design: per the assignment,
+the non-hillclimbed pairs are reported baseline-only. Their dominant memory
+terms come from the pure-jnp query-chunked attention materializing f32
+score blocks — precisely the traffic the Pallas flash kernel
+(kernels/flash_attention.py) keeps in VMEM on the real TPU target; the
+kernel is validated bit-for-bit in interpret mode but cannot lower in the
+CPU dry-run, so its effect is not visible in these tables.
+
+### Beyond-paper summary
+
+The paper contributes no performance mechanism — its wrapper/registry/REST
+layer is reproduced faithfully and validated above. Everything in §Perf is
+beyond-paper engineering: chunked WKV, ZeRO-3-style weight gathering,
+sharded grad accumulators, donation + carry-cache decode, fp8 KV cache,
+sequence-parallel residual activations, and context-parallel (sequence-
+shardable) decode attention — plus 5 Pallas TPU kernels for the hot spots.
+"""
+
+
+def build(out_path="EXPERIMENTS.md"):
+    parts = [HEADER]
+
+    for profile, d in (("baseline", "experiments/dryrun_baseline"),
+                       ("optimized", "experiments/dryrun_opt")):
+        if not os.path.isdir(d) or not glob.glob(os.path.join(d, "*.json")):
+            continue
+        rows = load_rows(d, "single")
+        n_ok = sum(r.status == "ok" for r in rows)
+        n_skip = sum(r.status == "skipped" for r in rows)
+        parts.append(f"\n### Single-pod roofline — {profile} "
+                     f"({n_ok} ok, {n_skip} recorded skips)\n\n")
+        parts.append(to_markdown(rows))
+        rows_m = load_rows(d, "multi")
+        ok_m = sum(r.status == "ok" for r in rows_m)
+        sk_m = sum(r.status == "skipped" for r in rows_m)
+        er_m = [r for r in rows_m if r.status == "error"]
+        parts.append(f"\nMulti-pod (512-chip) {profile}: {ok_m} compile ok, "
+                     f"{sk_m} recorded skips, {len(er_m)} errors"
+                     + (": " + "; ".join(f"{r.arch}/{r.shape}" for r in er_m)
+                        if er_m else "") + ".\n")
+
+    # multi-pod scaling: pod-axis overhead on the optimized sweep
+    odir = "experiments/dryrun_opt"
+    if os.path.isdir(odir):
+        single = {(r.arch, r.shape): r for r in load_rows(odir, "single")
+                  if r.status == "ok"}
+        multi = {(r.arch, r.shape): r for r in load_rows(odir, "multi")
+                 if r.status == "ok"}
+        parts.append(
+            "\n### Multi-pod scaling (optimized; 256 -> 512 chips)\n\n"
+            "Per-chip terms should halve under perfect weak scaling of the "
+            "data axis; the collective delta is the pod-axis (DCN-crossing "
+            "gradient all-reduce) overhead.\n\n"
+            "| arch | shape | compute 1p->2p | memory 1p->2p | "
+            "collective 1p->2p | HBM/chip 1p->2p |\n|---|---|---|---|---|---|\n")
+        for key in sorted(single):
+            if key not in multi:
+                continue
+            s, m = single[key], multi[key]
+            if key[1] not in ("train_4k", "decode_32k"):
+                continue
+            parts.append(
+                f"| {key[0]} | {key[1]} | {fmt_s(s.compute_s)}->"
+                f"{fmt_s(m.compute_s)} | {fmt_s(s.memory_s)}->"
+                f"{fmt_s(m.memory_s)} | {fmt_s(s.collective_s)}->"
+                f"{fmt_s(m.collective_s)} | {s.hbm_gib_per_chip:.1f}->"
+                f"{m.hbm_gib_per_chip:.1f}GiB |\n")
+
+        parts.append(
+            "\nFindings: dense/SSM/hybrid archs weak-scale cleanly "
+            "(compute & memory halve; collectives halve for train since "
+            "the data axis doubles). Two regressions are real and "
+            "structural: (i) **MoE train/decode degrade cross-pod** "
+            "(qwen3-moe train collective 942 -> 1294 s, HBM/chip 38 -> 66 "
+            "GiB) — expert-parallel all-to-alls and expert weights do not "
+            "shard over the pod axis, so doubling pods duplicates expert "
+            "state and adds DCN-crossing dispatch; an expert-x-pod sharding "
+            "rule is the obvious next lever. (ii) **llama3-405b train "
+            "HBM/chip rises 52 -> 73 GiB**: the microbatch heuristic halves "
+            "num_microbatches on 2 pods (data axis 32), doubling per-micro "
+            "activation carries — fixed by pinning tokens-per-microbatch "
+            "instead of microbatch count.\n")
+
+    # baseline -> optimized improvement summary
+    bdir, odir = "experiments/dryrun_baseline", "experiments/dryrun_opt"
+    if os.path.isdir(bdir) and os.path.isdir(odir):
+        base = {(r.arch, r.shape): r for r in load_rows(bdir, "single")
+                if r.status == "ok"}
+        opt = {(r.arch, r.shape): r for r in load_rows(odir, "single")
+               if r.status == "ok"}
+        rows = []
+        for key in sorted(base):
+            if key not in opt:
+                continue
+            b, o = base[key], opt[key]
+            if b.step_s <= 0:
+                continue
+            gain = b.step_s / max(o.step_s, 1e-12)
+            rows.append((gain, key, b, o))
+        rows.sort(reverse=True)
+        parts.append(
+            "\n### Baseline -> optimized (single pod, dominant-term "
+            "step bound)\n\n"
+            "| arch | shape | baseline bound | optimized bound | x | "
+            "fits b->o |\n|---|---|---|---|---|---|\n")
+        for gain, (arch, shape), b, o in rows:
+            parts.append(
+                f"| {arch} | {shape} | {fmt_s(b.step_s)} | {fmt_s(o.step_s)} "
+                f"| {gain:.2f}x | {'y' if b.fits else 'N'}->"
+                f"{'y' if o.fits else 'N'} |\n")
+        n_fit_b = sum(1 for *_, b, o in rows if b.fits)
+        n_fit_o = sum(1 for *_, b, o in rows if o.fits)
+        parts.append(f"\nPairs fitting 16 GiB/chip: baseline {n_fit_b}"
+                     f"/{len(rows)} -> optimized {n_fit_o}/{len(rows)}.\n")
+
+    parts.append(PERF)
+
+    # perf-iteration raw records
+    tagged = sorted(glob.glob("experiments/perf/*.json"))
+    if tagged:
+        parts.append("\n### §Perf raw iteration records\n\n"
+                     "| record | status | mem term | wire term | note |\n"
+                     "|---|---|---|---|---|\n")
+        for path in tagged:
+            rec = json.load(open(path))
+            if rec.get("status") != "ok":
+                continue
+            hc = rec.get("hlo_cost", {})
+            parts.append(
+                f"| {os.path.basename(path)} | {rec['status']} "
+                f"| {fmt_s(hc.get('hbm_bytes', 0) / 819e9)} "
+                f"| {fmt_s(hc.get('wire_bytes', 0) / 50e9)} "
+                f"| {rec.get('tag', '')} |\n")
+
+    with open(out_path, "w") as f:
+        f.write("".join(parts))
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    build()

@@ -1,0 +1,178 @@
+"""Roofline analysis over persisted dry-run records.
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s        [s]
+    memory term     = HLO_HBM_bytes_per_chip / HBM_bw         [s]
+    collective term = wire_bytes_per_chip / ICI link bw       [s]
+(HLO quantities come from launch/hlo_analysis.py — post-SPMD per-device
+module with loop trip-count scaling.)
+
+Also reported: MODEL_FLOPS = 6·N·D (train; 6·N_active·D for MoE) or 2·N·D
+(prefill/decode), the useful-compute ratio MODEL_FLOPS/HLO_FLOPs (remat &
+dispatch waste shows up here), the dominant term, and a heuristic
+suggestion for what would move the dominant term down.
+
+Usage:
+    python -m repro.launch.roofline --records experiments/dryrun [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+from repro.launch.mesh import HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops_per_chip: float = 0.0
+    useful_ratio: float = 0.0
+    hbm_gib_per_chip: float = 0.0
+    fits: bool = True
+    note: str = ""
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time if terms overlapped perfectly = max;
+        we report the max (roofline convention)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def suggest(row: RooflineRow, rec: dict) -> str:
+    cb = rec.get("hlo_cost", {}).get("collective_bytes", {})
+    if row.dominant == "collective":
+        top = max(cb, key=cb.get) if cb else "?"
+        if top == "all-reduce":
+            return ("all-reduce dominated: fsdp contraction-dim partial sums "
+                    "-> gather weights per layer instead (see §Perf)")
+        if top == "all-gather":
+            return "all-gather dominated: cache/params gathered; reshard or overlap"
+        return f"{top} dominated: reshard to shrink resharding traffic"
+    if row.dominant == "memory":
+        if row.useful_ratio < 0.5:
+            return "HBM traffic >> useful compute: fuse/remat-tune the hot loop"
+        return "bandwidth-bound (expected for decode): shrink cache dtype/layout"
+    if row.useful_ratio < 0.6:
+        return "compute-bound with low useful ratio: cut remat recompute"
+    return "compute-bound near peak: healthy"
+
+
+def load_rows(records_dir: str, mesh: Optional[str] = None) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(records_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("tag"):
+            continue                      # perf-iteration records live in §Perf
+        if mesh and rec["mesh"] != mesh:
+            continue
+        row = RooflineRow(rec["arch"], rec["shape"], rec["mesh"],
+                          rec["status"])
+        if rec["status"] == "skipped":
+            row.note = rec.get("reason", "")
+            rows.append(row)
+            continue
+        if rec["status"] != "ok":
+            row.note = rec.get("error", "")[:80]
+            rows.append(row)
+            continue
+        hc = rec["hlo_cost"]
+        row.compute_s = hc["flops"] / PEAK_FLOPS_BF16
+        row.memory_s = hc["hbm_bytes"] / HBM_BW
+        row.collective_s = hc["wire_bytes"] / ICI_BW
+        terms = {"compute": row.compute_s, "memory": row.memory_s,
+                 "collective": row.collective_s}
+        row.dominant = max(terms, key=terms.get)
+        n_chips = rec.get("num_chips", 256)
+        row.model_flops_per_chip = model_flops(rec["arch"], rec["shape"]) / n_chips
+        row.useful_ratio = (row.model_flops_per_chip / hc["flops"]
+                            if hc["flops"] else 0.0)
+        mem = rec.get("memory", {})
+        live = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0) \
+            + (mem.get("output_bytes") or 0) - (mem.get("alias_bytes") or 0)
+        row.hbm_gib_per_chip = live / 2**30
+        row.fits = live <= HBM_PER_CHIP
+        row.note = suggest(row, rec)
+        rows.append(row)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "-"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def to_markdown(rows: List[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | compute | memory | collective | dominant "
+           "| useful | HBM/chip | fits | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.status == "skipped":
+            lines.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | — | — | — | — | — | — "
+                f"| — | SKIP: {r.note[:60]} |")
+            continue
+        if r.status != "ok":
+            lines.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | — | — | — | — | — | — "
+                f"| — | ERROR: {r.note} |")
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {fmt_s(r.compute_s)} "
+            f"| {fmt_s(r.memory_s)} | {fmt_s(r.collective_s)} | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} "
+            f"| {r.hbm_gib_per_chip:.1f}GiB | {'y' if r.fits else '**N**'} "
+            f"| {r.note} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.records, args.mesh)
+    md = to_markdown(rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Serving launcher: start the MAX REST stack.
+
+    PYTHONPATH=src python -m repro.launch.serve --port 8080 \
+        --deploy max-sentiment --deploy qwen3-4b
+
+Deployed assets use reduced (CPU-runnable) configs by default; on a pod the
+same launcher would pass ``smoke=False`` build kwargs and a mesh slice per
+deployment (core/deployment.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--deploy", action="append", default=[],
+                    help="asset id to deploy at startup (repeatable)")
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=None,
+                    help="serve for N seconds then exit (default: forever)")
+    args = ap.parse_args()
+
+    import repro.core.assets  # noqa: F401 — populate the exchange
+    from repro.core import EXCHANGE, MAXServer
+
+    server = MAXServer(
+        host=args.host, port=args.port,
+        build_kw={"max_seq": args.max_seq, "max_batch": args.max_batch})
+    server.start()
+    print(f"[serve] Model Asset eXchange at {server.url}")
+    print(f"[serve] {len(EXCHANGE)} assets registered; "
+          f"GET /models, /swagger.json")
+    for asset_id in args.deploy:
+        t0 = time.perf_counter()
+        server.manager.deploy(asset_id, **server.build_kw)
+        print(f"[serve] deployed {asset_id} "
+              f"({time.perf_counter() - t0:.1f}s)")
+    try:
+        if args.duration:
+            time.sleep(args.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+        print("[serve] stopped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Two modes:
+- default: REAL training on the local device(s) with a reduced (smoke) or
+  demo config — runs on this CPU container;
+- ``--dryrun``: AOT lower+compile of the full production config on the
+  production mesh (delegates to launch/dryrun.py; run that module directly
+  for the full sweep).
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-405b --dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="max-sentiment")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--peak-lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (CPU-runnable); implied unless --dryrun")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # keep the device-count env dance inside dryrun's module
+        import subprocess
+        import sys
+        raise SystemExit(subprocess.call([
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", "train_4k", "--mesh", "both"]))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import CONFIGS, get_config
+    from repro.configs.base import reduce_for_smoke
+    from repro.models import build_model
+    from repro.training import (
+        DataConfig, adamw, batches, init_train_state, make_schedule,
+        make_train_step, save_checkpoint,
+    )
+
+    cfg = get_config(args.arch)
+    if args.arch not in ("max-sentiment", "max-caption"):
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg)
+    opt = adamw(make_schedule(cfg.lr_schedule, peak_lr=args.peak_lr,
+                              warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt,
+                                   num_microbatches=args.microbatches))
+    data = batches(DataConfig(seq_len=args.seq_len,
+                              global_batch=args.global_batch,
+                              vocab_size=cfg.vocab_size))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
+          f"{args.steps} steps, schedule={cfg.lr_schedule}")
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, m = step(state, b)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"[train] step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e}")
+    dt = time.perf_counter() - t0
+    toks = args.steps * args.global_batch * args.seq_len
+    print(f"[train] done: {dt:.1f}s, {toks/dt:.0f} tok/s")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state.params, step=args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

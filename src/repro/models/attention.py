@@ -1,0 +1,191 @@
+"""Attention compute paths (pure jnp; Pallas kernels mirror these on TPU).
+
+Three paths:
+
+- ``blockwise_attention`` — train/prefill. Exact softmax, but the query dim
+  is processed in chunks with ``lax.map`` so the S×S score matrix is never
+  materialised (XLA temp is ``[B, H, chunk, Skv]``). Supports causal,
+  sliding-window (banded) and bidirectional masks, plus GQA grouping.
+- ``decode_attention`` — one query token against a (possibly ring-buffered)
+  KV cache with per-sequence lengths. Written so the cache sequence dim can
+  be sharded over the ``model`` mesh axis: every reduction over the cache
+  S dim is a plain max/sum, which GSPMD turns into the flash-style
+  partial-softmax combine (small all-reduces) automatically.
+- ``attention_scores_all`` is intentionally absent: nothing in the system
+  may build the full S×S matrix.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _soft_cap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def blockwise_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_positions=None,
+    kv_positions=None,
+    chunk: int = 512,
+    logit_cap: Optional[float] = None,
+):
+    """Exact attention, query-chunked.
+
+    q [B, Sq, H, hd]; k, v [B, Skv, KV, hd] with H = KV * G.
+    q_positions/kv_positions [B, S*] override the default arange (used when
+    the query block sits at an offset, e.g. prefill continuation).
+    Returns [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    # Pallas hot path (TPU / interpret tests): contiguous-position blocks
+    # with no explicit position arrays dispatch to the flash kernel.
+    from repro.kernels import ops as _kops
+    if (_kops.get_backend() != "ref" and q_positions is None
+            and kv_positions is None and logit_cap is None):
+        out = _kops.flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=causal, window=window)
+        return jnp.swapaxes(out, 1, 2)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                              constant_values=-1)  # -1 masks everything out
+    nc = q.shape[1] // chunk
+
+    qg = q.reshape(B, nc, chunk, KV, G, hd)
+    qp = q_positions.reshape(B, nc, chunk)
+    # [nc, B, chunk, KV, G, hd] so lax.map iterates over chunks
+    qg = jnp.moveaxis(qg, 1, 0)
+    qp = jnp.moveaxis(qp, 1, 0)
+
+    def one_chunk(args):
+        qc, qpos = args                            # [B,chunk,KV,G,hd], [B,chunk]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, k,
+                       preferred_element_type=F32) * scale
+        s = _soft_cap(s, logit_cap)
+        valid = qpos[:, None, None, :, None] >= 0
+        if causal:
+            valid &= qpos[:, None, None, :, None] >= kv_positions[:, None, None, None, :]
+        if window is not None:
+            valid &= (qpos[:, None, None, :, None] - kv_positions[:, None, None, None, :]) < window
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=F32)
+        return o.astype(v.dtype)
+
+    out = jax.lax.map(one_chunk, (qg, qp))         # [nc, B, chunk, KV, G, hd]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nc * chunk, H, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q, k_cache, v_cache, *,
+    lengths,
+    kv_positions=None,
+    logit_cap: Optional[float] = None,
+):
+    """One-token attention against a cache.
+
+    q [B, H, hd]; k_cache, v_cache [B, S, KV, hd]; lengths [B] = number of
+    valid cache entries. For ring-buffered (sliding-window) caches pass
+    ``kv_positions`` [B, S] = absolute position stored in each slot (slots
+    beyond the window carry -1 == invalid); for linear caches the default
+    arange-vs-length mask applies.
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    from repro.kernels import ops as _kops
+    if (_kops.get_backend() != "ref" and kv_positions is None
+            and logit_cap is None):
+        return _kops.decode_attention(q, k_cache, v_cache, lengths)
+
+    qg = q.reshape(B, KV, G, hd)
+    # caches may be stored in a reduced dtype (bf16 / fp8 — §Perf H3 iter 4);
+    # compute always upcasts to the query dtype
+    kc = k_cache.astype(q.dtype)
+    vc = v_cache.astype(q.dtype)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, kc,
+                   preferred_element_type=F32) * scale
+    s = _soft_cap(s, logit_cap)
+    if kv_positions is None:
+        valid = jnp.arange(S)[None, :] < lengths[:, None]          # [B, S]
+    else:
+        valid = kv_positions >= 0
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(q.dtype), vc,
+                   preferred_element_type=F32)
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache write helpers
+# ---------------------------------------------------------------------------
+
+def cache_write(k_cache, v_cache, k_new, v_new, lengths, *, ring: bool = False):
+    """Write one token per sequence at its current length.
+
+    k_new/v_new [B, KV, hd]; lengths [B]. ``ring=True`` wraps the write index
+    modulo the cache size (sliding-window ring buffer).
+
+    With the ``uniform_decode`` flag on (dry-run / pod serving where a batch
+    decodes in lockstep), the write is a single scalar-index
+    dynamic_update_slice — which XLA updates in place through loop carries —
+    instead of a per-sequence scatter that forces a full-cache masked
+    rewrite (§Perf H3 iter 3). The engine's continuous batching path keeps
+    per-sequence scatter semantics.
+    Returns updated (k_cache, v_cache).
+    """
+    from repro import flags
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    idx = lengths % S if ring else lengths
+    if flags.enabled("uniform_decode") and not ring:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new[:, None].astype(k_cache.dtype), idx[0], axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new[:, None].astype(v_cache.dtype), idx[0], axis=1)
+        return k_cache, v_cache
+    b = jnp.arange(B)
+    k_cache = k_cache.at[b, idx].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[b, idx].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+def ring_positions(lengths, window: int):
+    """Absolute position held in each ring slot, -1 if empty. [B, window]."""
+    B = lengths.shape[0]
+    slots = jnp.arange(window)[None, :]                     # [1, W]
+    L = lengths[:, None]                                    # [B, 1]
+    # slot s holds the largest position p < L with p % W == s
+    p = ((L - 1 - slots) // window) * window + slots
+    return jnp.where((p >= 0) & (p < L) & (p > L - 1 - window), p, -1)

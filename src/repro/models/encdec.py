@@ -1,0 +1,250 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The mel/conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``frames [B, enc_seq, d]`` (supplied by
+``input_specs``). Sinusoidal positions are added to the frames; the encoder
+is bidirectional; the decoder is causal with cross-attention over the
+encoder output. Decode shapes exercise the decoder: the cross K/V cache is
+computed once at prefill (or taken from a provided encoder pass) and the
+self-attention cache grows per step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import blockwise_attention, cache_write, decode_attention
+from repro.models.layers import (
+    attn_init, dense_init, mlp_apply, mlp_init, project_out, project_qkv,
+    rms_norm, rms_norm_init, sinusoidal_positions,
+)
+from repro.models.transformer import (
+    ATTN_CHUNK, ZERO_AUX, _embed_tokens, _lm_logits, _res_annotate,
+    apply_rope_wrap,
+)
+from repro.sharding import annotate
+
+F32 = jnp.float32
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": rms_norm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": attn_init(k1, cfg, dtype),
+        "lnx": rms_norm_init(cfg.d_model),
+        "xattn": attn_init(k2, cfg, dtype),
+        "ln2": rms_norm_init(cfg.d_model),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    V, d = cfg.padded_vocab_size, cfg.d_model
+    from repro.models.layers import embed_init
+    enc_keys = jax.random.split(keys[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.num_layers)
+    params = {
+        "embed": embed_init(keys[2], (V, d), dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": rms_norm_init(d),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "final_norm": rms_norm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[3], (d, V), d, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames [B, E, d] -> encoder states [B, E, d]."""
+    B, E, d = frames.shape
+    x = frames + sinusoidal_positions(E, d).astype(frames.dtype)[None]
+    x = _res_annotate(x)
+
+    def body(carry, lp):
+        x, = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(lp["attn"], h)
+        q = annotate(q, "batch", None, "heads", None)
+        o = blockwise_attention(q, k, v, causal=False, chunk=ATTN_CHUNK)
+        x = _res_annotate(x + project_out(lp["attn"], o))
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = _res_annotate(x + mlp_apply(lp["mlp"], h2))
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(body, (x,), params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out):
+    k = jnp.einsum("bsd,dke->bske", enc_out, lp["xattn"]["wk"],
+                   preferred_element_type=F32).astype(enc_out.dtype)
+    v = jnp.einsum("bsd,dke->bske", enc_out, lp["xattn"]["wv"],
+                   preferred_element_type=F32).astype(enc_out.dtype)
+    return k, v
+
+
+def _dec_layer_seq(lp, x, enc_out, cfg, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(lp["attn"], h)
+    q = apply_rope_wrap(q, positions, cfg)
+    k = apply_rope_wrap(k, positions, cfg)
+    o = blockwise_attention(q, k, v, causal=True, chunk=ATTN_CHUNK)
+    x = _res_annotate(x + project_out(lp["attn"], o))
+
+    hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"],
+                    preferred_element_type=F32).astype(hx.dtype)
+    kx, vx = _cross_kv(lp, enc_out)
+    ox = blockwise_attention(qx, kx, vx, causal=False, chunk=ATTN_CHUNK)
+    x = _res_annotate(x + project_out(lp["xattn"], ox))
+
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return _res_annotate(x + mlp_apply(lp["mlp"], h2))
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    """batch: {"frames": [B, E, d], "tokens": [B, S]} -> (logits, aux)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _res_annotate(_embed_tokens(params, cfg, tokens))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, lp):
+        x, = carry
+        return (_dec_layer_seq(lp, x, enc_out, cfg, positions),), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x,), _ = jax.lax.scan(body, (x,), params["dec_layers"])
+    return _lm_logits(params, cfg, x), ZERO_AUX
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    L, KV, hd, E = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.encoder_seq
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((L, batch, seq_len, KV, hd), dtype),
+        "v": jnp.zeros((L, batch, seq_len, KV, hd), dtype),
+        "xk": jnp.zeros((L, batch, E, KV, hd), dtype),
+        "xv": jnp.zeros((L, batch, E, KV, hd), dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, *, cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Encoder pass + decoder prompt pass; fills self + cross caches."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = _res_annotate(_embed_tokens(params, cfg, tokens))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, lp):
+        x, = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(lp["attn"], h)
+        q = apply_rope_wrap(q, positions, cfg)
+        k = apply_rope_wrap(k, positions, cfg)
+        o = blockwise_attention(q, k, v, causal=True, chunk=ATTN_CHUNK)
+        x = _res_annotate(x + project_out(lp["attn"], o))
+
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"],
+                        preferred_element_type=F32).astype(hx.dtype)
+        kx, vx = _cross_kv(lp, enc_out)
+        ox = blockwise_attention(qx, kx, vx, causal=False, chunk=ATTN_CHUNK)
+        x = _res_annotate(x + project_out(lp["xattn"], ox))
+
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = _res_annotate(x + mlp_apply(lp["mlp"], h2))
+
+        pad = cache_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        return (x,), (kc, vc, kx.astype(cache_dtype), vx.astype(cache_dtype))
+
+    (x,), (ks, vs, xks, xvs) = jax.lax.scan(body, (x,), params["dec_layers"])
+    lengths = batch.get("prompt_lengths",
+                        jnp.full((B,), S, jnp.int32)).astype(jnp.int32)
+    cache = {
+        "lengths": lengths,
+        "k": ks, "v": vs, "xk": xks, "xv": xvs,
+    }
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    return _lm_logits(params, cfg, last), cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens [B] -> (logits [B, V], cache). Cross cache must be filled
+    (prefill, or `encode_to_cache` for encoder-only priming)."""
+    lengths = cache["lengths"]
+    x = _embed_tokens(params, cfg, tokens[:, None])[:, 0]
+    E = cfg.encoder_seq
+    enc_lengths = jnp.full_like(lengths, E)
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        h = rms_norm(x[:, None], lp["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(lp["attn"], h)
+        pos = lengths[:, None]
+        q = apply_rope_wrap(q, pos, cfg)
+        k = apply_rope_wrap(k, pos, cfg)
+        kc, vc = cache_write(kc, vc, k[:, 0], v[:, 0], lengths)
+        o = decode_attention(q[:, 0], kc, vc, lengths=lengths + 1)
+        x = x + project_out(lp["attn"], o[:, None])[:, 0]
+
+        hx = rms_norm(x[:, None], lp["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhe->bshe", hx, lp["xattn"]["wq"],
+                        preferred_element_type=F32).astype(hx.dtype)
+        ox = decode_attention(qx[:, 0], xk, xv, lengths=enc_lengths)
+        x = x + project_out(lp["xattn"], ox[:, None])[:, 0]
+
+        h2 = rms_norm(x[:, None], lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h2)[:, 0]
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
+    return _lm_logits(params, cfg, x), cache
+
+
+def encode_to_cache(params, frames, cfg: ModelConfig, cache):
+    """Fill only the cross K/V cache from an encoder pass (serving path
+    where decode starts from BOS without a decoder prompt)."""
+    enc_out = encode(params, frames, cfg)
+
+    def body(_, lp):
+        kx, vx = _cross_kv(lp, enc_out)
+        return None, (kx.astype(cache["xk"].dtype), vx.astype(cache["xv"].dtype))
+
+    _, (xks, xvs) = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(cache, xk=xks, xv=xvs)

@@ -1,0 +1,152 @@
+"""Shared layer primitives: norms, RoPE, embeddings, SwiGLU MLP, init.
+
+Conventions (sharding-friendly):
+- Attention projections keep the head dims explicit: ``wq [d, H, hd]``,
+  ``wk/wv [d, KV, hd]``, ``wo [H, hd, d]`` — no merged head*dim axes, so the
+  partitioner can shard heads without reshapes.
+- The residual stream is ``[B, S, d]``.
+- All matmuls accumulate in f32 (``preferred_element_type``) regardless of
+  the parameter/activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, fan_in, dtype):
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -3, 3, shape, F32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -3, 3, shape, F32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def rms_norm_init(d):
+    # stored as zero-centered scale; applied as (1 + scale)
+    return jnp.zeros((d,), F32)
+
+
+def head_rms_norm(x, scale, eps=1e-6):
+    """Per-head qk-norm: x [..., H, hd], scale [hd]."""
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [B, S, H, hd], positions [B, S] (int) -> same shape."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # [half]
+    angles = positions[..., None].astype(F32) * freqs      # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]                   # [B, S, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position embeddings [S, d]."""
+    half = d_model // 2
+    pos = jnp.arange(seq_len, dtype=F32)[:, None]
+    inv = jnp.exp(-jnp.arange(half, dtype=F32) * (math.log(10_000.0) / max(half - 1, 1)))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(ku, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(kd, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp_apply(params, x):
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                      preferred_element_type=F32)
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"],
+                    preferred_element_type=F32)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"],
+                     preferred_element_type=F32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention projections
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype, d_kv_src=None):
+    """Projection params. d_kv_src: source dim for k/v (cross-attn encoder)."""
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dkv = d_kv_src or d
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, H, hd), d, dtype),
+        "wk": dense_init(kk, (dkv, KV, hd), dkv, dtype),
+        "wv": dense_init(kv, (dkv, KV, hd), dkv, dtype),
+        "wo": dense_init(ko, (H, hd, d), H * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), F32)
+        p["k_norm"] = jnp.zeros((hd,), F32)
+    return p
+
+
+def project_qkv(params, x, x_kv=None, *, qk_norm=False, norm_eps=1e-6):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,Skv,KV,hd]."""
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dke->bske", x_kv, params["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dke->bske", x_kv, params["wv"], preferred_element_type=F32)
+    q, k, v = q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+    if qk_norm:
+        q = head_rms_norm(q, params["q_norm"], norm_eps)
+        k = head_rms_norm(k, params["k_norm"], norm_eps)
+    return q, k, v
+
+
+def project_out(params, attn_out):
+    """attn_out [B,S,H,hd] -> [B,S,d]."""
+    out = jnp.einsum("bshe,hed->bsd", attn_out, params["wo"],
+                     preferred_element_type=F32)
+    return out.astype(attn_out.dtype)

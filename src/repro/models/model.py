@@ -1,0 +1,92 @@
+"""Unified Model API — the substrate the MAX wrapper layer binds to.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions (safe to ``jax.jit`` / ``pjit``):
+
+- ``init(rng) -> params``
+- ``forward(params, batch) -> (logits, aux)``          (train / scoring)
+- ``loss(params, batch, rng=None) -> (scalar, metrics)``
+- ``prefill(params, batch, cache_len=None) -> (last_logits, cache)``
+- ``decode_step(params, cache, tokens) -> (logits, cache)``
+- ``init_cache(batch, seq_len) -> cache``
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+F32 = jnp.float32
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def cross_entropy(logits, targets, cfg: ModelConfig, mask=None):
+    """logits [..., V_padded] f32; targets int32 < logical vocab.
+
+    Padded vocab columns are excluded from the partition function.
+    """
+    V = cfg.padded_vocab_size
+    if V != cfg.vocab_size:
+        neg = jnp.full((V - cfg.vocab_size,), -1e9, logits.dtype)
+        logits = logits.at[..., cfg.vocab_size:].add(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
+                cache_dtype=jnp.bfloat16, remat: bool = False) -> Model:
+    is_encdec = cfg.family == "audio"
+    mod = encdec if is_encdec else transformer
+
+    def init(rng):
+        return mod.init_params(rng, cfg, param_dtype)
+
+    def forward(params, batch):
+        return mod.forward(params, batch, cfg, remat=remat)
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch)
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        ce = cross_entropy(logits, targets, cfg, mask)
+        total = ce
+        metrics = {"ce": ce}
+        if cfg.is_moe:
+            total = total + cfg.router_aux_loss_coef * aux.moe_lb
+            total = total + cfg.router_z_loss_coef * aux.moe_z
+            metrics.update(moe_lb=aux.moe_lb, moe_z=aux.moe_z)
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(params, batch, cache_len=None):
+        return mod.prefill(params, batch, cfg, cache_len=cache_len,
+                           cache_dtype=cache_dtype)
+
+    def decode_step(params, cache, tokens):
+        return mod.decode_step(params, cache, tokens, cfg)
+
+    def init_cache(batch_size, seq_len):
+        if is_encdec:
+            return encdec.init_cache(cfg, batch_size, seq_len, cache_dtype)
+        return transformer.init_cache(cfg, batch_size, seq_len, cache_dtype)
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)

@@ -1,0 +1,165 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d(4) + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate, block-diagonal)
+    a_t = exp(-c * softplus(Lambda) * r_t)            c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is elementwise (diagonal), so train/prefill use
+``jax.lax.associative_scan`` (O(log S) depth — the TPU-friendly form; the
+Pallas kernel implements the blocked variant) and decode is a single O(1)
+state update. Gates are block-diagonal with NUM_BLOCKS blocks, matching the
+reference implementation.
+
+Block layout (Griffin Fig. 2): x -> [branch A: linear -> GeLU]
+                                  [branch B: linear -> conv1d(4) -> RG-LRU]
+                               merge A*B -> linear out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+F32 = jnp.float32
+NUM_BLOCKS = 8
+CONV_WIDTH = 4
+RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    bw = w // NUM_BLOCKS
+    ka, kx, kl, ki, ko, kg, kc = jax.random.split(key, 7)
+    return {
+        "w_in_rnn": dense_init(ki, (d, w), d, dtype),       # branch B in-proj
+        "w_in_gate": dense_init(kg, (d, w), d, dtype),      # branch A in-proj
+        "w_out": dense_init(ko, (w, d), w, dtype),
+        "conv_w": dense_init(kc, (CONV_WIDTH, w), CONV_WIDTH, dtype),
+        "conv_b": jnp.zeros((w,), F32),
+        "gate_a_w": dense_init(ka, (NUM_BLOCKS, bw, bw), bw, F32),
+        "gate_a_b": jnp.zeros((w,), F32),
+        "gate_x_w": dense_init(kx, (NUM_BLOCKS, bw, bw), bw, F32),
+        "gate_x_b": jnp.zeros((w,), F32),
+        # softplus(lambda) init so a^c spans ~(0.9, 0.999)
+        "lam": jnp.linspace(0.3, 1.5, w, dtype=F32),
+    }
+
+
+def _block_linear(x, w, b):
+    """x [..., W] with block-diagonal w [NB, bw, bw] -> [..., W]."""
+    nb, bw = w.shape[0], w.shape[1]
+    xb = x.reshape(x.shape[:-1] + (nb, bw))
+    yb = jnp.einsum("...ni,nij->...nj", xb.astype(F32), w)
+    return yb.reshape(x.shape) + b
+
+
+def _gates(params, x):
+    """a_t (log-space) and gated input. x [..., W] f32."""
+    r = jax.nn.sigmoid(_block_linear(x, params["gate_a_w"], params["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_linear(x, params["gate_x_w"], params["gate_x_b"]))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r        # [..., W] <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = mult * (i * x)
+    return a, b
+
+
+def rglru_scan(params, x):
+    """Sequence form. x [B, S, W] -> h [B, S, W] (f32 in, f32 out)."""
+    a, b = _gates(params, x.astype(F32))
+
+    from repro.kernels import ops as _kops
+    if _kops.get_backend() != "ref":
+        h, _ = _kops.rglru_scan(a, b)
+        return h
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(params, x_t, h_prev):
+    """Decode step. x_t [B, W], h_prev [B, W] -> (h_t, h_t)."""
+    a, b = _gates(params, x_t.astype(F32))
+    h = a * h_prev + b
+    return h, h
+
+
+# ---------------------------------------------------------------------------
+# temporal conv1d (depthwise, width 4, causal)
+# ---------------------------------------------------------------------------
+
+def conv1d_scan(params, x):
+    """x [B, S, W] -> [B, S, W]; causal depthwise conv of width 4."""
+    w, b = params["conv_w"], params["conv_b"]
+    out = x.astype(F32) * w[-1].astype(F32)
+    for i in range(1, CONV_WIDTH):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i].astype(F32)
+        out = out + shifted * w[CONV_WIDTH - 1 - i].astype(F32)
+    return out + b
+
+
+def conv1d_step(params, x_t, conv_state):
+    """x_t [B, W]; conv_state [B, CONV_WIDTH-1, W] (previous inputs, oldest
+    first). Returns (y_t [B, W], new_state)."""
+    w, b = params["conv_w"], params["conv_b"]
+    hist = jnp.concatenate([conv_state, x_t[:, None]], axis=1)   # [B, 4, W]
+    y = jnp.einsum("btw,tw->bw", hist.astype(F32), w.astype(F32)) + b
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# full recurrent block
+# ---------------------------------------------------------------------------
+
+def recurrent_block_apply(params, x, *, return_state: bool = False):
+    """Train/prefill. x [B, S, d] -> [B, S, d] (+ final decode state)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_in_gate"],
+                   preferred_element_type=F32))
+    rnn_in = jnp.einsum("bsd,dw->bsw", x, params["w_in_rnn"],
+                        preferred_element_type=F32).astype(x.dtype)
+    conv_out = conv1d_scan(params, rnn_in)
+    h = rglru_scan(params, conv_out)
+    merged = (gate * h).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", merged, params["w_out"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if not return_state:
+        return y
+    state = {
+        "h": h[:, -1],
+        "conv": rnn_in[:, -(CONV_WIDTH - 1):].astype(F32),
+    }
+    return y, state
+
+
+def recurrent_block_step(params, x_t, state):
+    """Decode. x_t [B, d]; state {'h': [B,W], 'conv': [B,3,W]}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bd,dw->bw", x_t, params["w_in_gate"],
+                   preferred_element_type=F32))
+    rnn_in = jnp.einsum("bd,dw->bw", x_t, params["w_in_rnn"],
+                        preferred_element_type=F32).astype(x_t.dtype)
+    conv_out, conv_state = conv1d_step(params, rnn_in, state["conv"])
+    h, _ = rglru_step(params, conv_out, state["h"])
+    merged = (gate * h).astype(x_t.dtype)
+    y = jnp.einsum("bw,wd->bd", merged, params["w_out"],
+                   preferred_element_type=F32).astype(x_t.dtype)
+    return y, {"h": h, "conv": conv_state}
+
+
+def recurrent_state_init(cfg, batch, dtype=F32):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), F32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, w), F32),
+    }

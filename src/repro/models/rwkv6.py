@@ -1,0 +1,288 @@
+"""RWKV-6 "Finch" layer (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Time-mix (per head, head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T              state S in R^{N x N}
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+with per-channel data-dependent decay w_t = exp(-exp(d_t)) produced by a
+low-rank (LoRA) projection of the token-shift mix, and bonus u.
+
+Token shift uses Finch's DDLERP: a data-dependent lerp between x_t and
+x_{t-1} with per-projection LoRA adjustments.
+
+Channel-mix is the RWKV squared-ReLU gated MLP with plain lerp token shift.
+
+Train/prefill run a sequential ``lax.scan`` over time (the exact reference;
+the Pallas kernel implements the chunked-parallel form). Decode is an O(1)
+state update — the reason this arch runs ``long_500k`` natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm_init
+
+F32 = jnp.float32
+LORA_MIX = 32     # DDLERP lora rank
+LORA_DECAY = 64   # decay lora rank
+
+_MIX_NAMES = ("r", "k", "v", "g", "w")
+
+
+def rwkv_time_mix_init(key, cfg, dtype):
+    d = cfg.d_model
+    H, N = cfg.num_heads, cfg.rwkv_head_dim
+    assert H * N == d
+    keys = jax.random.split(key, 17)
+    p = {
+        "mu_x": jnp.zeros((d,), F32),
+        "w_r": dense_init(keys[0], (d, d), d, dtype),
+        "w_k": dense_init(keys[1], (d, d), d, dtype),
+        "w_v": dense_init(keys[2], (d, d), d, dtype),
+        "w_g": dense_init(keys[3], (d, d), d, dtype),
+        "w_o": dense_init(keys[4], (d, d), d, dtype),
+        # decay lora: d -> LORA_DECAY -> d, plus base decay
+        "decay_base": jnp.linspace(-6.0, -0.5, d, dtype=F32),
+        "decay_a": dense_init(keys[5], (d, LORA_DECAY), d, F32),
+        "decay_b": dense_init(keys[6], (LORA_DECAY, d), LORA_DECAY, F32),
+        "bonus_u": (jnp.arange(d, dtype=F32) / d - 0.5),
+        "ln_out": rms_norm_init(d),  # per-head group norm scale
+    }
+    for i, nm in enumerate(_MIX_NAMES):
+        p[f"mix_mu_{nm}"] = jnp.zeros((d,), F32)
+        p[f"mix_a_{nm}"] = dense_init(keys[7 + i], (d, LORA_MIX), d, F32)
+        p[f"mix_b_{nm}"] = dense_init(keys[12 + i], (LORA_MIX, d), LORA_MIX, F32)
+    return p
+
+
+def rwkv_channel_mix_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    kk, kv, kr = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), F32),
+        "mu_r": jnp.zeros((d,), F32),
+        "w_k": dense_init(kk, (d, f), d, dtype),
+        "w_v": dense_init(kv, (f, d), f, dtype),
+        "w_r": dense_init(kr, (d, d), d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# token shift + DDLERP
+# ---------------------------------------------------------------------------
+
+def _shift(x, x_prev_last=None):
+    """x [B, S, d] -> x_{t-1} along S. First step uses x_prev_last [B, d]."""
+    first = jnp.zeros_like(x[:, :1]) if x_prev_last is None else x_prev_last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, nm, x, xp):
+    """Finch data-dependent lerp for projection ``nm``. x, xp [..., d] f32."""
+    base = x + (xp - x) * p["mu_x"]
+    lora = p[f"mix_mu_{nm}"] + jnp.tanh(base @ p[f"mix_a_{nm}"]) @ p[f"mix_b_{nm}"]
+    return x + (xp - x) * lora
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+WKV_CHUNK = 16
+# Decay exponent clamp: w = exp(-exp(d)) with d <= DECAY_CLAMP bounds
+# e^{-lw} within a chunk to exp(WKV_CHUNK * e^{DECAY_CLAMP}) ~ e^72 < f32
+# max. Decays faster than exp(-4.5) per step are saturated — indistinguish-
+# able from zero after 2 tokens, so semantics are preserved in practice.
+DECAY_CLAMP = 1.5
+
+
+def _wkv_chunked(r, k, v, w, u, state, *, chunk=WKV_CHUNK):
+    """Chunked-parallel WKV (flash-linear-attention style).
+
+    The sequential scan round-trips the [B, H, N, N] state through HBM per
+    token (the dominant roofline term for rwkv6 train/prefill — §Perf H1).
+    This form carries the state per CHUNK and computes within-chunk
+    interactions as masked matmuls with RELATIVE decay products
+    ``D[t, i] = exp(logW[t-1] - logW[i])`` for i < t — every exponent is
+    <= 0, so it is numerically safe for any decay magnitude.
+
+    r/k/v/w [B, T, H, N] f32 (T % chunk == 0 after padding by the caller);
+    u [H, N]; state [B, H, N, N]. Returns (y, final_state), exact (up to
+    f32 reassociation) w.r.t. the sequential scan.
+    """
+    B, T, H, N = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)       # identity decay on pads
+    Tp = T + pad
+    nc = Tp // chunk
+    # [B, H, nc, c, N]
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, nc, chunk, H, N), 3, 1)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    # move chunk index to the front for lax.scan: [nc, B, H, c, N]
+    rc, kc, vc, wc = (jnp.moveaxis(t, 2, 0) for t in (rc, kc, vc, wc))
+
+    def one_chunk(S, inp):
+        rc_, kc_, vc_, wc_ = inp               # [B, H, c, N]
+        lw = jnp.cumsum(jnp.log(wc_), axis=2)  # logW_t (inclusive), <= 0
+        lw_prev = lw - jnp.log(wc_)            # logW_{t-1} (exclusive)
+        # inter-chunk: r_t . (W_{t-1} o S)
+        r_dec = rc_ * jnp.exp(lw_prev)         # exponents <= 0
+        y_inter = jnp.einsum("bhti,bhij->bhtj", r_dec, S)
+        # intra-chunk, FACTORIZED: scores[t,i>..] = (r_t o e^{lw_prev_t})
+        # . (k_i o e^{-lw_i}). e^{-lw_i} <= e^{c * DECAY_LOG_MAX}: bounded
+        # because the decay exponent is clamped (DECAY_CLAMP in
+        # _time_mix_projections) and the chunk is short — this is what
+        # turns the within-chunk recurrence into two MXU matmuls.
+        k_inv = kc_ * jnp.exp(-lw)
+        scores = jnp.einsum("bhtn,bhin->bhti", r_dec, k_inv)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhti,bhin->bhtn", scores, vc_)
+        # diagonal (bonus) term
+        diag = jnp.sum(rc_ * u[None, :, None, :] * kc_, axis=-1)  # [B,H,c]
+        y_diag = diag[..., None] * vc_
+        y = y_inter + y_intra + y_diag
+        # state update: S' = W_end o S + sum_i e^{lw_end - lw_i} k_i v_i^T
+        lw_end = lw[:, :, -1:, :]
+        k_dec = kc_ * jnp.exp(lw_end - lw)     # exponents <= 0
+        S = jnp.exp(lw_end[:, :, 0, :])[..., :, None] * S + jnp.einsum(
+            "bhtn,bhtm->bhnm", k_dec, vc_)
+        return S, y
+
+    state, ys = jax.lax.scan(one_chunk, state, (rc, kc, vc, wc))
+    # ys [nc, B, H, c, N] -> [B, T, H, N]
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, Tp, N)
+    y = jnp.moveaxis(y, 1, 2)[:, :T]
+    return y, state
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV. r/k/v/w [B, S, H, N] f32; u [H, N]; state [B, H, N, N].
+
+    Returns (y [B, S, H, N], final_state). State layout: S[i, j] accumulates
+    k_i * v_j.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp          # [B, H, N]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B, H, N, N]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))  # [S, B, H, N]
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _group_norm(y, scale, H, N, eps=1e-5):
+    """Per-head layer norm over N. y [..., H, N] f32, scale [H*N]."""
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + eps)
+    return yn.reshape(y.shape[:-2] + (H * N,)) * (1.0 + scale)
+
+
+def _time_mix_projections(p, x, xp, cfg):
+    """Shared by scan & step. x, xp [..., d] -> r,k,v,g,w,(heads split)."""
+    H, N = cfg.num_heads, cfg.rwkv_head_dim
+    x32, xp32 = x.astype(F32), xp.astype(F32)
+    xr = _ddlerp(p, "r", x32, xp32)
+    xk = _ddlerp(p, "k", x32, xp32)
+    xv = _ddlerp(p, "v", x32, xp32)
+    xg = _ddlerp(p, "g", x32, xp32)
+    xw = _ddlerp(p, "w", x32, xp32)
+
+    r = (xr.astype(x.dtype) @ p["w_r"]).astype(F32)
+    k = (xk.astype(x.dtype) @ p["w_k"]).astype(F32)
+    v = (xv.astype(x.dtype) @ p["w_v"]).astype(F32)
+    g = jax.nn.silu((xg.astype(x.dtype) @ p["w_g"]).astype(F32))
+
+    d_t = p["decay_base"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    d_t = jnp.clip(d_t, -12.0, DECAY_CLAMP)     # see DECAY_CLAMP note
+    w = jnp.exp(-jnp.exp(d_t))                                  # in (0, 1)
+
+    split = lambda t: t.reshape(t.shape[:-1] + (H, N))
+    return split(r), split(k), split(v), g, split(w)
+
+
+def time_mix_apply(p, x, cfg, *, state=None, x_prev=None, return_state=False):
+    """Train/prefill time-mix. x [B, S, d]."""
+    B, S, d = x.shape
+    H, N = cfg.num_heads, cfg.rwkv_head_dim
+    xp = _shift(x, x_prev)
+    r, k, v, g, w = _time_mix_projections(p, x, xp, cfg)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), F32)
+    u = p["bonus_u"].reshape(H, N)
+    from repro import flags
+    from repro.kernels import ops as _kops
+    if _kops.get_backend() != "ref":
+        y, final = _kops.wkv_scan(r, k, v, w, u, state)
+    elif S > 1 and flags.enabled("chunked_wkv"):
+        # chunked-parallel form (H1 optimization; see _wkv_chunked)
+        y, final = _wkv_chunked(r, k, v, w, u, state)
+    else:
+        y, final = _wkv_scan(r, k, v, w, u, state)
+    y = _group_norm(y, p["ln_out"], H, N) * g
+    out = (y.astype(x.dtype) @ p["w_o"]).astype(x.dtype)
+    if return_state:
+        return out, {"wkv": final, "shift": x[:, -1].astype(F32)}
+    return out
+
+
+def time_mix_step(p, x_t, st, cfg):
+    """Decode time-mix. x_t [B, d]; st {'wkv': [B,H,N,N], 'shift': [B,d]}."""
+    H, N = cfg.num_heads, cfg.rwkv_head_dim
+    xp = st["shift"].astype(x_t.dtype)
+    r, k, v, g, w = _time_mix_projections(p, x_t, xp, cfg)
+    u = p["bonus_u"].reshape(H, N)
+    s = st["wkv"]
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    y = _group_norm(y, p["ln_out"], H, N) * g
+    out = (y.astype(x_t.dtype) @ p["w_o"]).astype(x_t.dtype)
+    return out, {"wkv": s, "shift": x_t.astype(F32)}
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+def channel_mix_apply(p, x, *, x_prev=None, return_state=False):
+    xp = _shift(x, x_prev)
+    x32, xp32 = x.astype(F32), xp.astype(F32)
+    xk = (x32 + (xp32 - x32) * p["mu_k"]).astype(x.dtype)
+    xr = (x32 + (xp32 - x32) * p["mu_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu((xk @ p["w_k"]).astype(F32))).astype(x.dtype)
+    rr = jax.nn.sigmoid((xr @ p["w_r"]).astype(F32)).astype(x.dtype)
+    out = rr * (kk @ p["w_v"])
+    if return_state:
+        return out, x[:, -1].astype(F32)
+    return out
+
+
+def channel_mix_step(p, x_t, shift_state):
+    xp = shift_state.astype(x_t.dtype)
+    x32, xp32 = x_t.astype(F32), xp.astype(F32)
+    xk = (x32 + (xp32 - x32) * p["mu_k"]).astype(x_t.dtype)
+    xr = (x32 + (xp32 - x32) * p["mu_r"]).astype(x_t.dtype)
+    kk = jnp.square(jax.nn.relu((xk @ p["w_k"]).astype(F32))).astype(x_t.dtype)
+    rr = jax.nn.sigmoid((xr @ p["w_r"]).astype(F32)).astype(x_t.dtype)
+    out = rr * (kk @ p["w_v"])
+    return out, x_t.astype(F32)
+
+
+def rwkv_state_init(cfg, batch):
+    H, N, d = cfg.num_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, H, N, N), F32),
+        "tm_shift": jnp.zeros((batch, d), F32),
+        "cm_shift": jnp.zeros((batch, d), F32),
+    }

@@ -1,0 +1,663 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM / hybrid / SSM).
+
+One parameter layout, three execution modes:
+
+- ``forward``      train/scoring: tokens [B, S] -> logits [B, S, V]
+- ``prefill``      fill decode caches: tokens [B, S] -> (last logits, cache)
+- ``decode_step``  one token per sequence against the cache
+
+Layers are stacked (params are [L, ...] pytrees) and applied with
+``lax.scan`` so the HLO stays O(1) in depth — required for 126-layer
+lowering on the dry-run meshes. Hybrid (RecurrentGemma) scans over
+(rec, rec, attn) *pattern blocks* plus a recurrent tail, so heterogeneous
+layers never share stacked parameters.
+
+Logical sharding annotations (``repro.sharding.annotate``) mark the
+residual stream (batch, seq-parallel), attention heads, FF, experts and
+cache dims; outside a mesh context they are no-ops.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, rwkv6
+from repro.models.attention import (
+    blockwise_attention, decode_attention, cache_write, ring_positions,
+)
+from repro.models.layers import (
+    attn_init, dense_init, embed_init, mlp_apply, mlp_init, project_out,
+    project_qkv, rms_norm, rms_norm_init,
+)
+from repro.models.moe import MoEAux, moe_apply, moe_init
+from repro.sharding import annotate
+from repro.sharding.specs import maybe_gather_params
+
+F32 = jnp.float32
+ATTN_CHUNK = 512  # query-chunk size for blockwise attention
+
+
+class Aux(NamedTuple):
+    moe_lb: jnp.ndarray
+    moe_z: jnp.ndarray
+
+
+ZERO_AUX = Aux(jnp.zeros((), F32), jnp.zeros((), F32))
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _layer_init(key, cfg: ModelConfig, dtype, kind: str):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": rms_norm_init(d), "ln2": rms_norm_init(d)}
+    if kind == "attn":
+        p["attn"] = attn_init(k1, cfg, dtype)
+        p["mlp"] = mlp_init(k2, d, cfg.d_ff, dtype)
+    elif kind == "moe":
+        p["attn"] = attn_init(k1, cfg, dtype)
+        p["moe"] = moe_init(k2, cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru.rglru_init(k1, cfg, dtype)
+        p["mlp"] = mlp_init(k2, d, cfg.d_ff, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.rwkv_time_mix_init(k1, cfg, dtype)
+        p["cm"] = rwkv6.rwkv_channel_mix_init(k2, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stacked_init(key, cfg, dtype, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _layer_init(k, cfg, dtype, kind))(keys)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    V, d = cfg.padded_vocab_size, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (V, d), dtype),
+        "final_norm": rms_norm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (d, V), d, dtype)
+
+    if cfg.family == "hybrid":
+        nb, plen = cfg.num_pattern_blocks, len(cfg.block_pattern)
+        bkeys = jax.random.split(keys[2], nb)
+
+        def block_init(k):
+            lkeys = jax.random.split(k, plen)
+            return {
+                f"l{i}": _layer_init(lkeys[i], cfg, dtype,
+                                     "attn" if cfg.block_pattern[i] == "attn" else "rec")
+                for i in range(plen)
+            }
+
+        params["blocks"] = jax.vmap(block_init)(bkeys)
+        if cfg.num_tail_layers:
+            params["tail"] = _stacked_init(
+                keys[3], cfg, dtype, "rec", cfg.num_tail_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = _stacked_init(keys[2], cfg, dtype, "rwkv", cfg.num_layers)
+    else:
+        kind = "moe" if cfg.is_moe else "attn"
+        params["layers"] = _stacked_init(keys[2], cfg, dtype, kind, cfg.num_layers)
+
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(keys[4], (d, d), d, dtype)
+    return params
+
+
+# ===========================================================================
+# shared pieces
+# ===========================================================================
+
+def _embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    scale = math.sqrt(cfg.d_model) if cfg.tie_embeddings else 1.0
+    return x * jnp.asarray(scale, x.dtype)
+
+
+def _lm_logits(params, cfg, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"],
+                            preferred_element_type=F32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"],
+                            preferred_element_type=F32)
+    return logits  # f32 [.., V_padded]
+
+
+def _inject_image(params, cfg, x, image_embeds):
+    """Overwrite the first P positions with projected patch embeddings."""
+    proj = jnp.einsum("bpd,de->bpe", image_embeds.astype(x.dtype),
+                      params["vision_proj"], preferred_element_type=F32)
+    proj = proj.astype(x.dtype)
+    return jnp.concatenate([proj, x[:, cfg.num_image_tokens:]], axis=1)
+
+
+def _res_annotate(x):
+    return annotate(x, "batch", "act_seq", None)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies: sequence form
+# ---------------------------------------------------------------------------
+
+def _attn_block_seq(p, x, cfg, positions, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], h, qk_norm=cfg.qk_norm,
+                          norm_eps=cfg.norm_eps)
+    q = apply_rope_wrap(q, positions, cfg)
+    k = apply_rope_wrap(k, positions, cfg)
+    # (H2 iter 2 tried dropping these reshard annotations under the
+    # weight-gather schedule — REFUTED: wire bytes rose 10%, see §Perf.)
+    q = annotate(q, "batch", None, "heads", None)
+    k = annotate(k, "batch", None, "kv_heads", None)
+    v = annotate(v, "batch", None, "kv_heads", None)
+    # positions are plain arange here (rope consumed them above), so the
+    # default in-attention positions match -> kernel dispatch stays eligible
+    o = blockwise_attention(
+        q, k, v, causal=True, window=window,
+        chunk=ATTN_CHUNK, logit_cap=cfg.attn_logit_softcap)
+    return _res_annotate(x + project_out(p["attn"], o))
+
+
+def apply_rope_wrap(t, positions, cfg):
+    from repro.models.layers import apply_rope
+    return apply_rope(t, positions, cfg.rope_theta)
+
+
+def _mlp_block_seq(p, x, cfg):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return _res_annotate(x + mlp_apply(p["mlp"], h))
+
+
+def _moe_block_seq(p, x, cfg):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = moe_apply(p["moe"], h, cfg)
+    return _res_annotate(x + y), Aux(aux.load_balance_loss, aux.z_loss)
+
+
+def _rec_block_seq(p, x, cfg, *, return_state=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out = rglru.recurrent_block_apply(p["rec"], h, return_state=return_state)
+    if return_state:
+        y, state = out
+        return _res_annotate(x + y), state
+    return _res_annotate(x + out)
+
+
+def _rwkv_layer_seq(p, x, cfg, *, return_state=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if return_state:
+        y, tm_state = rwkv6.time_mix_apply(p["tm"], h, cfg, return_state=True)
+    else:
+        y = rwkv6.time_mix_apply(p["tm"], h, cfg)
+    x = _res_annotate(x + y)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if return_state:
+        y2, cm_shift = rwkv6.channel_mix_apply(p["cm"], h2, return_state=True)
+        x = _res_annotate(x + y2)
+        return x, {"wkv": tm_state["wkv"], "tm_shift": tm_state["shift"],
+                   "cm_shift": cm_shift}
+    x = _res_annotate(x + rwkv6.channel_mix_apply(p["cm"], h2))
+    return x
+
+
+# ===========================================================================
+# forward (train / scoring)
+# ===========================================================================
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    """batch: {"tokens": [B, S], optional "image_embeds": [B, P, d]}.
+
+    Returns (logits [B, S, V_padded] f32, Aux).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        x = _inject_image(params, cfg, x, batch["image_embeds"])
+    x = _res_annotate(x)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    window = cfg.sliding_window
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            x, = carry
+            lp = maybe_gather_params(lp)
+            x = _rwkv_layer_seq(lp, x, cfg)
+            return (x,), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+        return _lm_logits(params, cfg, x), ZERO_AUX
+
+    if cfg.family == "hybrid":
+        def block_body(carry, bp):
+            x, = carry
+            bp = maybe_gather_params(bp)
+            for i, kind in enumerate(cfg.block_pattern):
+                lp = bp[f"l{i}"]
+                if kind == "attn":
+                    x = _attn_block_seq(lp, x, cfg, positions,
+                                        cfg.local_attn_window)
+                    x = _mlp_block_seq(lp, x, cfg)
+                else:
+                    x = _rec_block_seq(lp, x, cfg)
+                    x = _mlp_block_seq(lp, x, cfg)
+            return (x,), None
+        if remat:
+            block_body = jax.checkpoint(block_body, prevent_cse=False)
+        (x,), _ = jax.lax.scan(block_body, (x,), params["blocks"])
+        if cfg.num_tail_layers:
+            def tail_body(carry, lp):
+                x, = carry
+                x = _rec_block_seq(lp, x, cfg)
+                x = _mlp_block_seq(lp, x, cfg)
+                return (x,), None
+            if remat:
+                tail_body = jax.checkpoint(tail_body, prevent_cse=False)
+            (x,), _ = jax.lax.scan(tail_body, (x,), params["tail"])
+        return _lm_logits(params, cfg, x), ZERO_AUX
+
+    # dense / moe / vlm
+    if cfg.is_moe:
+        def body(carry, lp):
+            x, lb, z = carry
+            lp = maybe_gather_params(lp)
+            x = _attn_block_seq(lp, x, cfg, positions, window)
+            x, aux = _moe_block_seq(lp, x, cfg)
+            return (x, lb + aux.moe_lb, z + aux.moe_z), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, lb, z), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), F32), jnp.zeros((), F32)), params["layers"])
+        aux = Aux(lb / cfg.num_layers, z / cfg.num_layers)
+    else:
+        def body(carry, lp):
+            x, = carry
+            lp = maybe_gather_params(lp)
+            x = _attn_block_seq(lp, x, cfg, positions, window)
+            x = _mlp_block_seq(lp, x, cfg)
+            return (x,), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+        aux = ZERO_AUX
+    return _lm_logits(params, cfg, x), aux
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+def attn_cache_len(cfg: ModelConfig, seq_len: int, *, local: bool = False) -> int:
+    if local:
+        return min(cfg.local_attn_window, seq_len)
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Decode cache sized for ``seq_len`` context."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    cache: Dict[str, Any] = {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.family == "ssm":
+        st = rwkv6.rwkv_state_init(cfg, batch)
+        L = cfg.num_layers
+        cache.update(
+            wkv=jnp.tile(st["wkv"][None], (L, 1, 1, 1, 1)),
+            tm_shift=jnp.zeros((L, batch, cfg.d_model), F32),
+            cm_shift=jnp.zeros((L, batch, cfg.d_model), F32),
+        )
+        return cache
+    if cfg.family == "hybrid":
+        nb = cfg.num_pattern_blocks
+        W = attn_cache_len(cfg, seq_len, local=True)
+        n_rec_per_block = sum(1 for k in cfg.block_pattern if k != "attn")
+        cache.update(
+            attn_k=jnp.zeros((nb, batch, W, KV, hd), dtype),
+            attn_v=jnp.zeros((nb, batch, W, KV, hd), dtype),
+            rec_h=jnp.zeros((nb, n_rec_per_block, batch, cfg.lru_width), F32),
+            rec_conv=jnp.zeros(
+                (nb, n_rec_per_block, batch, rglru.CONV_WIDTH - 1, cfg.lru_width), F32),
+        )
+        if cfg.num_tail_layers:
+            cache.update(
+                tail_h=jnp.zeros((cfg.num_tail_layers, batch, cfg.lru_width), F32),
+                tail_conv=jnp.zeros(
+                    (cfg.num_tail_layers, batch, rglru.CONV_WIDTH - 1, cfg.lru_width), F32),
+            )
+        return cache
+    S = attn_cache_len(cfg, seq_len)
+    L = cfg.num_layers
+    cache.update(
+        k=jnp.zeros((L, batch, S, KV, hd), dtype),
+        v=jnp.zeros((L, batch, S, KV, hd), dtype),
+    )
+    return cache
+
+
+def _annotate_cache_kv(k):
+    # [L?, B, S, KV, hd]: batch over data, cache seq over model (context parallel)
+    if k.ndim == 5:
+        return annotate(k, "stack", "batch", "kv_seq", "kv_heads", None)
+    return annotate(k, "batch", "kv_seq", "kv_heads", None)
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def _ring_pack(full, W):
+    """Pack the last W entries of full [B, S, ...] into ring-slot order."""
+    S = full.shape[1]
+    if S <= W:
+        pad = [(0, 0)] * full.ndim
+        pad[1] = (0, W - S)
+        return jnp.pad(full, pad)
+    last = full[:, S - W:]                       # positions S-W .. S-1
+    slots = (jnp.arange(S - W, S)) % W
+    out = jnp.zeros(full.shape[:1] + (W,) + full.shape[2:], full.dtype)
+    return out.at[:, slots].set(last)
+
+
+def prefill(params, batch, cfg: ModelConfig, *, cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Run the full prompt, return (last-token logits [B, V], cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        x = _inject_image(params, cfg, x, batch["image_embeds"])
+    x = _res_annotate(x)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = init_cache(cfg, B, cache_len, cache_dtype)
+    # per-sequence true prompt lengths (right-padded prompts; causal masking
+    # keeps pads out of real-token attention, decode masks by length)
+    lengths = batch.get("prompt_lengths",
+                        jnp.full((B,), S, jnp.int32)).astype(jnp.int32)
+
+    def attn_with_cache(lp, x, window, cache_W):
+        """Returns (x_out, packed k, packed v) for the decode cache."""
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(lp["attn"], h, qk_norm=cfg.qk_norm,
+                              norm_eps=cfg.norm_eps)
+        q = apply_rope_wrap(q, positions, cfg)
+        k = apply_rope_wrap(k, positions, cfg)
+        o = blockwise_attention(
+            q, k, v, causal=True, window=window,
+            chunk=ATTN_CHUNK, logit_cap=cfg.attn_logit_softcap)
+        x = _res_annotate(x + project_out(lp["attn"], o))
+        kc = _ring_pack(k, cache_W).astype(cache_dtype)
+        vc = _ring_pack(v, cache_W).astype(cache_dtype)
+        return x, _annotate_cache_kv(kc), _annotate_cache_kv(vc)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            x, = carry
+            x, st = _rwkv_layer_seq(lp, x, cfg, return_state=True)
+            return (x,), st
+        (x,), states = jax.lax.scan(body, (x,), params["layers"])
+        cache.update(wkv=states["wkv"], tm_shift=states["tm_shift"],
+                     cm_shift=states["cm_shift"])
+    elif cfg.family == "hybrid":
+        W = attn_cache_len(cfg, cache_len, local=True)
+
+        def block_body(carry, bp):
+            x, = carry
+            ks, vs, hs, convs = [], [], [], []
+            for i, kind in enumerate(cfg.block_pattern):
+                lp = bp[f"l{i}"]
+                if kind == "attn":
+                    x, kc, vc = attn_with_cache(lp, x, cfg.local_attn_window, W)
+                    ks.append(kc); vs.append(vc)
+                else:
+                    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                    y, st = rglru.recurrent_block_apply(lp["rec"], h,
+                                                        return_state=True)
+                    x = _res_annotate(x + y)
+                    hs.append(st["h"]); convs.append(st["conv"])
+                x = _mlp_block_seq(lp, x, cfg)
+            ys = {
+                "attn_k": jnp.stack(ks, 0)[0] if len(ks) == 1 else jnp.stack(ks, 0),
+                "attn_v": jnp.stack(vs, 0)[0] if len(vs) == 1 else jnp.stack(vs, 0),
+                "rec_h": jnp.stack(hs, 0),
+                "rec_conv": jnp.stack(convs, 0),
+            }
+            return (x,), ys
+
+        (x,), ys = jax.lax.scan(block_body, (x,), params["blocks"])
+        cache.update(attn_k=ys["attn_k"], attn_v=ys["attn_v"],
+                     rec_h=ys["rec_h"], rec_conv=ys["rec_conv"])
+        if cfg.num_tail_layers:
+            def tail_body(carry, lp):
+                x, = carry
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                y, st = rglru.recurrent_block_apply(lp["rec"], h,
+                                                    return_state=True)
+                x = _res_annotate(x + y)
+                x = _mlp_block_seq(lp, x, cfg)
+                return (x,), st
+            (x,), sts = jax.lax.scan(tail_body, (x,), params["tail"])
+            cache.update(tail_h=sts["h"], tail_conv=sts["conv"])
+    else:
+        W = attn_cache_len(cfg, cache_len)
+        window = cfg.sliding_window
+
+        if cfg.is_moe:
+            def body(carry, lp):
+                x, lb, z = carry
+                x, kc, vc = attn_with_cache(lp, x, window, W)
+                x, aux = _moe_block_seq(lp, x, cfg)
+                return (x, lb + aux.moe_lb, z + aux.moe_z), (kc, vc)
+            (x, _, _), (ks, vs) = jax.lax.scan(
+                body, (x, jnp.zeros((), F32), jnp.zeros((), F32)),
+                params["layers"])
+        else:
+            def body(carry, lp):
+                x, = carry
+                x, kc, vc = attn_with_cache(lp, x, window, W)
+                x = _mlp_block_seq(lp, x, cfg)
+                return (x,), (kc, vc)
+            (x,), (ks, vs) = jax.lax.scan(body, (x,), params["layers"])
+        cache.update(k=ks, v=vs)
+
+    cache["lengths"] = lengths
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    logits = _lm_logits(params, cfg, last)
+    return logits, cache
+
+
+# ===========================================================================
+# decode step
+# ===========================================================================
+
+def _attn_decode(lp, x_t, k_cache, v_cache, lengths, cfg, *, ring_window):
+    """x_t [B, d]; k/v_cache [B, W, KV, hd]. Returns (y, k_cache, v_cache)."""
+    B = x_t.shape[0]
+    h = rms_norm(x_t[:, None], lp["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(lp["attn"], h, qk_norm=cfg.qk_norm,
+                          norm_eps=cfg.norm_eps)
+    pos = lengths[:, None]
+    q = apply_rope_wrap(q, pos, cfg)
+    k = apply_rope_wrap(k, pos, cfg)
+    ring = ring_window is not None
+    k_cache, v_cache = cache_write(k_cache, v_cache, k[:, 0], v[:, 0],
+                                   lengths, ring=ring)
+    k_cache = _annotate_cache_kv(k_cache)
+    v_cache = _annotate_cache_kv(v_cache)
+    if ring:
+        kv_pos = ring_positions(lengths + 1, k_cache.shape[1])
+        o = decode_attention(q[:, 0], k_cache, v_cache, lengths=lengths + 1,
+                             kv_positions=kv_pos,
+                             logit_cap=cfg.attn_logit_softcap)
+    else:
+        o = decode_attention(q[:, 0], k_cache, v_cache, lengths=lengths + 1,
+                             logit_cap=cfg.attn_logit_softcap)
+    y = project_out(lp["attn"], o[:, None])[:, 0]
+    return x_t + y, k_cache, v_cache
+
+
+def _mlp_decode(lp, x_t, cfg):
+    h = rms_norm(x_t[:, None], lp["ln2"], cfg.norm_eps)
+    return x_t + mlp_apply(lp["mlp"], h)[:, 0]
+
+
+def _moe_decode(lp, x_t, cfg):
+    h = rms_norm(x_t[:, None], lp["ln2"], cfg.norm_eps)
+    y, _ = moe_apply(lp["moe"], h, cfg)
+    return x_t + y[:, 0]
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens [B] -> (logits [B, V_padded] f32, updated cache)."""
+    lengths = cache["lengths"]
+    x = _embed_tokens(params, cfg, tokens[:, None])[:, 0]
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            lp, wkv, tms, cms = xs
+            h = rms_norm(x[:, None], lp["ln1"], cfg.norm_eps)[:, 0]
+            y, tm_new = rwkv6.time_mix_step(
+                lp["tm"], h, {"wkv": wkv, "shift": tms}, cfg)
+            x = x + y
+            h2 = rms_norm(x[:, None], lp["ln2"], cfg.norm_eps)[:, 0]
+            y2, cm_new = rwkv6.channel_mix_step(lp["cm"], h2, cms)
+            x = x + y2
+            return x, (tm_new["wkv"], tm_new["shift"], cm_new)
+        x, (wkv, tms, cms) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["tm_shift"],
+                      cache["cm_shift"]))
+        cache = dict(cache, wkv=wkv, tm_shift=tms, cm_shift=cms,
+                     lengths=lengths + 1)
+        return _lm_logits(params, cfg, x), cache
+
+    if cfg.family == "hybrid":
+        rec_idx_map = [i for i, k in enumerate(cfg.block_pattern) if k != "attn"]
+
+        def block_body(x, xs):
+            bp, kc, vc, hs, convs = xs
+            ri = 0
+            new_h, new_conv = [], []
+            for i, kind in enumerate(cfg.block_pattern):
+                lp = bp[f"l{i}"]
+                if kind == "attn":
+                    x, kc, vc = _attn_decode(
+                        lp, x, kc, vc, lengths, cfg,
+                        ring_window=cfg.local_attn_window)
+                else:
+                    h = rms_norm(x[:, None], lp["ln1"], cfg.norm_eps)[:, 0]
+                    y, st = rglru.recurrent_block_step(
+                        lp["rec"], h, {"h": hs[ri], "conv": convs[ri]})
+                    x = x + y
+                    new_h.append(st["h"]); new_conv.append(st["conv"])
+                    ri += 1
+                x = _mlp_decode(lp, x, cfg)
+            return x, (kc, vc, jnp.stack(new_h, 0), jnp.stack(new_conv, 0))
+
+        x, (kc, vc, hs, convs) = jax.lax.scan(
+            block_body, x,
+            (params["blocks"], cache["attn_k"], cache["attn_v"],
+             cache["rec_h"], cache["rec_conv"]))
+        cache = dict(cache, attn_k=kc, attn_v=vc, rec_h=hs, rec_conv=convs)
+        if cfg.num_tail_layers:
+            def tail_body(x, xs):
+                lp, h0, c0 = xs
+                h = rms_norm(x[:, None], lp["ln1"], cfg.norm_eps)[:, 0]
+                y, st = rglru.recurrent_block_step(lp["rec"], h,
+                                                   {"h": h0, "conv": c0})
+                x = x + y
+                x = _mlp_decode(lp, x, cfg)
+                return x, (st["h"], st["conv"])
+            x, (th, tc) = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail_h"], cache["tail_conv"]))
+            cache = dict(cache, tail_h=th, tail_conv=tc)
+        cache["lengths"] = lengths + 1
+        return _lm_logits(params, cfg, x), cache
+
+    ring_window = cfg.sliding_window if (
+        cfg.sliding_window is not None
+        and cache["k"].shape[2] == cfg.sliding_window) else None
+
+    from repro import flags
+    if flags.enabled("carry_cache"):
+        # The KV cache rides in the scan CARRY (updated in place with
+        # dynamic_update_slice) rather than as xs->ys streams: carried
+        # buffers alias through XLA while loops, so the multi-GiB cache
+        # exists exactly once instead of as separate input/output stacks
+        # (§Perf H3 iter 2: llama3-405b decode temps 25.8 -> 7.7 GiB).
+        uniform = flags.enabled("uniform_decode") and ring_window is None
+
+        def body(carry, xs):
+            x, kc_all, vc_all = carry
+            lp, i = xs
+            if uniform:
+                # lockstep decode: ONE single-level dus touches
+                # [1, B, 1, KV, hd] of the full carry — no slice-sized
+                # write-back (§Perf H3 iter 3b)
+                h = rms_norm(x[:, None], lp["ln1"], cfg.norm_eps)
+                q, k, v = project_qkv(lp["attn"], h, qk_norm=cfg.qk_norm,
+                                      norm_eps=cfg.norm_eps)
+                pos = lengths[:, None]
+                q = apply_rope_wrap(q, pos, cfg)
+                k = apply_rope_wrap(k, pos, cfg)
+                kc_all = jax.lax.dynamic_update_slice(
+                    kc_all, k.astype(kc_all.dtype)[None],
+                    (i, 0, lengths[0], 0, 0))
+                vc_all = jax.lax.dynamic_update_slice(
+                    vc_all, v.astype(vc_all.dtype)[None],
+                    (i, 0, lengths[0], 0, 0))
+                kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, False)
+                vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, False)
+                kc = _annotate_cache_kv(kc)
+                vc = _annotate_cache_kv(vc)
+                o = decode_attention(q[:, 0], kc, vc, lengths=lengths + 1,
+                                     logit_cap=cfg.attn_logit_softcap)
+                x = x + project_out(lp["attn"], o[:, None])[:, 0]
+            else:
+                kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, False)
+                vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, False)
+                x, kc, vc = _attn_decode(lp, x, kc, vc, lengths, cfg,
+                                         ring_window=ring_window)
+                kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+                vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+            x = (_moe_decode(lp, x, cfg) if cfg.is_moe
+                 else _mlp_decode(lp, x, cfg))
+            return (x, kc_all, vc_all), None
+
+        (x, kc, vc), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.num_layers)))
+        cache = dict(cache, k=kc, v=vc, lengths=lengths + 1)
+        return _lm_logits(params, cfg, x), cache
+
+    # baseline: cache streamed through xs/ys
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = _attn_decode(lp, x, kc, vc, lengths, cfg,
+                                 ring_window=ring_window)
+        x = _moe_decode(lp, x, cfg) if cfg.is_moe else _mlp_decode(lp, x, cfg)
+        return x, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    cache = dict(cache, k=kc, v=vc, lengths=lengths + 1)
+    return _lm_logits(params, cfg, x), cache

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationEngine, GenerationResult
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SchedulerStats
+from repro.serving.sampling import sample, mask_padded_vocab

@@ -1,0 +1,199 @@
+"""Generation engine: compiled prefill + batched decode with slot management.
+
+The engine owns a fixed-capacity decode batch (``max_batch`` slots, each
+with a ``max_seq`` cache). Requests are prefetched one at a time (prompt
+padded to a power-of-two bucket so the number of compiled prefill programs
+stays small) and *inserted* into a free slot of the running batch cache —
+the mechanism continuous batching (scheduler.py) is built on.
+
+All hot functions are jitted once per (bucket) shape:
+- ``_prefill_one``: prompt [1, bucket] -> (last logits, single-slot cache)
+- ``_insert``: copy a single-slot cache into slot ``i`` of the batch cache
+- ``_decode``: one step for all slots (+ sampling), inactive slots masked
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.sampling import sample
+
+F32 = jnp.float32
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[int]
+    prompt_len: int
+    steps: int
+    finished: bool
+    latency_s: float = 0.0
+
+
+class GenerationEngine:
+    """Single-host serving engine for one model asset."""
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, eos_id: Optional[int] = None,
+                 extra_inputs: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        # static per-request extra inputs (e.g. image embeds builder)
+        self.extra_inputs = extra_inputs or {}
+
+        self._cache = model.init_cache(max_batch, max_seq)
+        self._lengths = np.zeros((max_batch,), np.int32)
+        self._active = np.zeros((max_batch,), bool)
+
+        self._prefill_jit: Dict[int, Any] = {}
+        self._decode = jax.jit(self._decode_impl)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # -- jitted internals ---------------------------------------------------
+
+    def _prefill_impl(self, params, batch):
+        return self.model.prefill(params, batch, cache_len=self.max_seq)
+
+    def _insert_impl(self, batch_cache, one_cache, slot):
+        """Copy a B=1 cache into slot ``slot`` of the batch cache.
+
+        The batch axis of each leaf is located structurally: the first axis
+        where the source is 1 and the destination is ``max_batch``. (Leading
+        layer-stack dims match between src and dst, so they never trigger.)
+        """
+        def put(dst, src):
+            if dst.ndim == 1:                       # lengths [B]
+                return dst.at[slot].set(src[0])
+            for ax in range(dst.ndim):
+                if src.shape[ax] == 1 and dst.shape[ax] == self.max_batch:
+                    idx = (slice(None),) * ax + (slot,)
+                    return dst.at[idx].set(jnp.squeeze(src, ax))
+            return dst
+        return jax.tree.map(put, batch_cache, one_cache)
+
+    def _decode_impl(self, params, cache, tokens, rng, temperature, active):
+        logits, cache = self.model.decode_step(params, cache, tokens)
+        greedy = jnp.argmax(
+            jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
+                      logits, -1e9), axis=-1).astype(jnp.int32)
+        sampled = sample(logits, rng, temperature=1.0,
+                         logical_vocab=self.cfg.vocab_size)
+        use_sampled = temperature > 0
+        nxt = jnp.where(use_sampled, sampled, greedy)
+        nxt = jnp.where(active, nxt, 0)
+        return nxt, cache
+
+    # -- public API ------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.max_batch) if not self._active[i]]
+
+    def insert_request(self, prompt: List[int], slot: int,
+                       extra: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
+        """Prefill ``prompt`` and place it into ``slot``. Returns last logits."""
+        assert not self._active[slot], f"slot {slot} busy"
+        bucket = _bucket(len(prompt))
+        if bucket > self.max_seq:
+            raise ValueError(f"prompt {len(prompt)} exceeds max_seq {self.max_seq}")
+        if bucket not in self._prefill_jit:
+            self._prefill_jit[bucket] = jax.jit(self._prefill_impl)
+        # Ring-cache families (sliding-window / hybrid local attention) need
+        # contiguous positions, so their prompts are LEFT-padded and pads are
+        # treated as context. Linear caches RIGHT-pad; causal masking keeps
+        # pads out of real-token attention and decode masks by true length.
+        # (SSM states are cumulative too, so stateful families all left-pad.)
+        ring = (self.cfg.family in ("hybrid", "ssm")
+                or self.cfg.sliding_window is not None)
+        padded = np.zeros((1, bucket), np.int32)
+        if ring:
+            padded[0, bucket - len(prompt):] = prompt
+            true_len = bucket
+        else:
+            padded[0, :len(prompt)] = prompt
+            true_len = len(prompt)
+        batch = {"tokens": jnp.asarray(padded),
+                 "prompt_lengths": jnp.asarray([true_len], np.int32)}
+        for k, v in (extra or self.extra_inputs).items():
+            batch[k] = v
+        logits, one_cache = self._prefill_jit[bucket](self.params, batch)
+        self._cache = self._insert(self._cache, one_cache,
+                                   jnp.asarray(slot, jnp.int32))
+        self._lengths[slot] = true_len
+        self._active[slot] = True
+        return logits
+
+    def release_slot(self, slot: int):
+        self._active[slot] = False
+
+    def step(self, tokens: np.ndarray, rng, temperature: float = 0.0):
+        """One decode step for the whole batch. tokens [max_batch] int32."""
+        active = jnp.asarray(self._active)
+        nxt, self._cache = self._decode(
+            self.params, self._cache, jnp.asarray(tokens, jnp.int32), rng,
+            jnp.asarray(temperature, F32), active)
+        self._lengths[self._active] += 1
+        return np.asarray(nxt)
+
+    # -- convenience: synchronous batch generation ------------------------------
+
+    def generate(self, prompts: List[List[int]], *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 extras: Optional[List[Dict[str, Any]]] = None,
+                 ) -> List[GenerationResult]:
+        """Generate for up to ``max_batch`` prompts at once (convenience path;
+        the scheduler drives the slot API directly for continuous batching)."""
+        assert len(prompts) <= self.max_batch
+        t0 = time.perf_counter()
+        rng = jax.random.PRNGKey(seed)
+        last_tok = np.zeros((self.max_batch,), np.int32)
+        outs: List[List[int]] = [[] for _ in prompts]
+        for i, p in enumerate(prompts):
+            logits = self.insert_request(
+                p, i, extra=extras[i] if extras else None)
+            first = int(np.asarray(jnp.argmax(
+                jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
+                          logits[0], -1e9))))
+            outs[i].append(first)
+            last_tok[i] = first
+        done = [False] * len(prompts)
+        for step in range(max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            nxt = self.step(last_tok, sub, temperature)
+            for i in range(len(prompts)):
+                if done[i]:
+                    continue
+                tok = int(nxt[i])
+                outs[i].append(tok)
+                last_tok[i] = tok
+                if self.eos_id is not None and tok == self.eos_id:
+                    done[i] = True
+            if all(done):
+                break
+        dt = time.perf_counter() - t0
+        results = []
+        for i, p in enumerate(prompts):
+            results.append(GenerationResult(
+                tokens=outs[i], prompt_len=len(p), steps=len(outs[i]),
+                finished=bool(done[i]) if self.eos_id is not None else True,
+                latency_s=dt))
+            self.release_slot(i)
+        return results

@@ -1,0 +1,30 @@
+"""Token sampling from logits: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def mask_padded_vocab(logits, logical_vocab: int):
+    V = logits.shape[-1]
+    if V == logical_vocab:
+        return logits
+    col = jnp.arange(V) < logical_vocab
+    return jnp.where(col, logits, -1e9)
+
+
+def sample(logits, rng, *, temperature: float = 0.0, top_k: int = 0,
+           logical_vocab: int | None = None):
+    """logits [B, V] -> tokens [B]. temperature==0 -> greedy."""
+    if logical_vocab is not None:
+        logits = mask_padded_vocab(logits, logical_vocab)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e9, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

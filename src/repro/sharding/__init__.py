@@ -1,0 +1,6 @@
+from repro.sharding.context import (
+    LogicalRules, annotate, use_rules, current_rules,
+)
+from repro.sharding.specs import (
+    param_specs, batch_specs, cache_specs_tree, logical_to_spec,
+)

@@ -1,0 +1,118 @@
+"""Logical-axis sharding annotations.
+
+Model code names tensor dims with *logical* axes (``"batch"``, ``"heads"``,
+``"ff"``, ...). A :class:`LogicalRules` context maps logical axes to mesh
+axes and applies ``with_sharding_constraint`` — with a divisibility check,
+so e.g. MiniCPM's 36 heads silently fall back to replicated on a 16-way
+``model`` axis instead of erroring (recorded via ``rules.fallbacks``).
+
+Outside any context (unit tests, CPU smoke runs) ``annotate`` is a no-op,
+so model code is runnable on one device unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),      # pod composes with data when present
+    "act_seq": "model",            # sequence-parallel residual stream
+    "kv_seq": "model",             # decode-time context-parallel KV cache
+    "heads": "model",
+    "kv_heads": None,              # replicated (GQA groups < 16 in general)
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "embed": None,                 # d_model replicated in activations
+    "fsdp": "data",                # parameter FSDP dim
+    "lru": "model",
+    "stack": None,                 # layer-stack dim of scanned params
+    "capacity": None,
+    "conv": None,
+    "head_dim": None,
+    "enc_seq": None,
+}
+
+
+class LogicalRules:
+    def __init__(self, mesh: Mesh, overrides: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+        if "pod" not in mesh.axis_names:
+            # single-pod mesh: drop the pod component from composite rules
+            for k, v in list(self.rules.items()):
+                if isinstance(v, tuple):
+                    kept = tuple(a for a in v if a in mesh.axis_names)
+                    self.rules[k] = kept if kept else None
+        self.fallbacks: list[str] = []
+
+    def _axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        for a in mesh_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             dim_sizes: Optional[Sequence[int]] = None) -> P:
+        parts = []
+        for i, name in enumerate(logical_axes):
+            if name is None:
+                parts.append(None)
+                continue
+            mesh_axes = self.rules.get(name)
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            if dim_sizes is not None:
+                size = self._axis_size(mesh_axes)
+                if dim_sizes[i] % size != 0:
+                    self.fallbacks.append(
+                        f"{name}:{dim_sizes[i]}%{size}!=0 -> replicated")
+                    parts.append(None)
+                    continue
+            parts.append(mesh_axes)
+        return P(*parts)
+
+    def sharding(self, logical_axes, dim_sizes=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, dim_sizes))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def annotate(x, *logical_axes):
+    """Attach a sharding constraint if a rules context is active."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (
+        f"annotate: {len(logical_axes)} axes for rank-{x.ndim} tensor")
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamW, AdamWState, adamw
+from repro.training.schedule import make_schedule, warmup_cosine, wsd
+from repro.training.trainer import TrainState, init_train_state, make_train_step
+from repro.training.data import DataConfig, batches
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint

@@ -1,0 +1,86 @@
+"""Checkpointing: pytree <-> .npz with path-flattened keys + JSON manifest.
+
+Host-gathered (fine for CPU tests and the demo assets; a pod deployment
+would stream shards — the layout here keeps one array per flattened path
+so a sharded writer is a drop-in change).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat: Dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for k in path:
+            if isinstance(k, jax.tree_util.DictKey):
+                keys.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        flat[_SEP.join(keys)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
+                    extra: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {
+        "step": step,
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    mpath = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_checkpoint(path: str, like) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    mpath = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    manifest = {}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    flat_like = _flatten_paths(like)
+    leaves = []
+    for key, ref in flat_like:
+        if key not in npz:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = npz[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, manifest
+
+
+def _flatten_paths(tree):
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for k in path:
+            if isinstance(k, jax.tree_util.DictKey):
+                keys.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        out.append((_SEP.join(keys), leaf))
+    return out

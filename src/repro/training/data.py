@@ -1,0 +1,97 @@
+"""Data pipeline: token sources, sequence packing, batching.
+
+Offline container -> the default source is a seeded synthetic corpus
+(Zipfian token stream with local n-gram structure so a model can actually
+reduce loss on it); a file-backed source reads raw bytes through the byte
+tokenizer. Documents are packed into fixed-length rows with EOS separators
+(loss masked on pads), the standard LM pipeline shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.tokenizer import TOKENIZER
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    vocab_size: int = 512
+    seed: int = 0
+    source: str = "synthetic"     # synthetic | bytes:<path>
+
+
+class SyntheticCorpus:
+    """Zipfian unigrams + order-2 structure: token ~ f(prev) half the time.
+
+    The deterministic structure means cross-entropy has real headroom below
+    the unigram entropy — training tests assert the loss drops.
+    """
+
+    def __init__(self, vocab_size: int, seed: int = 0):
+        self.vocab = vocab_size
+        self.rng = np.random.default_rng(seed)
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        self.unigram = (1 / ranks) / np.sum(1 / ranks)
+        # fixed "grammar": each token has a preferred successor
+        self.successor = self.rng.permutation(vocab_size)
+
+    def documents(self, *, mean_len: int = 64) -> Iterator[List[int]]:
+        while True:
+            n = max(4, int(self.rng.exponential(mean_len)))
+            doc = [int(self.rng.choice(self.vocab, p=self.unigram))]
+            for _ in range(n - 1):
+                if self.rng.random() < 0.5:
+                    doc.append(int(self.successor[doc[-1]]))
+                else:
+                    doc.append(int(self.rng.choice(self.vocab, p=self.unigram)))
+            yield doc
+
+
+class ByteFileCorpus:
+    def __init__(self, path: str, vocab_size: int):
+        self.path = path
+        self.vocab = vocab_size
+
+    def documents(self) -> Iterator[List[int]]:
+        with open(self.path, "rb") as f:
+            data = f.read()
+        chunk = 512
+        while True:
+            for i in range(0, max(len(data) - chunk, 1), chunk):
+                yield [b % self.vocab for b in data[i:i + chunk]]
+
+
+def pack_documents(docs: Iterator[List[int]], seq_len: int,
+                   eos_id: int = TOKENIZER.eos_id) -> Iterator[np.ndarray]:
+    """Greedy packing into rows of seq_len+1 (inputs+targets overlap)."""
+    buf: List[int] = []
+    for doc in docs:
+        buf.extend(doc)
+        buf.append(eos_id)
+        while len(buf) >= seq_len + 1:
+            yield np.asarray(buf[: seq_len + 1], np.int32)
+            buf = buf[seq_len + 1:]
+
+
+def batches(cfg: DataConfig) -> Iterator[dict]:
+    if cfg.source == "synthetic":
+        corpus = SyntheticCorpus(cfg.vocab_size, cfg.seed)
+        docs = corpus.documents()
+    elif cfg.source.startswith("bytes:"):
+        docs = ByteFileCorpus(cfg.source[6:], cfg.vocab_size).documents()
+    else:
+        raise ValueError(f"unknown source {cfg.source!r}")
+    rows = pack_documents(docs, cfg.seq_len)
+    while True:
+        stack = np.stack([next(rows) for _ in range(cfg.global_batch)])
+        yield {
+            "tokens": stack[:, :-1],
+            "targets": stack[:, 1:],
+            "loss_mask": (stack[:, 1:] != TOKENIZER.pad_id).astype(np.float32),
+        }

@@ -1,0 +1,69 @@
+"""AdamW optimizer (pure pytree implementation; no optax dependency).
+
+Moments can be kept in a reduced dtype for >70B-parameter configs (the
+dry-run memory budget on a 256-chip v5e pod) — precision tradeoff recorded
+in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32,
+          grad_clip_norm: float = 1.0) -> AdamW:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        # global grad-norm clip
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+
+        def upd(g, m, v, p):
+            g = g.astype(F32) * scale
+            m_new = b1 * m.astype(F32) + (1 - b1) * g
+            v_new = b2 * v.astype(F32) + (1 - b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(F32)
+            p_new = p.astype(F32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        params_new = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        m_new = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        v_new = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return params_new, AdamWState(step, m_new, v_new), {
+            "grad_norm": gnorm, "lr": lr}
+
+    return AdamW(init, update)

@@ -1,0 +1,50 @@
+"""LR schedules: linear-warmup cosine, and WSD (warmup-stable-decay).
+
+WSD is MiniCPM's schedule (arXiv:2404.06395): warmup -> long stable plateau
+-> short (10%) exponential-ish decay. Implemented as pure functions of the
+step (safe inside jit).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, F32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    progress = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    progress = jnp.clip(progress, 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> short decay (last ``decay_frac``)."""
+    step = jnp.asarray(step, F32)
+    decay_steps = jnp.maximum(total_steps * decay_frac, 1.0)
+    decay_start = total_steps - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    # exponential decay from peak to final_frac*peak across the decay window
+    t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * t)
+    lr = jnp.where(step < warmup_steps, warm,
+                   jnp.where(step < decay_start, peak_lr, dec))
+    return lr
+
+
+def make_schedule(name: str, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int):
+    if name == "cosine":
+        return lambda s: warmup_cosine(s, peak_lr=peak_lr,
+                                       warmup_steps=warmup_steps,
+                                       total_steps=total_steps)
+    if name == "wsd":
+        return lambda s: wsd(s, peak_lr=peak_lr, warmup_steps=warmup_steps,
+                             total_steps=total_steps)
+    raise ValueError(f"unknown schedule {name!r}")

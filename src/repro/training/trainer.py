@@ -1,0 +1,89 @@
+"""Train step assembly: grad accumulation (microbatching), metrics, state.
+
+``make_train_step(model, opt, num_microbatches)`` returns a pure
+``train_step(state, batch) -> (state, metrics)`` suitable for ``jax.jit``
+or pjit. Microbatching reshapes the global batch to
+``[num_micro, micro, ...]`` and accumulates grads with ``lax.scan`` —
+the standard memory lever for the 100B+ configs on the dry-run mesh
+(activations live only per-microbatch; remat inside the model bounds them
+further).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamW, AdamWState
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+
+
+def init_train_state(model: Model, opt: AdamW, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params, opt.init(params))
+
+
+def make_train_step(model: Model, opt: AdamW, *, num_microbatches: int = 1,
+                    accum_dtype=F32):
+    """``accum_dtype=bf16`` halves gradient-accumulation memory and (when
+    the backend lowers grad reductions as full all-reduces) collective
+    bytes — used for the >=60B configs (§Perf H2 iter 4)."""
+    loss_fn = model.loss
+
+    def grads_for(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if accum_dtype != F32:
+            # cast at the source so the convert can sink below the gradient
+            # cross-shard reduction (halves its wire bytes)
+            grads = jax.tree.map(lambda g: g.astype(accum_dtype), grads)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        if num_microbatches == 1:
+            grads, metrics = grads_for(state.params, batch)
+        else:
+            def split(x):
+                n = num_microbatches
+                assert x.shape[0] % n == 0, (
+                    f"global batch {x.shape[0]} not divisible by {n} microbatches")
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            from repro.sharding.specs import shard_like_params
+
+            def body(carry, mb):
+                acc, _ = carry
+                g, m = grads_for(state.params, mb)
+                acc = shard_like_params(jax.tree.map(
+                    lambda a, gi: a + gi.astype(accum_dtype), acc, g))
+                return (acc, m), None
+
+            zeros = shard_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                             state.params))
+            dummy_metrics = {
+                "ce": jnp.zeros((), F32), "loss": jnp.zeros((), F32)}
+            if model.cfg.is_moe:
+                dummy_metrics.update(moe_lb=jnp.zeros((), F32),
+                                     moe_z=jnp.zeros((), F32))
+            (grads, metrics), _ = jax.lax.scan(
+                body, (zeros, dummy_metrics), micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+
+        params, opt_state, opt_metrics = opt.update(
+            grads, state.opt_state, state.params)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params, opt_state), metrics
+
+    return train_step

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real single CPU
+# device (the dry-run forces 512 devices in its own process only).
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def nprng():
+    return np.random.default_rng(0)

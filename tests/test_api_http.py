@@ -1,0 +1,109 @@
+"""HTTP API integration: real localhost server round-trips, and the paper's
+central claim — swapping the underlying model requires ZERO client change."""
+
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.core import MAXServer
+
+BUILD_KW = {"max_seq": 64, "max_batch": 2}
+
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw=BUILD_KW) as s:
+        yield s
+
+
+def _get(server, path):
+    with urllib.request.urlopen(server.url + path) as r:
+        return r.status, json.loads(r.read())
+
+
+def _post(server, path, payload):
+    req = urllib.request.Request(
+        server.url + path, json.dumps(payload).encode(),
+        {"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_root_and_models(server):
+    code, root = _get(server, "/")
+    assert code == 200 and root["assets"] >= 12
+    code, models = _get(server, "/models")
+    ids = {m["id"] for m in models["models"]}
+    assert "llama3-405b" in ids and "max-sentiment" in ids
+    for m in models["models"]:
+        assert {"id", "name", "type", "license", "framework"} <= set(m)
+
+
+def test_metadata_endpoint(server):
+    code, meta = _get(server, "/model/rwkv6-7b/metadata")
+    assert code == 200
+    assert meta["framework"] == "jax"
+    assert "2404.05892" in meta["source"]
+
+
+def test_predict_standardized_envelope(server):
+    code, env = _post(server, "/model/max-sentiment/predict",
+                      {"input": ["good", "bad"]})
+    assert code == 200
+    assert env["status"] == "ok"
+    assert len(env["predictions"]) == 2
+    assert set(env["predictions"][0][0]) == {"positive", "negative"}
+
+
+def test_model_swap_zero_client_change(server):
+    """One client function, N models — the MAX value proposition."""
+    def client(model_id):
+        code, env = _post(server, f"/model/{model_id}/predict",
+                          {"input": {"text": "hello", "max_new_tokens": 3}})
+        assert code == 200 and env["status"] == "ok"
+        return env["predictions"][0]["generated_text"]
+
+    for model_id in ("qwen3-4b", "rwkv6-7b", "recurrentgemma-9b",
+                     "minicpm-2b"):
+        out = client(model_id)          # identical client code per model
+        assert isinstance(out, str)
+
+
+def test_labels_endpoint(server):
+    code, labels = _get(server, "/model/max-sentiment/labels")
+    assert code == 200 and labels["labels"] == ["positive", "negative"]
+
+
+def test_swagger_covers_every_asset(server):
+    code, sw = _get(server, "/swagger.json")
+    assert code == 200 and sw["openapi"].startswith("3.")
+    for m in _get(server, "/models")[1]["models"]:
+        assert f"/model/{m['id']}/predict" in sw["paths"]
+
+
+def test_unknown_model_404(server):
+    code, env = _post(server, "/model/nope/predict", {"input": "x"})
+    assert code == 404 and env["status"] == "error"
+
+
+def test_bad_input_is_client_error_not_crash(server):
+    code, env = _post(server, "/model/qwen3-4b/predict",
+                      {"input": {"no_text_key": 1}})
+    assert code == 400 and env["status"] == "error"
+    # server still alive
+    assert _get(server, "/health")[0] == 200
+
+
+def test_health_reports_deployments(server):
+    _post(server, "/model/max-caption/predict",
+          {"input": {"image_id": 1, "max_new_tokens": 2}})
+    code, health = _get(server, "/health")
+    assert code == 200
+    dep = health["deployments"]["max-caption"]
+    assert dep["requests"] >= 1

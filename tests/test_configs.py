@@ -1,0 +1,75 @@
+"""Config system: validation, param counts vs model names, smoke reduction."""
+
+import pytest
+
+from repro.configs import ASSIGNED, CONFIGS, applicable_shapes, get_config
+from repro.configs.base import reduce_for_smoke
+from repro.configs.shapes import SHAPES, get_shape
+
+
+def test_ten_assigned_archs():
+    assert len(ASSIGNED) == 10
+    families = {c.family for c in ASSIGNED.values()}
+    assert families == {"dense", "moe", "hybrid", "ssm", "audio", "vlm"}
+
+
+def test_four_shapes():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert get_shape("train_4k").kind == "train"
+    assert get_shape("long_500k").kind == "decode"
+    assert get_shape("long_500k").seq_len == 524_288
+
+
+# param counts must land near the model-name scale
+@pytest.mark.parametrize("name,total_b,active_b", [
+    ("qwen3-moe-235b-a22b", 235, 22),
+    ("llama3-405b", 405, 405),
+    ("phi3.5-moe-42b-a6.6b", 42, 6.6),
+    ("deepseek-67b", 67, 67),
+    ("minicpm-2b", 2.7, 2.7),
+    ("recurrentgemma-9b", 9, 9),
+    ("whisper-large-v3", 2, 2),
+    ("qwen3-4b", 4, 4),
+    ("internvl2-2b", 2, 2),
+    ("rwkv6-7b", 7.6, 7.6),
+])
+def test_param_counts(name, total_b, active_b):
+    cfg = get_config(name)
+    assert abs(cfg.param_count() / 1e9 - total_b) / total_b < 0.2
+    assert abs(cfg.active_param_count() / 1e9 - active_b) / active_b < 0.25
+
+
+def test_vocab_padding_divisible_by_tp():
+    for cfg in CONFIGS.values():
+        assert cfg.padded_vocab_size % 16 == 0
+        assert cfg.padded_vocab_size >= cfg.vocab_size
+
+
+def test_smoke_reduction_bounds():
+    for cfg in ASSIGNED.values():
+        s = reduce_for_smoke(cfg)
+        s.validate()
+        assert s.num_layers <= 2
+        assert s.d_model <= 512
+        assert s.num_experts <= 4
+        assert s.family == cfg.family
+
+
+def test_long_context_applicability():
+    runs = {n for n, c in ASSIGNED.items()
+            if applicable_shapes(c)["long_500k"]}
+    assert runs == {"recurrentgemma-9b", "rwkv6-7b", "qwen3-4b", "minicpm-2b"}
+
+
+def test_hybrid_pattern_covers_layers():
+    cfg = get_config("recurrentgemma-9b")
+    assert cfg.num_pattern_blocks == 12
+    assert cfg.num_tail_layers == 2
+    kinds = [cfg.layer_type(i) for i in range(cfg.num_layers)]
+    assert kinds.count("attn") == 12
+    assert kinds.count("rec") == 26
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-17")

@@ -1,0 +1,84 @@
+"""Optimization flags must be semantics-preserving (baseline == optimized),
+and the fp8 KV-cache variant must stay close to bf16."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import flags
+from repro.configs import ASSIGNED
+from repro.configs.base import reduce_for_smoke
+from repro.models import build_model
+
+
+@pytest.fixture(autouse=True)
+def _restore_flags():
+    snap = flags.snapshot()
+    yield
+    flags.set_all(**snap)
+
+
+def _decode_run(model, params, toks):
+    lg, cache = model.prefill(params, {"tokens": toks[:, :8]}, cache_len=16)
+    outs = [lg]
+    for t in range(8, 12):
+        lg, cache = model.decode_step(params, cache, toks[:, t])
+        outs.append(lg)
+    return jnp.stack(outs)
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "qwen3-moe-235b-a22b"])
+def test_carry_cache_flag_preserves_decode(name, rng):
+    cfg = reduce_for_smoke(ASSIGNED[name])
+    model = build_model(cfg, cache_dtype=jnp.float32)
+    params = model.init(rng)
+    toks = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)
+    flags.set_flag("carry_cache", True)
+    a = _decode_run(model, params, toks)
+    flags.set_flag("carry_cache", False)
+    b = _decode_run(model, params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_wkv_flag_preserves_forward(rng):
+    cfg = reduce_for_smoke(ASSIGNED["rwkv6-7b"])
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 50), 0, cfg.vocab_size)}
+    flags.set_flag("chunked_wkv", True)
+    a, _ = model.forward(params, batch)
+    flags.set_flag("chunked_wkv", False)
+    b, _ = model.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=5e-4, rtol=1e-4)
+
+
+def test_fp8_kv_cache_close_to_bf16(rng):
+    cfg = reduce_for_smoke(ASSIGNED["qwen3-4b"]).replace(sliding_window=None)
+    toks = jax.random.randint(rng, (2, 10), 0, cfg.vocab_size)
+
+    def run(dtype):
+        model = build_model(cfg, cache_dtype=dtype)
+        params = build_model(cfg).init(rng)    # same weights
+        lg, cache = model.prefill(params, {"tokens": toks[:, :6]},
+                                  cache_len=12)
+        for t in range(6, 10):
+            lg, cache = model.decode_step(params, cache, toks[:, t])
+        return lg
+
+    a = run(jnp.bfloat16)
+    b = run(jnp.float8_e4m3fn)
+    assert bool(jnp.isfinite(b).all())
+    # fp8 quantization noise stays bounded on random-weight logits
+    assert float(jnp.max(jnp.abs(a - b))) < 0.5
+
+
+def test_gather_weights_noop_without_mesh(rng):
+    """Outside a rules context the H2 gather annotation must be identity."""
+    from repro.sharding.specs import maybe_gather_params
+    flags.set_flag("gather_weights", True)
+    tree = {"mlp": {"w_gate": jnp.ones((4, 8))}}
+    out = maybe_gather_params(tree)
+    assert out["mlp"]["w_gate"] is tree["mlp"]["w_gate"]

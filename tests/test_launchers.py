@@ -1,0 +1,28 @@
+"""CLI launchers (launch/train.py, launch/serve.py) run end to end."""
+
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+       "HOME": "/root"}
+
+
+def test_train_launcher():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "max-sentiment", "--steps", "8", "--seq-len", "32",
+         "--global-batch", "4"],
+        capture_output=True, text=True, timeout=300, env=ENV)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    assert "[train] done" in proc.stdout
+    assert "loss=" in proc.stdout
+
+
+def test_serve_launcher():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--port", "0", "--deploy", "max-sentiment", "--duration", "0.5"],
+        capture_output=True, text=True, timeout=300, env=ENV)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    assert "deployed max-sentiment" in proc.stdout
+    assert "12 assets registered" in proc.stdout

@@ -1,0 +1,76 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CONFIGS
+from repro.data.tokenizer import TOKENIZER
+from repro.models.model import cross_entropy
+from repro.training.data import SyntheticCorpus, pack_documents
+from repro.training.schedule import wsd
+
+
+@given(st.text(max_size=200).map(lambda s: s.replace("\x00", "")))
+@settings(max_examples=50, deadline=None)
+def test_tokenizer_roundtrip(s):
+    # NUL doubles as pad and is dropped by decode (by design)
+    assert TOKENIZER.decode(TOKENIZER.encode(s)) == s
+
+
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_tokenizer_ids_in_vocab(ids):
+    txt = TOKENIZER.decode(ids)
+    for t in TOKENIZER.encode(txt):
+        assert 0 <= t < TOKENIZER.vocab_size
+
+
+@given(seq_len=st.integers(4, 64), n_docs=st.integers(1, 20))
+@settings(max_examples=20, deadline=None)
+def test_packing_rows_exact_length(seq_len, n_docs):
+    corpus = SyntheticCorpus(128, seed=1)
+    docs = corpus.documents(mean_len=10)
+    gen = pack_documents(
+        (next(docs) for _ in range(n_docs)), seq_len)
+    for row in gen:
+        assert row.shape == (seq_len + 1,)
+        assert row.dtype == np.int32
+
+
+@given(B=st.integers(1, 4), S=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_cross_entropy_vs_manual(B, S):
+    cfg = CONFIGS["max-sentiment"]
+    rng = np.random.default_rng(B * 100 + S)
+    logits = jnp.asarray(rng.normal(size=(B, S, cfg.padded_vocab_size)),
+                         jnp.float32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    ce = cross_entropy(logits, targets, cfg)
+    # manual
+    lp = jax.nn.log_softmax(logits[..., : cfg.vocab_size], axis=-1)
+    manual = -jnp.mean(jnp.take_along_axis(lp, targets[..., None], -1))
+    np.testing.assert_allclose(float(ce), float(manual), rtol=1e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_wsd_lr_bounded(step):
+    lr = float(wsd(step, peak_lr=2.0, warmup_steps=50, total_steps=1000))
+    assert 0.0 <= lr <= 2.0
+
+
+@given(B=st.integers(1, 3), mask_frac=st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_cross_entropy_mask_zero_means_free(B, mask_frac):
+    """Fully-masked rows contribute nothing."""
+    cfg = CONFIGS["max-sentiment"]
+    rng = np.random.default_rng(0)
+    S = 6
+    logits = jnp.asarray(rng.normal(size=(B, S, cfg.padded_vocab_size)),
+                         jnp.float32)
+    targets = jnp.zeros((B, S), jnp.int32)
+    mask = jnp.zeros((B, S))
+    ce = cross_entropy(logits, targets, cfg, mask)
+    assert float(ce) == 0.0

@@ -1,0 +1,109 @@
+"""RG-LRU and RWKV6: parallel scan == sequential; decode step == scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED
+from repro.configs.base import reduce_for_smoke
+from repro.models import rglru, rwkv6
+from repro.kernels.ref import rglru_ref
+
+
+@given(B=st.integers(1, 3), S=st.integers(1, 33), W=st.sampled_from([8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_associative_scan_matches_sequential(B, S, W):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (B, S, W)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, W)), jnp.float32)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_par = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_seq = rglru_ref(a, b)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_block_step_matches_scan(rng):
+    cfg = reduce_for_smoke(ASSIGNED["recurrentgemma-9b"])
+    p = rglru.rglru_init(rng, cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    y_scan, state = rglru.recurrent_block_apply(p, x, return_state=True)
+
+    st_ = rglru.recurrent_state_init(cfg, B)
+    ys = []
+    for t in range(S):
+        y_t, st_ = rglru.recurrent_block_step(p, x[:, t], st_)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_["h"]), np.asarray(state["h"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_["conv"]),
+                               np.asarray(state["conv"]), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_decay_bounded(rng):
+    """RG-LRU is contractive: with zero input the state decays to zero."""
+    cfg = reduce_for_smoke(ASSIGNED["recurrentgemma-9b"])
+    p = rglru.rglru_init(rng, cfg, jnp.float32)
+    h = jnp.ones((1, cfg.lru_width))
+    for _ in range(50):
+        h, _ = rglru.rglru_step(p, jnp.zeros((1, cfg.lru_width)), h)
+    assert float(jnp.max(jnp.abs(h))) < 1.0
+
+
+def test_rwkv_time_mix_step_matches_scan(rng):
+    cfg = reduce_for_smoke(ASSIGNED["rwkv6-7b"])
+    p = rwkv6.rwkv_time_mix_init(rng, cfg, jnp.float32)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_scan, state = rwkv6.time_mix_apply(p, x, cfg, return_state=True)
+
+    st_ = {"wkv": jnp.zeros((B, cfg.num_heads, cfg.rwkv_head_dim,
+                             cfg.rwkv_head_dim)),
+           "shift": jnp.zeros((B, cfg.d_model))}
+    ys = []
+    for t in range(S):
+        y_t, st_ = rwkv6.time_mix_step(p, x[:, t], st_, cfg)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_["wkv"]),
+                               np.asarray(state["wkv"]), rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_channel_mix_step_matches_scan(rng):
+    cfg = reduce_for_smoke(ASSIGNED["rwkv6-7b"])
+    p = rwkv6.rwkv_channel_mix_init(rng, cfg, jnp.float32)
+    B, S = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    y_scan, last = rwkv6.channel_mix_apply(p, x, return_state=True)
+    shift = jnp.zeros((B, cfg.d_model))
+    ys = []
+    for t in range(S):
+        y_t, shift = rwkv6.channel_mix_step(p, x[:, t], shift)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_scan), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(shift), np.asarray(last),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rwkv_decay_in_unit_interval(rng):
+    """Data-dependent decay w_t = exp(-exp(d)) must lie in (0, 1)."""
+    cfg = reduce_for_smoke(ASSIGNED["rwkv6-7b"])
+    p = rwkv6.rwkv_time_mix_init(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, cfg.d_model)) * 3
+    xp = rwkv6._shift(x)
+    *_, w = rwkv6._time_mix_projections(p, x, xp, cfg)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0

@@ -1,0 +1,127 @@
+"""Sharding rules: logical->mesh mapping, divisibility fallbacks, spec trees.
+
+Uses a subprocess with 8 forced host devices for mesh-dependent checks (the
+main test process must keep the default single device).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.configs.base import reduce_for_smoke
+
+
+def test_param_rules_cover_every_leaf():
+    """Every parameter leaf of every arch resolves to a spec (possibly
+    replicated) without errors — structural coverage, no mesh needed."""
+    from repro.sharding.specs import _base_axes, _path_names
+    import jax.numpy as jnp
+    from repro.models import build_model
+
+    for name, cfg in ASSIGNED.items():
+        # full production shapes — eval_shape never allocates
+        model = build_model(cfg)
+        specs = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        sharded_bytes = total_bytes = 0
+        for path, leaf in flat:
+            axes = _base_axes(_path_names(path), leaf.shape)
+            assert len(axes) <= len(leaf.shape)
+            nbytes = leaf.size * leaf.dtype.itemsize
+            total_bytes += nbytes
+            if any(a for a in axes):
+                sharded_bytes += nbytes
+        # the bulk of parameter VOLUME must shard (small norms/loras/biases
+        # stay replicated by design)
+        frac = sharded_bytes / total_bytes
+        assert frac > 0.9, f"{name}: only {frac:.0%} of param bytes sharded"
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import ASSIGNED
+    from repro.configs.base import reduce_for_smoke
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import build_model
+    from repro.sharding import LogicalRules, use_rules
+    from repro.sharding.specs import batch_specs, param_specs
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    rules = LogicalRules(mesh)
+
+    out = {}
+    # 1) divisibility fallback: 36 heads on a 4-way model axis -> sharded
+    #    (36 % 4 == 0) but 36 on 16 would fall back; check the mechanism
+    spec = rules.spec(("batch", None, "heads", None), (8, 16, 6, 64))
+    out["heads6_on_4way"] = str(spec)     # 6 % 4 != 0 -> None
+    spec2 = rules.spec(("batch", None, "heads", None), (8, 16, 8, 64))
+    out["heads8_on_4way"] = str(spec2)
+
+    # 2) end-to-end: reduced model lowers+compiles with sharded params and
+    #    produces collectives
+    cfg = reduce_for_smoke(ASSIGNED["qwen3-4b"]).replace(
+        num_heads=8, num_kv_heads=4)
+    model = build_model(cfg, param_dtype=jnp.bfloat16)
+    p_specs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    from jax.sharding import NamedSharding
+    p_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(rules, p_specs),
+        is_leaf=lambda s: isinstance(s, P))
+    b_specs = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    b_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), batch_specs(rules, b_specs),
+        is_leaf=lambda s: isinstance(s, P))
+    with use_rules(rules), mesh:
+        lowered = jax.jit(
+            lambda p, b: model.forward(p, b)[0],
+            in_shardings=(p_shard, b_shard)).lower(p_specs, b_specs)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    out["has_collectives"] = any(
+        c in text for c in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all"))
+    out["fallbacks"] = rules.fallbacks[:5]
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def sub_result():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_divisibility_fallback(sub_result):
+    assert sub_result["heads6_on_4way"] == str(
+        __import__("jax").sharding.PartitionSpec("data", None, None, None))
+    assert "model" in sub_result["heads8_on_4way"]
+
+
+def test_sharded_model_compiles_with_collectives(sub_result):
+    assert sub_result["has_collectives"]
+
+
+def test_pod_axis_composition():
+    """Without a pod axis, composite ('pod','data') rules must degrade."""
+    from repro.sharding.context import LogicalRules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 4}
+
+    rules = LogicalRules(FakeMesh())
+    assert rules.rules["batch"] == ("data",)
