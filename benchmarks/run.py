@@ -9,6 +9,9 @@ architectural. Each benchmark below pins one of them to a number:
   fig1_deploy_latency     "container start" (build + first compile) per asset
   fig2_api_roundtrip      HTTP predict round-trip on the demo models
   serving_throughput      continuous batching vs one-request-at-a-time
+  serving_http            requests/s + p50/p95 latency through the REAL
+                          HTTP stack, sync vs batched service (also
+                          written to BENCH_serving.json for trend lines)
   kernel_<name>           Pallas kernel (interpret) vs jnp oracle allclose +
                           oracle timing (CPU container: correctness-scale)
   roofline_terms          derived from the dry-run records (see
@@ -130,6 +133,82 @@ def bench_serving_throughput():
         f"{bat.tokens_per_s / max(seq.tokens_per_s, 1e-9):.2f}")
 
 
+def bench_serving_http(out_path: str = "BENCH_serving.json"):
+    """The API hot path end-to-end: concurrent clients through the real
+    ThreadingHTTPServer into each service kind. The batched service should
+    hold throughput as concurrency grows (decode batches), the sync one
+    degrade toward thread-count scaling."""
+    import json as _json
+    import statistics
+    import threading
+    import urllib.request
+
+    import repro.core.assets  # noqa: F401 — populate the exchange
+    from repro.core import MAXServer
+
+    model = "qwen3-4b"
+    n_clients, n_requests = 4, 16
+    payload = _json.dumps(
+        {"input": {"text": "benchmark", "max_new_tokens": 4}}).encode()
+    report = {"model": model, "clients": n_clients,
+              "requests": n_requests, "modes": {}}
+
+    for mode in ("sync", "batched"):
+        with MAXServer(build_kw={"max_seq": 64, "max_batch": n_clients},
+                       service_mode=mode,
+                       service_kw={"batch_window_s": 0.01}) as s:
+            url = f"{s.url}/v2/model/{model}/predict"
+
+            def call():
+                req = urllib.request.Request(
+                    url, payload, {"Content-Type": "application/json"})
+                urllib.request.urlopen(req).read()
+
+            call()                                  # build + compile
+            latencies, lock = [], threading.Lock()
+
+            def client(k):
+                for _ in range(n_requests // n_clients):
+                    t0 = time.perf_counter()
+                    call()
+                    dt = time.perf_counter() - t0
+                    with lock:
+                        latencies.append(dt)
+
+            t0 = time.perf_counter()
+            threads = [threading.Thread(target=client, args=(k,))
+                       for k in range(n_clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            latencies.sort()
+            q = statistics.quantiles(latencies, n=20)
+            stats = {
+                "requests_per_s": round(len(latencies) / wall, 2),
+                "p50_ms": round(q[9] * 1e3, 1),
+                "p95_ms": round(q[18] * 1e3, 1),
+                "wall_s": round(wall, 2),
+            }
+            if mode == "batched":
+                svc = s.manager.get(model).service.stats()
+                stats["mean_batch_size"] = svc["mean_batch_size"]
+                stats["max_batch_seen"] = svc["max_batch_seen"]
+            report["modes"][mode] = stats
+            row(f"serving_http_{mode}", 1e6 * wall / len(latencies),
+                f"rps={stats['requests_per_s']} p50={stats['p50_ms']}ms "
+                f"p95={stats['p95_ms']}ms")
+
+    sync_rps = report["modes"]["sync"]["requests_per_s"]
+    bat_rps = report["modes"]["batched"]["requests_per_s"]
+    report["speedup_x"] = round(bat_rps / max(sync_rps, 1e-9), 2)
+    with open(out_path, "w") as f:
+        _json.dump(report, f, indent=1)
+    row("serving_http_speedup", 0.0,
+        f"batched/sync={report['speedup_x']}x -> {out_path}")
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -203,6 +282,7 @@ def main() -> None:
     bench_deploy_latency()
     bench_api_roundtrip()
     bench_serving_throughput()
+    bench_serving_http()
     bench_kernels()
     bench_roofline_terms()
     print(f"# {len(ROWS)} benchmarks complete", flush=True)

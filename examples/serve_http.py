@@ -1,9 +1,12 @@
 """End-to-end serving driver: HTTP server + batched requests + model swap.
 
-Starts the full MAX stack (registry -> deployments -> REST API), fires a
-burst of concurrent requests at three different architecture families
-through identical client code, and prints per-deployment health — the
-paper's Fig. 1/2 demonstration as a runnable script.
+Starts the full MAX stack (registry -> deployments -> services -> REST
+API), fires a burst of concurrent requests through identical client code —
+first across three architecture families (the paper's zero-client-change
+claim), then hammering ONE model through ``/v2`` to show the continuous-
+batching service coalescing simultaneous HTTP predicts into shared engine
+decode batches — and finishes with the async job flow and per-deployment
+health.
 
     PYTHONPATH=src python examples/serve_http.py
 """
@@ -28,18 +31,22 @@ def get(url, path):
 
 
 def main():
-    with MAXServer(build_kw={"max_seq": 64, "max_batch": 4}) as server:
+    with MAXServer(build_kw={"max_seq": 64, "max_batch": 4},
+                   service_kw={"batch_window_s": 0.05}) as server:
         print(f"MAX serving at {server.url}")
-        print("swagger paths:", len(get(server.url, "/swagger.json")["paths"]))
+        spec = get(server.url, "/swagger.json")
+        routes = get(server.url, "/v2/routes")["routes"]
+        print(f"route table: {len(routes)} routes "
+              f"(swagger paths: {len(spec['paths'])})")
 
         # one client function, any model — the paper's zero-change claim
-        def client(model_id, text):
-            env = post(server.url, f"/model/{model_id}/predict",
+        def client(model_id, text, prefix=""):
+            env = post(server.url, f"{prefix}/model/{model_id}/predict",
                        {"input": {"text": text, "max_new_tokens": 6}})
             assert env["status"] == "ok", env
             return env["predictions"][0]["generated_text"]
 
-        # burst of concurrent requests across architecture families
+        # burst of concurrent requests across architecture families (v1)
         models = ["qwen3-4b", "rwkv6-7b", "recurrentgemma-9b"]
         results, threads = {}, []
         t0 = time.perf_counter()
@@ -59,6 +66,39 @@ def main():
         for i in sorted(results):
             mid, out = results[i]
             print(f"  req{i} -> {mid:20s} {out[:30]!r}")
+
+        # v2: hammer ONE model — concurrent predicts share decode batches
+        print("\nv2 continuous batching (8 concurrent clients, one model):")
+        threads = []
+        t0 = time.perf_counter()
+        for i in range(8):
+            th = threading.Thread(
+                target=client, args=("qwen3-4b", f"burst {i}", "/v2"))
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join()
+        dt = time.perf_counter() - t0
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        print(f"  8 predicts in {dt:.1f}s — mean batch size "
+              f"{stats['mean_batch_size']}, max {stats['max_batch_seen']} "
+              f"(engine capacity {stats['engine_max_batch']})")
+
+        # v2 async jobs: submit, poll, read the result
+        sub = post(server.url, "/v2/model/qwen3-4b/jobs",
+                   {"input": {"text": "async please", "max_new_tokens": 8}})
+        print(f"\njob {sub['job']['id']} submitted; polling {sub['poll']}")
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            job = get(server.url, sub["poll"])["job"]
+            if job["state"] in ("done", "error"):
+                break
+            time.sleep(0.05)
+        if job["state"] == "done":
+            print(f"  -> done: "
+                  f"{job['result']['predictions'][0]['generated_text'][:40]!r}")
+        else:
+            print(f"  -> {job['state']}: {job.get('error')}")
 
         # the sentiment demo envelope (paper Fig. 3, byte-for-byte shape)
         env = post(server.url, "/model/max-sentiment/predict",

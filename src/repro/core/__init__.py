@@ -3,13 +3,20 @@
 - wrapper.py    MAXModelWrapper + standardized envelope (Sec. 2.2.1)
 - registry.py   the model exchange catalogue (Sec. 2.2.2)
 - assets.py     wrapped assets for every assigned architecture
-- api.py        standardized RESTful API + Swagger (Sec. 2.2.3)
+- router.py     declarative versioned route table + OpenAPI projection
+- service.py    pluggable execution strategy (sync / continuous-batched)
+- api.py        standardized RESTful API, v1 + v2 (Sec. 2.2.3)
 - deployment.py container-isolation analogue for TPU pods
 - skeleton.py   MAX-Skeleton add-a-model template (Sec. 3.2)
 """
 
 from repro.core.wrapper import MAXError, MAXModelWrapper, ModelMetadata
 from repro.core.registry import EXCHANGE, ModelAsset, ModelRegistry
+from repro.core.service import (
+    BatchedService, InferenceService, Job, ServiceOverloaded, SyncService,
+    make_service,
+)
 from repro.core.deployment import Deployment, DeploymentManager
-from repro.core.api import MAXServer, build_swagger
+from repro.core.router import RequestCtx, Route, Router
+from repro.core.api import ApiError, MAXServer, build_router, build_swagger
 from repro.core.skeleton import register_asset, skeleton_source

@@ -1,16 +1,34 @@
 """Standardized RESTful API — paper Section 2.2.3, as a real HTTP server.
 
-Endpoints (identical across every wrapped model — the paper's key claim is
-that swapping the underlying model requires zero client-code change):
+The surface is a declarative, versioned route table (``core/router.py``);
+``swagger.json``, ``GET /v2/routes`` and dispatch are all projections of
+the same table, so the spec covers 100% of routable endpoints by
+construction.
 
-    GET  /                          -> exchange info
-    GET  /models                    -> catalogue (metadata list)
-    GET  /model/<id>/metadata       -> asset metadata
-    GET  /model/<id>/labels         -> labels (if any)
-    POST /model/<id>/predict        -> {"status": "ok", "predictions": ...}
-    POST /model/<id>/deploy         -> deploy an asset
-    GET  /health                    -> per-deployment stats
-    GET  /swagger.json              -> auto-generated OpenAPI spec
+v1 (bare and under ``/v1/`` — byte-compatible with the original server):
+
+    GET    /                           -> exchange info
+    GET    /models                     -> catalogue (metadata list)
+    GET    /model/{id}/metadata        -> asset metadata
+    GET    /model/{id}/labels          -> labels (if any)
+    POST   /model/{id}/predict         -> {"status": "ok", "predictions": ...}
+    POST   /model/{id}/deploy          -> deploy an asset
+    GET    /health                     -> per-deployment stats
+    GET    /swagger.json               -> auto-generated OpenAPI spec
+
+v2 (structured error codes; predict is micro-batched when the deployment's
+service is a :class:`~repro.core.service.BatchedService`):
+
+    GET    /v2/models                  -> catalogue + deployment status
+    POST   /v2/model/{id}/predict      -> single input, coalesced into
+                                          engine decode batches under load
+    POST   /v2/model/{id}/predict_batch-> explicit multi-input
+    POST   /v2/model/{id}/jobs         -> async submit (202 + job id)
+    GET    /v2/jobs/{job_id}           -> poll a job
+    POST   /v2/model/{id}/deploy       -> deploy (optional service mode)
+    DELETE /v2/model/{id}              -> undeploy
+    GET    /v2/model/{id}/stats        -> service-level stats (batch sizes…)
+    GET    /v2/routes                  -> the route table itself
 
 Implemented on the stdlib ``ThreadingHTTPServer`` (offline container — no
 Flask), which is faithful anyway: MAX's per-model servers are thin WSGI
@@ -20,26 +38,125 @@ apps around the wrapper.
 from __future__ import annotations
 
 import json
-import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.deployment import DeploymentManager
 from repro.core.registry import EXCHANGE, ModelRegistry
+from repro.core.router import RequestCtx, Router
+from repro.core.service import ServiceOverloaded
+from repro.core.wrapper import MAXError
 
-API_VERSION = "v1"
+API_VERSION = "v1"          # of the back-compat surface
+API_VERSIONS = ("v1", "v2")
+
+# structured error codes (v2) -> HTTP status
+ERROR_STATUS = {
+    "BAD_JSON": 400,
+    "MISSING_INPUT": 400,
+    "INVALID_INPUT": 400,
+    "MODEL_NOT_FOUND": 404,
+    "NOT_DEPLOYED": 404,
+    "JOB_NOT_FOUND": 404,
+    "NOT_FOUND": 404,
+    "METHOD_NOT_ALLOWED": 405,
+    "QUEUE_FULL": 429,
+    "INTERNAL": 500,
+    "TIMEOUT": 504,
+}
 
 
-def build_swagger(registry: ModelRegistry) -> Dict[str, Any]:
-    """Auto-generate an OpenAPI spec covering every registered asset
-    (the paper integrates Swagger for a free GUI per model)."""
-    paths: Dict[str, Any] = {
-        "/models": {"get": {"summary": "List model assets",
-                            "responses": {"200": {"description": "catalogue"}}}},
-        "/health": {"get": {"summary": "Deployment health",
-                            "responses": {"200": {"description": "stats"}}}},
-    }
+class ApiError(Exception):
+    """Client-visible failure with a structured code; formatted per API
+    generation by the dispatcher (flat string for v1, object for v2)."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(message)
+        self.code = code
+        self.status = ERROR_STATUS.get(code, 400)
+
+
+def _v1_error(message: str) -> Dict[str, Any]:
+    return {"status": "error", "error": message}
+
+
+def _v2_error(code: str, message: str, **extra) -> Dict[str, Any]:
+    return {"status": "error",
+            "error": {"code": code, "message": message}, **extra}
+
+
+_ENVELOPE_SCHEMA = {
+    "type": "object",
+    "properties": {"status": {"type": "string"},
+                   "predictions": {"type": "array"},
+                   "model_id": {"type": "string"},
+                   "latency_ms": {"type": "number"}},
+}
+_INPUT_SCHEMA = {"type": "object", "properties": {"input": {}},
+                 "required": ["input"]}
+
+
+def build_router(server: Optional["MAXServer"] = None) -> Router:
+    """The route table. With ``server=None`` handlers are unbound and the
+    table is spec-only (used by :func:`build_swagger` outside a server)."""
+    r = Router()
+
+    def h(name):
+        return getattr(server, name) if server is not None else None
+
+    def v1(method, tmpl, name, **kw):
+        # every v1 route answers both bare (original surface) and /v1-prefixed
+        r.add(method, tmpl, h(name), version="v1", **kw)
+        r.add(method, "/v1" + tmpl, h(name), version="v1", **kw)
+
+    r.add("GET", "/", h("_h_root"), version="v1", summary="Exchange info")
+    r.add("GET", "/v1", h("_h_root"), version="v1", summary="Exchange info")
+    v1("GET", "/models", "_h_models", summary="List model assets")
+    v1("GET", "/health", "_h_health", summary="Deployment health")
+    v1("GET", "/model/{model_id}/metadata", "_h_metadata",
+       summary="Asset metadata")
+    v1("GET", "/model/{model_id}/labels", "_h_labels",
+       summary="Prediction labels")
+    v1("POST", "/model/{model_id}/predict", "_h_predict_v1",
+       summary="Synchronous predict (standardized envelope)",
+       request_schema=_INPUT_SCHEMA, response_schema=_ENVELOPE_SCHEMA)
+    v1("POST", "/model/{model_id}/deploy", "_h_deploy_v1",
+       summary="Deploy an asset")
+    v1("GET", "/swagger.json", "_h_swagger",
+       summary="This OpenAPI document")
+
+    r.add("GET", "/v2/models", h("_h_models_v2"),
+          summary="Catalogue with deployment/service status")
+    r.add("POST", "/v2/model/{model_id}/predict", h("_h_predict_v2"),
+          summary="Predict; concurrent requests are micro-batched into "
+                  "engine decode batches",
+          request_schema=_INPUT_SCHEMA, response_schema=_ENVELOPE_SCHEMA)
+    r.add("POST", "/v2/model/{model_id}/predict_batch",
+          h("_h_predict_batch_v2"),
+          summary="Explicit multi-input predict",
+          request_schema={"type": "object",
+                          "properties": {"inputs": {"type": "array"}},
+                          "required": ["inputs"]})
+    r.add("POST", "/v2/model/{model_id}/jobs", h("_h_job_submit"),
+          summary="Submit an async generation job",
+          request_schema=_INPUT_SCHEMA)
+    r.add("GET", "/v2/jobs/{job_id}", h("_h_job_get"),
+          summary="Poll an async job")
+    r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
+          summary="Deploy an asset (optional {'service': sync|batched|auto})")
+    r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
+          summary="Undeploy an asset")
+    r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
+          summary="Service-level stats (batching, queue, jobs)")
+    r.add("GET", "/v2/routes", h("_h_routes"),
+          summary="The route table (source of truth for this spec)")
+    return r
+
+
+def _asset_paths(registry: ModelRegistry) -> Dict[str, Any]:
+    """Concrete per-asset v1 paths (the paper's per-model Swagger GUI)."""
+    paths: Dict[str, Any] = {}
     for asset in registry.list():
         mid = asset.metadata.id
         paths[f"/model/{mid}/predict"] = {
@@ -50,22 +167,25 @@ def build_swagger(registry: ModelRegistry) -> Dict[str, Any]:
                                "properties": {"input": {}}}}}},
                 "responses": {"200": {
                     "description": "standardized envelope",
-                    "content": {"application/json": {"schema": {
-                        "type": "object",
-                        "properties": {
-                            "status": {"type": "string"},
-                            "predictions": {"type": "array"},
-                        }}}}}},
+                    "content": {"application/json": {
+                        "schema": _ENVELOPE_SCHEMA}}}},
             }
         }
         paths[f"/model/{mid}/metadata"] = {
             "get": {"summary": f"Metadata for {asset.metadata.name}",
                     "responses": {"200": {"description": "metadata"}}}}
-    return {
-        "openapi": "3.0.0",
-        "info": {"title": "Model Asset eXchange (JAX)", "version": API_VERSION},
-        "paths": paths,
-    }
+    return paths
+
+
+def build_swagger(registry: ModelRegistry,
+                  router: Optional[Router] = None) -> Dict[str, Any]:
+    """OpenAPI spec covering every route in the table plus concrete
+    per-asset paths (the paper integrates Swagger for a free GUI per
+    model)."""
+    router = router or build_router(None)
+    return router.openapi(title="Model Asset eXchange (JAX)",
+                          version="+".join(API_VERSIONS),
+                          extra_paths=_asset_paths(registry))
 
 
 class MAXServer:
@@ -75,11 +195,27 @@ class MAXServer:
     def __init__(self, registry: Optional[ModelRegistry] = None,
                  manager: Optional[DeploymentManager] = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 auto_deploy: bool = True, build_kw: Optional[dict] = None):
+                 auto_deploy: bool = True, build_kw: Optional[dict] = None,
+                 service_mode: Optional[str] = None,
+                 service_kw: Optional[dict] = None):
         self.registry = registry if registry is not None else EXCHANGE
-        self.manager = manager if manager is not None else DeploymentManager(self.registry)
+        if manager is not None:
+            if service_mode is not None or service_kw is not None:
+                raise ValueError(
+                    "pass service_mode/service_kw on the DeploymentManager "
+                    "when supplying one explicitly — they only configure "
+                    "the internally created manager")
+            self.manager = manager
+        else:
+            self.manager = DeploymentManager(
+                self.registry, service_mode=service_mode or "auto",
+                service_kw=service_kw)
+        self._owns_manager = manager is None
         self.auto_deploy = auto_deploy
         self.build_kw = build_kw or {}
+        self.router = build_router(self)
+        self._job_index: Dict[str, str] = {}     # job id -> asset id
+        self._job_lock = threading.Lock()
         outer = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -95,11 +231,10 @@ class MAXServer:
                 self.wfile.write(body)
 
             def do_GET(self):
-                try:
-                    code, payload = outer.handle_get(self.path)
-                except Exception as e:          # container fault isolation
-                    code, payload = 500, {"status": "error", "error": str(e)}
-                self._send(code, payload)
+                self._send(*outer.dispatch("GET", self.path, None))
+
+            def do_DELETE(self):
+                self._send(*outer.dispatch("DELETE", self.path, None))
 
             def do_POST(self):
                 n = int(self.headers.get("Content-Length", 0))
@@ -107,74 +242,244 @@ class MAXServer:
                 try:
                     data = json.loads(raw.decode() or "{}")
                 except json.JSONDecodeError:
-                    self._send(400, {"status": "error", "error": "bad JSON"})
+                    if self.path.startswith("/v2/"):
+                        self._send(400, _v2_error("BAD_JSON", "bad JSON"))
+                    else:
+                        self._send(400, _v1_error("bad JSON"))
                     return
-                try:
-                    code, payload = outer.handle_post(self.path, data)
-                except Exception as e:
-                    code, payload = 500, {"status": "error", "error": str(e)}
-                self._send(code, payload)
+                self._send(*outer.dispatch("POST", self.path, data))
 
         self._server = ThreadingHTTPServer((host, port), Handler)
         self._thread: Optional[threading.Thread] = None
 
-    # -- routing ---------------------------------------------------------------
+    # -- dispatch ---------------------------------------------------------------
 
+    def dispatch(self, method: str, path: str, body: Optional[Any]
+                 ) -> Tuple[int, Dict[str, Any]]:
+        path = path.split("?", 1)[0]
+        route, params, allowed = self.router.dispatch(method, path)
+        v2 = path.startswith("/v2/")
+        if route is None:
+            if allowed:
+                msg = f"{method} not allowed for {path}"
+                if v2:
+                    return 405, _v2_error("METHOD_NOT_ALLOWED", msg,
+                                          allowed=sorted(set(allowed)))
+                return 405, _v1_error(msg)
+            msg = f"no route {path}"
+            return 404, _v2_error("NOT_FOUND", msg) if v2 else (
+                404, _v1_error(msg))
+        try:
+            return route.handler(RequestCtx(method, path, params, body))
+        except ApiError as e:
+            payload = _v2_error(e.code, str(e)) if v2 else _v1_error(str(e))
+            return e.status, payload
+        except Exception as e:          # container fault isolation
+            payload = _v2_error("INTERNAL", str(e)) if v2 \
+                else _v1_error(str(e))
+            return 500, payload
+
+    # back-compat shims for callers of the old entry points
     def handle_get(self, path: str) -> Tuple[int, Dict[str, Any]]:
-        if path in ("/", ""):
-            return 200, {"name": "Model Asset eXchange (JAX)",
-                         "api_version": API_VERSION,
-                         "assets": len(self.registry),
-                         "deployed": self.manager.deployed()}
-        if path == "/models":
-            return 200, {"models": [a.metadata.to_json()
-                                    for a in self.registry.list()]}
-        if path == "/health":
-            return 200, {"deployments": self.manager.health()}
-        if path == "/swagger.json":
-            return 200, build_swagger(self.registry)
-        m = re.fullmatch(r"/model/([^/]+)/metadata", path)
-        if m:
-            try:
-                return 200, self.registry.get(m.group(1)).metadata.to_json()
-            except KeyError as e:
-                return 404, {"status": "error", "error": str(e)}
-        m = re.fullmatch(r"/model/([^/]+)/labels", path)
-        if m:
-            try:
-                dep = self._ensure_deployed(m.group(1))
-            except KeyError as e:
-                return 404, {"status": "error", "error": str(e)}
-            return 200, {"labels": dep.wrapper.labels()}
-        return 404, {"status": "error", "error": f"no route {path}"}
+        return self.dispatch("GET", path, None)
 
     def handle_post(self, path: str, data: Dict[str, Any]
                     ) -> Tuple[int, Dict[str, Any]]:
-        m = re.fullmatch(r"/model/([^/]+)/predict", path)
-        if m:
-            try:
-                dep = self._ensure_deployed(m.group(1))
-            except KeyError as e:
-                return 404, {"status": "error", "error": str(e)}
-            env = dep.predict(data.get("input", data))
-            return (200 if env["status"] == "ok" else 400), env
-        m = re.fullmatch(r"/model/([^/]+)/deploy", path)
-        if m:
-            try:
-                self.manager.deploy(m.group(1), **self.build_kw)
-            except KeyError as e:
-                return 404, {"status": "error", "error": str(e)}
-            return 200, {"status": "ok", "deployed": self.manager.deployed()}
-        return 404, {"status": "error", "error": f"no route {path}"}
+        return self.dispatch("POST", path, data)
+
+    # -- shared helpers ---------------------------------------------------------
 
     def _ensure_deployed(self, asset_id: str):
+        # a KeyError here is a model lookup failure and nothing else —
+        # wrapper faults deeper in the request must stay 500s, so the
+        # conversion to 404 happens at this boundary, not in dispatch
         try:
             return self.manager.get(asset_id)
-        except KeyError:
+        except KeyError as e:
             if not self.auto_deploy:
-                raise
+                raise ApiError("NOT_DEPLOYED", str(e)) from None
+        try:
             self.registry.get(asset_id)       # raises KeyError if unknown
-            return self.manager.deploy(asset_id, **self.build_kw)
+        except KeyError as e:
+            raise ApiError("MODEL_NOT_FOUND", str(e)) from None
+        return self.manager.deploy(asset_id, **self.build_kw)
+
+    @staticmethod
+    def _require_input(body: Any) -> Any:
+        """Explicit 400 semantics (v1 AND v2): the request body must be a
+        JSON object carrying a non-null ``input`` key — the old implicit
+        ``data.get("input", data)`` fallback silently accepted anything."""
+        if not isinstance(body, dict):
+            raise ApiError("MISSING_INPUT",
+                           "request body must be a JSON object with an "
+                           "'input' key")
+        if "input" not in body:
+            raise ApiError("MISSING_INPUT", "missing required key 'input'")
+        if body["input"] is None:
+            raise ApiError("INVALID_INPUT", "'input' must not be null")
+        return body["input"]
+
+    @staticmethod
+    def _v2_envelope(env: Dict[str, Any]) -> Tuple[int, Dict[str, Any]]:
+        """Service envelope -> (status, v2 envelope with structured error)."""
+        if env.get("status") == "ok":
+            return 200, env
+        code = env.get("code", "INVALID_INPUT")
+        out = _v2_error(code, str(env.get("error", "prediction failed")))
+        if "model_id" in env:
+            out["model_id"] = env["model_id"]
+        return ERROR_STATUS.get(code, 400), out
+
+    # -- v1 handlers -------------------------------------------------------------
+
+    def _h_root(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        return 200, {"name": "Model Asset eXchange (JAX)",
+                     "api_version": API_VERSION,
+                     "api_versions": list(API_VERSIONS),
+                     "assets": len(self.registry),
+                     "deployed": self.manager.deployed()}
+
+    def _h_models(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        return 200, {"models": [a.metadata.to_json()
+                                for a in self.registry.list()]}
+
+    def _h_health(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        return 200, {"deployments": self.manager.health()}
+
+    def _h_swagger(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        return 200, build_swagger(self.registry, self.router)
+
+    def _h_metadata(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        try:
+            asset = self.registry.get(ctx.params["model_id"])
+        except KeyError as e:
+            raise ApiError("MODEL_NOT_FOUND", str(e)) from None
+        return 200, asset.metadata.to_json()
+
+    def _h_labels(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        dep = self._ensure_deployed(ctx.params["model_id"])
+        return 200, {"labels": dep.wrapper.labels()}
+
+    def _h_predict_v1(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        inp = self._require_input(ctx.body)
+        dep = self._ensure_deployed(ctx.params["model_id"])
+        env = dep.predict(inp)
+        code = env.pop("code", None)   # v1 errors stay flat strings, but
+        if env["status"] == "ok":      # transient overload/timeouts must
+            return 200, env            # not read as permanent 400s
+        return ERROR_STATUS.get(code, 400), env
+
+    def _h_deploy_v1(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        try:
+            self.manager.deploy(ctx.params["model_id"], **self.build_kw)
+        except KeyError as e:
+            raise ApiError("MODEL_NOT_FOUND", str(e)) from None
+        return 200, {"status": "ok", "deployed": self.manager.deployed()}
+
+    # -- v2 handlers -------------------------------------------------------------
+
+    def _h_models_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        models = []
+        for a in self.registry.list():
+            m = a.metadata.to_json()
+            try:  # racing a concurrent undeploy must not 404 the listing
+                m["service"] = self.manager.get(a.metadata.id).service.kind
+                m["deployed"] = True
+            except KeyError:
+                m["deployed"] = False
+            models.append(m)
+        return 200, {"status": "ok", "models": models}
+
+    def _h_predict_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        inp = self._require_input(ctx.body)
+        dep = self._ensure_deployed(ctx.params["model_id"])
+        return self._v2_envelope(dep.predict(inp))
+
+    def _h_predict_batch_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        if not isinstance(ctx.body, dict) or "inputs" not in ctx.body:
+            raise ApiError("MISSING_INPUT", "missing required key 'inputs'")
+        inputs = ctx.body["inputs"]
+        if not isinstance(inputs, list) or not inputs:
+            raise ApiError("INVALID_INPUT",
+                           "'inputs' must be a non-empty array")
+        dep = self._ensure_deployed(ctx.params["model_id"])
+        results = [self._v2_envelope(env)[1]
+                   for env in dep.predict_batch(inputs)]
+        ok = sum(1 for r in results if r.get("status") == "ok")
+        return 200, {"status": "ok" if ok == len(results) else "partial",
+                     "results": results, "count": len(results)}
+
+    def _h_job_submit(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        inp = self._require_input(ctx.body)
+        model_id = ctx.params["model_id"]
+        dep = self._ensure_deployed(model_id)
+        try:
+            job = dep.submit_job(inp)
+        except ServiceOverloaded as e:
+            raise ApiError("QUEUE_FULL", str(e)) from None
+        except MAXError as e:
+            raise ApiError("INVALID_INPUT", str(e)) from None
+        with self._job_lock:
+            self._job_index[job.id] = model_id
+            while len(self._job_index) > 4096:   # bounded, like job records
+                self._job_index.pop(next(iter(self._job_index)))
+        return 202, {"status": "ok", "job": job.to_json(),
+                     "poll": f"/v2/jobs/{job.id}"}
+
+    def _h_job_get(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        job_id = ctx.params["job_id"]
+        with self._job_lock:
+            model_id = self._job_index.get(job_id)
+        if model_id is None:
+            raise ApiError("JOB_NOT_FOUND", f"unknown job {job_id!r}")
+        try:
+            job = self.manager.get(model_id).service.get_job(job_id)
+        except KeyError:
+            raise ApiError("JOB_NOT_FOUND",
+                           f"job {job_id!r} no longer exists "
+                           f"(model {model_id!r} undeployed?)") from None
+        return 200, {"status": "ok", "job": job.to_json()}
+
+    def _h_deploy_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        body = ctx.body if isinstance(ctx.body, dict) else {}
+        mode = body.get("service")
+        if mode is not None and mode not in ("sync", "batched", "auto"):
+            raise ApiError("INVALID_INPUT",
+                           f"unknown service mode {mode!r}")
+        try:
+            dep = self.manager.deploy(ctx.params["model_id"],
+                                      service_mode=mode, **self.build_kw)
+        except KeyError as e:
+            raise ApiError("MODEL_NOT_FOUND", str(e)) from None
+        except ValueError as e:     # mode infeasible for this wrapper
+            raise ApiError("INVALID_INPUT", str(e)) from None
+        return 200, {"status": "ok", "model_id": dep.asset_id,
+                     "service": dep.service.kind,
+                     "deployed": self.manager.deployed()}
+
+    def _h_undeploy(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        model_id = ctx.params["model_id"]
+        if not self.manager.undeploy(model_id):
+            raise ApiError("NOT_DEPLOYED",
+                           f"asset {model_id!r} is not deployed")
+        return 200, {"status": "ok", "model_id": model_id,
+                     "deployed": self.manager.deployed()}
+
+    def _h_stats_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        model_id = ctx.params["model_id"]
+        try:
+            dep = self.manager.get(model_id)
+        except KeyError:
+            raise ApiError("NOT_DEPLOYED",
+                           f"asset {model_id!r} is not deployed") from None
+        return 200, {"status": "ok", "model_id": model_id,
+                     "service": dep.service.stats(),
+                     "requests": dep.stats.requests,
+                     "errors": dep.stats.errors,
+                     "mean_latency_ms": round(dep.stats.mean_latency_ms, 2)}
+
+    def _h_routes(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        return 200, {"status": "ok", "routes": self.router.table()}
 
     # -- lifecycle ----------------------------------------------------------------
 
@@ -194,6 +499,11 @@ class MAXServer:
         self._server.server_close()
         if self._thread:
             self._thread.join(timeout=5)
+        if self._owns_manager:
+            # tear down services too — batched workers are daemon threads
+            # holding whole engines; leaking them outlives the server
+            for asset_id in self.manager.deployed():
+                self.manager.undeploy(asset_id)
 
     def __enter__(self):
         return self.start()

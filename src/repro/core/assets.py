@@ -28,7 +28,7 @@ from repro.core.registry import EXCHANGE, ModelAsset
 from repro.core.wrapper import MAXError, MAXModelWrapper, ModelMetadata
 from repro.data.tokenizer import TOKENIZER
 from repro.models import build_model
-from repro.serving import GenerationEngine
+from repro.serving import GenerationEngine, GenerationResult
 
 _TYPE_BY_FAMILY = {
     "dense": "Text Generation",
@@ -69,6 +69,10 @@ class _EngineWrapper(MAXModelWrapper):
                                        eos_id=TOKENIZER.eos_id)
         self.MODEL_META_DATA = asset.metadata
 
+    def _result(self, tokens: List[int], prompt_len: int) -> GenerationResult:
+        return GenerationResult(tokens=list(tokens), prompt_len=prompt_len,
+                                steps=len(tokens), finished=True)
+
 
 class TextGenerationWrapper(_EngineWrapper):
     def _pre_process(self, inp: Any) -> Dict[str, Any]:
@@ -94,6 +98,17 @@ class TextGenerationWrapper(_EngineWrapper):
         return [{"generated_text": TOKENIZER.decode(r.tokens),
                  "generated_tokens": len(r.tokens),
                  "prompt_tokens": r.prompt_len}]
+
+    # generation protocol — lets BatchedService coalesce concurrent HTTP
+    # requests into one decode batch instead of calling engine.generate
+    # per request
+    def prepare_generation(self, inp: Any):
+        x = self._pre_process(inp)
+        return x["tokens"], {"max_new_tokens": x["max_new_tokens"],
+                             "temperature": x["temperature"]}, None
+
+    def format_generation(self, tokens: List[int], prompt_len: int) -> Any:
+        return self._post_process(self._result(tokens, prompt_len))
 
 
 class TextClassificationWrapper(_EngineWrapper):
@@ -167,6 +182,16 @@ class ImageCaptionWrapper(_EngineWrapper):
         return [{"caption": TOKENIZER.decode(r.tokens),
                  "index": 0, "probability": 1.0}]   # MAX caption schema
 
+    def prepare_generation(self, inp: Any):
+        x = self._pre_process(inp)
+        embeds = _stub_image_embeds(self.cfg, x["image_id"])
+        prompt = [TOKENIZER.bos_id] * (self.cfg.num_image_tokens + 1)
+        return prompt, {"max_new_tokens": x["max_new_tokens"]}, \
+            {"image_embeds": embeds}
+
+    def format_generation(self, tokens: List[int], prompt_len: int) -> Any:
+        return self._post_process(self._result(tokens, prompt_len))
+
 
 class AudioTranscriptionWrapper(_EngineWrapper):
     def _pre_process(self, inp: Any) -> Dict[str, Any]:
@@ -186,6 +211,15 @@ class AudioTranscriptionWrapper(_EngineWrapper):
 
     def _post_process(self, r) -> Any:
         return [{"transcript": TOKENIZER.decode(r.tokens)}]
+
+    def prepare_generation(self, inp: Any):
+        x = self._pre_process(inp)
+        frames = _stub_frames(self.cfg, x["audio_id"])
+        return [TOKENIZER.bos_id], {"max_new_tokens": x["max_new_tokens"]}, \
+            {"frames": frames}
+
+    def format_generation(self, tokens: List[int], prompt_len: int) -> Any:
+        return self._post_process(self._result(tokens, prompt_len))
 
 
 _WRAPPER_BY_TYPE = {

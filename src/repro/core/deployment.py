@@ -11,8 +11,15 @@ split; the equivalent isolation unit is a *deployment*:
 - optionally its own mesh slice (disjoint chips — the direct analogue of
   CPU/memory quotas on a container).
 
+A deployment carries an :class:`~repro.core.service.InferenceService`, not a
+bare wrapper: the service decides HOW requests execute (per-call sync vs
+continuous-batched on a worker thread) while the deployment stays the unit
+of isolation, stats, and lifecycle.
+
 The :class:`DeploymentManager` is the container orchestrator analogue:
-deploy/undeploy/route, with per-deployment health and request stats.
+deploy/undeploy/route, with per-deployment health and request stats. It is
+safe under ``ThreadingHTTPServer``: stats updates are locked, and two
+concurrent deploys of the same asset build the wrapper exactly once.
 """
 
 from __future__ import annotations
@@ -23,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.core.registry import ModelRegistry, EXCHANGE
+from repro.core.service import InferenceService, Job, make_service
 from repro.core.wrapper import MAXModelWrapper
 
 
@@ -31,6 +39,17 @@ class DeploymentStats:
     requests: int = 0
     errors: int = 0
     total_latency_s: float = 0.0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def record(self, latency_s: float, ok: bool):
+        # += on a dataclass field is not atomic; ThreadingHTTPServer runs
+        # one thread per connection, so take the lock
+        with self._lock:
+            self.requests += 1
+            self.total_latency_s += latency_s
+            if not ok:
+                self.errors += 1
 
     @property
     def mean_latency_ms(self) -> float:
@@ -40,43 +59,99 @@ class DeploymentStats:
 @dataclass
 class Deployment:
     asset_id: str
-    wrapper: MAXModelWrapper
+    service: InferenceService
     created_at: float = field(default_factory=time.time)
     mesh_slice: Optional[str] = None         # e.g. "pod0/rows0-7"
     stats: DeploymentStats = field(default_factory=DeploymentStats)
 
+    @property
+    def wrapper(self) -> MAXModelWrapper:    # v1 call sites use dep.wrapper
+        return self.service.wrapper
+
+    def _record(self, t0: float, env: Dict[str, Any]) -> Dict[str, Any]:
+        self.stats.record(time.perf_counter() - t0,
+                          env.get("status") == "ok")
+        return env
+
     def predict(self, inp: Any) -> Dict[str, Any]:
         t0 = time.perf_counter()
-        env = self.wrapper.predict_envelope(inp)
-        dt = time.perf_counter() - t0
-        self.stats.requests += 1
-        self.stats.total_latency_s += dt
-        if env.get("status") != "ok":
-            self.stats.errors += 1
-        return env
+        return self._record(t0, self.service.predict(inp))
+
+    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+        t0 = time.perf_counter()
+        envs = self.service.predict_batch(inputs)
+        per_input = (time.perf_counter() - t0) / max(len(inputs), 1)
+        for env in envs:
+            self.stats.record(per_input, env.get("status") == "ok")
+        return envs
+
+    def submit_job(self, inp: Any) -> Job:
+        return self.service.submit_job(inp)
 
 
 class DeploymentManager:
-    def __init__(self, registry: Optional[ModelRegistry] = None):
+    def __init__(self, registry: Optional[ModelRegistry] = None, *,
+                 service_mode: str = "auto",
+                 service_kw: Optional[Dict[str, Any]] = None):
         self.registry = registry if registry is not None else EXCHANGE
+        self.service_mode = service_mode
+        self.service_kw = service_kw or {}
         self._deployments: Dict[str, Deployment] = {}
+        self._building: Dict[str, threading.Event] = {}
         self._lock = threading.Lock()
 
     def deploy(self, asset_id: str, *, mesh_slice: Optional[str] = None,
+               service_mode: Optional[str] = None,
                **build_kw) -> Deployment:
-        with self._lock:
-            if asset_id in self._deployments:
-                return self._deployments[asset_id]
-        asset = self.registry.get(asset_id)
-        wrapper = asset.build(**build_kw)           # the "container start"
-        dep = Deployment(asset_id, wrapper, mesh_slice=mesh_slice)
-        with self._lock:
-            self._deployments[asset_id] = dep
-        return dep
+        while True:
+            with self._lock:
+                dep = self._deployments.get(asset_id)
+            if dep is not None:
+                # an explicitly requested concrete mode replaces a
+                # deployment of a different kind ("auto"/None accept
+                # whatever is running) — silently returning the old
+                # service would drop the operator's request
+                if (service_mode in (None, "auto")
+                        or dep.service.kind == service_mode):
+                    return dep
+                if (service_mode == "batched"
+                        and not dep.wrapper.supports_generation()):
+                    # reject BEFORE tearing down the healthy deployment
+                    raise ValueError(
+                        f"{asset_id!r} does not support the batched "
+                        "service (no generation protocol)")
+                self.undeploy(asset_id)
+            with self._lock:
+                if asset_id in self._deployments:
+                    continue                    # someone redeployed first
+                done = self._building.get(asset_id)
+                if done is None:
+                    done = self._building[asset_id] = threading.Event()
+                    break                       # we are the builder
+            # another thread is building this asset: wait, then re-check —
+            # if its build failed we loop around and try to build ourselves
+            done.wait()
+        try:
+            asset = self.registry.get(asset_id)
+            wrapper = asset.build(**build_kw)       # the "container start"
+            service = make_service(
+                wrapper, service_mode or self.service_mode, **self.service_kw)
+            dep = Deployment(asset_id, service, mesh_slice=mesh_slice)
+            with self._lock:
+                self._deployments[asset_id] = dep
+            return dep
+        finally:
+            with self._lock:
+                self._building.pop(asset_id, None)
+            done.set()
 
     def undeploy(self, asset_id: str) -> bool:
         with self._lock:
-            return self._deployments.pop(asset_id, None) is not None
+            dep = self._deployments.pop(asset_id, None)
+        if dep is None:
+            return False
+        dep.service.close()
+        return True
 
     def get(self, asset_id: str) -> Deployment:
         try:
@@ -98,6 +173,7 @@ class DeploymentManager:
                 "errors": d.stats.errors,
                 "mean_latency_ms": round(d.stats.mean_latency_ms, 2),
                 "mesh_slice": d.mesh_slice,
+                "service": d.service.kind,
             }
-            for aid, d in self._deployments.items()
+            for aid, d in list(self._deployments.items())
         }

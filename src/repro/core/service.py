@@ -1,0 +1,485 @@
+"""Inference services — the execution strategy behind a deployment.
+
+The v1 stack hard-wired ``Deployment.predict -> wrapper.predict()``: one
+HTTP thread, one model call, no batching. This module makes the execution
+strategy pluggable:
+
+- :class:`SyncService`     current semantics — the request thread runs the
+                           wrapper directly (right for classifiers and
+                           cheap per-call models).
+- :class:`BatchedService`  owns a :class:`ContinuousBatchingScheduler` on a
+                           background worker thread; concurrent HTTP
+                           requests land in a bounded queue, a short
+                           *batching window* lets simultaneous arrivals
+                           coalesce, and the engine decodes them as ONE
+                           batch. Throughput scales with batch size instead
+                           of thread count.
+
+Both speak the same envelope contract as ``wrapper.predict_envelope`` so
+the API layer (v1 or v2) cannot tell them apart, and both support async
+*jobs* (submit -> poll) for long generations.
+"""
+
+from __future__ import annotations
+
+import abc
+import threading
+import time
+import uuid
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.wrapper import MAXError, MAXModelWrapper
+
+
+class ServiceOverloaded(MAXError):
+    """Bounded request queue is full — client should back off (HTTP 429)."""
+
+
+# ---------------------------------------------------------------------------
+# Async jobs (submit -> poll), shared by both service kinds.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Job:
+    id: str
+    model_id: str
+    state: str = "queued"             # queued | running | done | error
+    submitted_at: float = field(default_factory=time.time)
+    finished_at: Optional[float] = None
+    result: Optional[Any] = None      # envelope when done
+    error: Optional[str] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        out = {"id": self.id, "model_id": self.model_id, "state": self.state,
+               "submitted_at": self.submitted_at}
+        if self.finished_at is not None:
+            out["finished_at"] = self.finished_at
+        if self.result is not None:
+            out["result"] = self.result
+        if self.error is not None:
+            out["error"] = self.error
+        return out
+
+
+class InferenceService(abc.ABC):
+    """Uniform predict/predict_batch/jobs surface over one wrapped model."""
+
+    kind: str = "abstract"
+    retain_jobs: int = 512            # finished jobs kept for polling
+
+    def __init__(self, wrapper: MAXModelWrapper):
+        self.wrapper = wrapper
+        self._jobs: Dict[str, Job] = {}
+        self._jobs_lock = threading.Lock()
+
+    @property
+    def model_id(self) -> str:
+        return self.wrapper.metadata.id
+
+    # -- predictions -------------------------------------------------------
+
+    @abc.abstractmethod
+    def predict(self, inp: Any) -> Dict[str, Any]:
+        """Return the standardized envelope for one input."""
+
+    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+        """Per-input envelopes for an explicit multi-input request."""
+        return [self.predict(i) for i in inputs]
+
+    # -- jobs --------------------------------------------------------------
+
+    def _new_job(self) -> Job:
+        job = Job(id=uuid.uuid4().hex[:12], model_id=self.model_id)
+        with self._jobs_lock:
+            self._jobs[job.id] = job
+        return job
+
+    def _finish_job(self, job: Job, envelope: Dict[str, Any]):
+        with self._jobs_lock:
+            # state flips LAST: pollers read without the lock, and a job
+            # observed as done/error must already carry result+finished_at
+            job.result = envelope
+            job.error = envelope.get("error") \
+                if envelope.get("status") != "ok" else None
+            job.finished_at = time.time()
+            job.state = "done" if envelope.get("status") == "ok" else "error"
+            # bounded retention, like the scheduler's completed map: evict
+            # the oldest finished jobs so records don't grow with uptime
+            finished = [jid for jid, j in self._jobs.items()
+                        if j.state in ("done", "error")]
+            for jid in finished[:max(0, len(finished) - self.retain_jobs)]:
+                del self._jobs[jid]
+
+    @abc.abstractmethod
+    def submit_job(self, inp: Any) -> Job:
+        """Enqueue ``inp`` for asynchronous prediction; returns immediately."""
+
+    def get_job(self, job_id: str) -> Job:
+        with self._jobs_lock:
+            try:
+                return self._jobs[job_id]
+            except KeyError:
+                raise KeyError(f"unknown job {job_id!r}") from None
+
+    # -- lifecycle / introspection ----------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._jobs_lock:
+            jobs = len(self._jobs)
+        return {"kind": self.kind, "jobs": jobs}
+
+    def close(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# SyncService — v1 semantics behind the uniform interface.
+# ---------------------------------------------------------------------------
+
+class SyncService(InferenceService):
+    kind = "sync"
+
+    def __init__(self, wrapper: MAXModelWrapper):
+        super().__init__(wrapper)
+        # generation wrappers keep decode-slot state on their engine; two
+        # HTTP threads calling predict concurrently would race on it (the
+        # pre-service server had exactly this bug), so those run one call
+        # at a time. Stateless wrappers (classifiers) stay concurrent.
+        self._serialize = wrapper.supports_generation()
+        self._predict_lock = threading.Lock()
+        self._job_queue: deque = deque()
+        self._job_cv = threading.Condition()
+        self._job_thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    def predict(self, inp: Any) -> Dict[str, Any]:
+        if self._serialize:
+            with self._predict_lock:
+                return self.wrapper.predict_envelope(inp)
+        return self.wrapper.predict_envelope(inp)
+
+    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+        if self._serialize:
+            with self._predict_lock:
+                return self.wrapper.predict_batch_envelope(inputs)
+        return self.wrapper.predict_batch_envelope(inputs)
+
+    def submit_job(self, inp: Any) -> Job:
+        job = self._new_job()
+        with self._job_cv:
+            if self._closed:
+                with self._jobs_lock:
+                    self._jobs.pop(job.id, None)
+                raise MAXError(f"service for {self.model_id!r} is closed")
+            if self._job_thread is None:        # lazy single worker
+                self._job_thread = threading.Thread(
+                    target=self._job_worker, daemon=True,
+                    name=f"sync-jobs-{self.model_id}")
+                self._job_thread.start()
+            self._job_queue.append((job, inp))
+            self._job_cv.notify()
+        return job
+
+    def _job_worker(self):
+        while True:
+            with self._job_cv:
+                while not self._job_queue and not self._closed:
+                    self._job_cv.wait()
+                if self._closed:
+                    return
+                job, inp = self._job_queue.popleft()
+            job.state = "running"
+            try:
+                env = self.predict(inp)
+            except Exception as e:              # fault isolation per job
+                env = {"status": "error", "error": str(e),
+                       "model_id": self.model_id}
+            self._finish_job(job, env)
+
+    def close(self):
+        with self._job_cv:
+            self._closed = True
+            queued = list(self._job_queue)
+            self._job_queue.clear()
+            self._job_cv.notify_all()
+        # fail undrained jobs now — pollers must not spin on 'queued' forever
+        for job, _ in queued:
+            self._finish_job(job, {
+                "status": "error",
+                "error": f"service for {self.model_id!r} is closed",
+                "model_id": self.model_id})
+
+
+# ---------------------------------------------------------------------------
+# BatchedService — the continuous-batching bridge.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Work:
+    """One logical generation riding the scheduler."""
+    inp: Any
+    prompt: List[int]
+    gen_kw: Dict[str, Any]
+    extra: Optional[Dict[str, Any]]
+    t0: float
+    event: threading.Event = field(default_factory=threading.Event)
+    job: Optional[Job] = None
+    request: Optional[Any] = None     # scheduler Request once admitted
+    envelope: Optional[Dict[str, Any]] = None
+
+
+@dataclass
+class BatchStats:
+    """Service-level counters; batch-size/occupancy numbers live on the
+    scheduler's own stats (the single source of truth for decode batches)."""
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+
+
+class BatchedService(InferenceService):
+    """Aggregates concurrent requests into engine decode batches.
+
+    A single worker thread owns the :class:`ContinuousBatchingScheduler`
+    (and therefore the engine cache) — HTTP threads only enqueue work and
+    wait on a per-request event, so no engine state is ever touched
+    concurrently. ``batch_window_s`` is the coalescing window: when the
+    engine is idle and the first request arrives, the worker waits that
+    long (or until the batch is full) for simultaneous arrivals before the
+    first prefill, then keeps admitting newcomers every tick (continuous
+    batching proper).
+    """
+
+    kind = "batched"
+
+    def __init__(self, wrapper: MAXModelWrapper, *,
+                 batch_window_s: float = 0.01, max_queue: int = 64,
+                 request_timeout_s: float = 300.0):
+        super().__init__(wrapper)
+        if not wrapper.supports_generation():
+            raise ValueError(
+                f"{wrapper.metadata.id!r} does not implement the generation "
+                "protocol (prepare_generation/format_generation); "
+                "use SyncService")
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+        self.engine = wrapper.engine
+        self.scheduler = ContinuousBatchingScheduler(self.engine)
+        self.batch_window_s = batch_window_s
+        self.max_queue = max_queue
+        self.request_timeout_s = request_timeout_s
+        self.batch_stats = BatchStats()
+        self._pending: deque[_Work] = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._worker_error: Optional[str] = None
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True,
+            name=f"batched-{self.model_id}")
+        self._thread.start()
+
+    # -- request path ------------------------------------------------------
+
+    def _enqueue(self, inp: Any, job: Optional[Job] = None) -> _Work:
+        prompt, gen_kw, extra = self.wrapper.prepare_generation(inp)
+        # reject here, on the request thread: a raise inside the worker's
+        # tick would fail every request sharing the decode batch
+        if not self.engine.fits_prompt(len(prompt)):
+            raise MAXError(
+                f"prompt of {len(prompt)} tokens does not fit max_seq "
+                f"{self.engine.max_seq}")
+        work = _Work(inp=inp, prompt=prompt, gen_kw=gen_kw, extra=extra,
+                     t0=time.perf_counter(), job=job)
+        with self._cv:
+            if self._closed:
+                raise MAXError(f"service for {self.model_id!r} is closed")
+            if len(self._pending) >= self.max_queue:
+                self.batch_stats.rejected += 1
+                raise ServiceOverloaded(
+                    f"request queue full ({self.max_queue}); retry later")
+            self._pending.append(work)
+            self.batch_stats.submitted += 1
+            self._cv.notify_all()
+        return work
+
+    def _error_envelope(self, msg: str,
+                        code: str = "INVALID_INPUT") -> Dict[str, Any]:
+        # "code" is consumed (and stripped) by the API layer: v2 maps it to
+        # a structured error + HTTP status, v1 drops it
+        return {"status": "error", "error": msg, "code": code,
+                "model_id": self.model_id}
+
+    def _enqueue_or_error(self, inp: Any):
+        try:
+            return self._enqueue(inp)
+        except ServiceOverloaded as e:
+            return self._error_envelope(str(e), "QUEUE_FULL")
+        except MAXError as e:
+            return self._error_envelope(str(e))
+
+    def _await(self, work) -> Dict[str, Any]:
+        if isinstance(work, dict):              # rejected at enqueue
+            return work
+        if not work.event.wait(self.request_timeout_s):
+            return self._error_envelope(
+                f"timed out after {self.request_timeout_s}s", "TIMEOUT")
+        return work.envelope
+
+    def predict(self, inp: Any) -> Dict[str, Any]:
+        return self._await(self._enqueue_or_error(inp))
+
+    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+        # enqueue all first so they share decode batches, then wait all
+        return [self._await(w)
+                for w in [self._enqueue_or_error(i) for i in inputs]]
+
+    def submit_job(self, inp: Any) -> Job:
+        job = self._new_job()
+        try:
+            self._enqueue(inp, job=job)
+        except MAXError:
+            # bad input / full queue is a submit-time failure: surface it
+            # as the HTTP error (429/400), not a 202 with a dead job
+            with self._jobs_lock:
+                self._jobs.pop(job.id, None)
+            raise
+        return job
+
+    # -- worker ------------------------------------------------------------
+
+    def _drain_pending(self, inflight: Dict[int, _Work]):
+        """Move queued work into the scheduler (worker thread only)."""
+        while True:
+            with self._cv:
+                if not self._pending:
+                    return
+                work = self._pending.popleft()
+            if work.job is not None:
+                work.job.state = "running"
+            work.request = self.scheduler.submit(
+                work.prompt, extra=work.extra, **work.gen_kw)
+            inflight[work.request.id] = work
+
+    def _finalize(self, work: _Work):
+        req = work.request
+        try:
+            preds = self.wrapper.format_generation(req.output,
+                                                   len(work.prompt))
+            env = {"status": "ok", "predictions": preds,
+                   "model_id": self.model_id,
+                   "latency_ms": round(
+                       (time.perf_counter() - work.t0) * 1e3, 3)}
+        except MAXError as e:
+            env = self._error_envelope(str(e))
+        work.envelope = env
+        self.batch_stats.completed += 1
+        if work.job is not None:
+            self._finish_job(work.job, env)
+        work.event.set()
+
+    def _fail_all(self, inflight: Dict[int, _Work], msg: str,
+                  code: str = "INTERNAL"):
+        for work in inflight.values():
+            work.envelope = self._error_envelope(msg, code)
+            if work.job is not None:
+                self._finish_job(work.job, work.envelope)
+            work.event.set()
+        inflight.clear()
+
+    def _worker(self):
+        inflight: Dict[int, _Work] = {}
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if self._closed:
+                    break
+                # coalescing window: give simultaneous arrivals a chance to
+                # share the first prefill/decode batch
+                deadline = time.monotonic() + self.batch_window_s
+                while (len(self._pending) < self.engine.max_batch
+                       and not self._closed):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                if self._closed:
+                    break
+            try:
+                self._run_batch(inflight)
+            except Exception as e:              # fault isolation: the worker
+                self._worker_error = str(e)     # must survive bad batches
+                self._fail_all(inflight, f"batch failed: {e}", "INTERNAL")
+        self._fail_all(inflight,
+                       f"service for {self.model_id!r} is closed", "INTERNAL")
+
+    def _run_batch(self, inflight: Dict[int, _Work]):
+        """Tick the scheduler until it drains, admitting newcomers between
+        ticks — later arrivals join the running batch (continuous batching)."""
+        sched = self.scheduler
+        self._drain_pending(inflight)
+        while sched.has_work():
+            sched.tick()
+            for rid in [rid for rid, w in inflight.items()
+                        if w.request.done]:
+                self._finalize(inflight.pop(rid))
+            self._drain_pending(inflight)
+
+    # -- introspection / lifecycle ----------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        out = super().stats()
+        bs, ss = self.batch_stats, self.scheduler.stats
+        out.update({
+            "submitted": bs.submitted,
+            "completed": bs.completed,
+            "rejected": bs.rejected,
+            "decode_steps": ss.decode_steps,
+            "mean_batch_size": round(ss.mean_batch_size, 3),
+            "max_batch_seen": ss.max_occupancy,
+            "batch_window_s": self.batch_window_s,
+            "queue_depth": len(self._pending),
+            "engine_max_batch": self.engine.max_batch,
+        })
+        if self._worker_error:
+            out["last_worker_error"] = self._worker_error
+        return out
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            queued = list(self._pending)
+            self._pending.clear()
+            self._cv.notify_all()
+        # fail queued work immediately — waiters must not sit out the full
+        # request timeout on an undeployed model (inflight work is failed
+        # by the worker on its way out)
+        msg = f"service for {self.model_id!r} is closed"
+        for work in queued:
+            work.envelope = self._error_envelope(msg, "INTERNAL")
+            if work.job is not None:
+                self._finish_job(work.job, work.envelope)
+            work.event.set()
+        self._thread.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def make_service(wrapper: MAXModelWrapper, mode: str = "auto",
+                 **service_kw) -> InferenceService:
+    """``mode``: 'sync' | 'batched' | 'auto' (batched iff the wrapper speaks
+    the generation protocol — classifiers and other per-call models stay
+    sync)."""
+    if mode == "sync":
+        return SyncService(wrapper)
+    if mode == "batched":
+        return BatchedService(wrapper, **service_kw)
+    if mode == "auto":
+        if wrapper.supports_generation():
+            return BatchedService(wrapper, **service_kw)
+        return SyncService(wrapper)
+    raise ValueError(f"unknown service mode {mode!r} "
+                     "(expected sync|batched|auto)")

@@ -90,6 +90,53 @@ class MAXModelWrapper(abc.ABC):
             return {"status": "error", "error": str(e),
                     "model_id": self.metadata.id}
 
+    # -- optional batch hook ---------------------------------------------------
+
+    def predict_batch(self, inputs: List[Any]) -> List[Any]:
+        """Predictions for several independent inputs. The default loops
+        ``predict``; wrappers whose backend can score many inputs in one
+        compiled call override this (the v2 ``predict_batch`` endpoint and
+        ``SyncService`` route through here)."""
+        return [self.predict(i) for i in inputs]
+
+    def predict_batch_envelope(self, inputs: List[Any]
+                               ) -> List[Dict[str, Any]]:
+        """Per-input envelopes — one input failing must not fail the rest."""
+        if type(self).predict_batch is MAXModelWrapper.predict_batch:
+            # no real batch implementation: go per-input directly, so a bad
+            # input fails alone instead of forcing a full re-run
+            return [self.predict_envelope(i) for i in inputs]
+        t0 = time.perf_counter()
+        try:
+            all_preds = self.predict_batch(inputs)
+        except MAXError:
+            # overridden batch path rejected the set (typically during
+            # pre-processing, before the expensive scoring) — isolate
+            return [self.predict_envelope(i) for i in inputs]
+        dt = round((time.perf_counter() - t0) * 1e3 / max(len(inputs), 1), 3)
+        return [{"status": "ok", "predictions": p,
+                 "model_id": self.metadata.id, "latency_ms": dt}
+                for p in all_preds]
+
+    # -- optional generation protocol (continuous batching) ---------------------
+
+    def supports_generation(self) -> bool:
+        """True when the wrapper exposes ``prepare_generation`` /
+        ``format_generation`` (and a slot-based ``engine``) so a
+        ``BatchedService`` can coalesce its requests into decode batches."""
+        return (type(self).prepare_generation
+                is not MAXModelWrapper.prepare_generation)
+
+    def prepare_generation(self, inp: Any):
+        """Validate+tokenize ``inp`` -> ``(prompt_tokens, gen_kwargs, extra)``
+        for the scheduler. Raise :class:`MAXError` for bad input."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support batched generation")
+
+    def format_generation(self, tokens: List[int], prompt_len: int) -> Any:
+        """Generated token ids -> the wrapper's JSON predictions."""
+        raise NotImplementedError
+
     # -- optional endpoints -----------------------------------------------------
 
     def labels(self) -> List[str]:

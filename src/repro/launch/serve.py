@@ -1,7 +1,12 @@
-"""Serving launcher: start the MAX REST stack.
+"""Serving launcher: start the MAX REST stack (v1 + v2 surfaces).
 
     PYTHONPATH=src python -m repro.launch.serve --port 8080 \
-        --deploy max-sentiment --deploy qwen3-4b
+        --deploy max-sentiment --deploy qwen3-4b --service auto
+
+``--service`` picks the execution strategy behind each deployment:
+``sync`` (per-request, v1 semantics), ``batched`` (continuous batching —
+concurrent HTTP predicts coalesce into engine decode batches), or ``auto``
+(batched for generative wrappers, sync otherwise).
 
 Deployed assets use reduced (CPU-runnable) configs by default; on a pod the
 same launcher would pass ``smoke=False`` build kwargs and a mesh slice per
@@ -22,6 +27,11 @@ def main():
                     help="asset id to deploy at startup (repeatable)")
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--service", default="auto",
+                    choices=["sync", "batched", "auto"],
+                    help="inference service mode for deployments")
+    ap.add_argument("--batch-window-ms", type=float, default=10.0,
+                    help="coalescing window for the batched service")
     ap.add_argument("--duration", type=float, default=None,
                     help="serve for N seconds then exit (default: forever)")
     args = ap.parse_args()
@@ -31,15 +41,19 @@ def main():
 
     server = MAXServer(
         host=args.host, port=args.port,
-        build_kw={"max_seq": args.max_seq, "max_batch": args.max_batch})
+        build_kw={"max_seq": args.max_seq, "max_batch": args.max_batch},
+        service_mode=args.service,
+        service_kw={"batch_window_s": args.batch_window_ms / 1e3})
     server.start()
     print(f"[serve] Model Asset eXchange at {server.url}")
     print(f"[serve] {len(EXCHANGE)} assets registered; "
-          f"GET /models, /swagger.json")
+          f"GET /models, /v2/models, /v2/routes, /swagger.json")
+    print(f"[serve] service mode: {args.service} "
+          f"(window {args.batch_window_ms:.0f}ms)")
     for asset_id in args.deploy:
         t0 = time.perf_counter()
-        server.manager.deploy(asset_id, **server.build_kw)
-        print(f"[serve] deployed {asset_id} "
+        dep = server.manager.deploy(asset_id, **server.build_kw)
+        print(f"[serve] deployed {asset_id} [{dep.service.kind}] "
               f"({time.perf_counter() - t0:.1f}s)")
     try:
         if args.duration:

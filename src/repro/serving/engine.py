@@ -104,6 +104,12 @@ class GenerationEngine:
 
     # -- public API ------------------------------------------------------------
 
+    def fits_prompt(self, n: int) -> bool:
+        """Whether an ``n``-token prompt fits a slot (its padding bucket must
+        not exceed ``max_seq``) — lets callers reject before occupying the
+        admission path."""
+        return _bucket(n) <= self.max_seq
+
     def free_slots(self) -> List[int]:
         return [i for i in range(self.max_batch) if not self._active[i]]
 

@@ -12,11 +12,17 @@ Invariants (property-tested):
 - admission is FIFO (no starvation): requests are admitted in arrival order;
 - every admitted request retires with <= max_new_tokens generated;
 - throughput accounting: sum of emitted tokens == sum over requests.
+
+Thread-safety: ``submit``/``poll``/``tick`` take an internal lock so HTTP
+threads can enqueue while a single worker thread drives ``tick`` (the model
+used by ``core.service.BatchedService``). Engine state is only ever touched
+from inside ``tick``, i.e. from whichever single thread drives the loop.
 """
 
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -54,29 +60,53 @@ class SchedulerStats:
     emitted_tokens: int = 0
     completed: int = 0
     wall_s: float = 0.0
+    occupancy_sum: int = 0            # sum of active-batch sizes per decode
+    max_occupancy: int = 0
 
     @property
     def tokens_per_s(self) -> float:
         return self.emitted_tokens / self.wall_s if self.wall_s else 0.0
 
+    @property
+    def mean_batch_size(self) -> float:
+        return self.occupancy_sum / self.decode_steps \
+            if self.decode_steps else 0.0
+
 
 class ContinuousBatchingScheduler:
-    def __init__(self, engine: GenerationEngine, *, seed: int = 0):
+    def __init__(self, engine: GenerationEngine, *, seed: int = 0,
+                 retain_completed: int = 1024):
         self.engine = engine
         self.queue: deque[Request] = deque()
         self.active: Dict[int, Request] = {}      # slot -> request
         self._last_tok = np.zeros((engine.max_batch,), np.int32)
         self._rng = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
+        self._lock = threading.RLock()
+        # bounded: callers that hold their own Request reference (the
+        # batched service) never poll, so retention must not grow with
+        # server lifetime
+        self.retain_completed = retain_completed
+        self._completed: Dict[int, Request] = {}
         self.stats = SchedulerStats()
 
     def submit(self, prompt: List[int], *, max_new_tokens: int = 32,
                temperature: float = 0.0,
                extra: Optional[Dict[str, Any]] = None) -> Request:
-        req = Request(next(self._ids), list(prompt), max_new_tokens,
-                      temperature, extra)
-        self.queue.append(req)
-        return req
+        with self._lock:
+            req = Request(next(self._ids), list(prompt), max_new_tokens,
+                          temperature, extra)
+            self.queue.append(req)
+            return req
+
+    def poll(self, request_id: int) -> Optional[Request]:
+        """Completed request by id, else None (still queued/active)."""
+        with self._lock:
+            return self._completed.get(request_id)
+
+    def has_work(self) -> bool:
+        with self._lock:
+            return bool(self.queue or self.active)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -105,34 +135,43 @@ class ContinuousBatchingScheduler:
             req.finished_at_tick = self.stats.ticks
             self.engine.release_slot(req.slot)
             del self.active[req.slot]
+            req.extra = None          # may pin large arrays (image embeds…)
+            self._completed[req.id] = req
+            while len(self._completed) > self.retain_completed:
+                self._completed.pop(next(iter(self._completed)))
             self.stats.completed += 1
 
     def tick(self):
         """One scheduler iteration: admit -> decode -> retire."""
-        self._admit()
-        if not self.active:
+        with self._lock:
+            self._admit()
+            if not self.active:
+                self.stats.ticks += 1
+                return
+            # temperature is uniform per decode step; use max over active
+            # (the engine masks inactive slots). Mixed-temperature batches
+            # would need a per-slot temperature vector — kept scalar for
+            # compile stability.
+            temp = max(r.temperature for r in self.active.values())
+            self._rng, sub = jax.random.split(self._rng)
+            self.stats.occupancy_sum += len(self.active)
+            self.stats.max_occupancy = max(self.stats.max_occupancy,
+                                           len(self.active))
+            nxt = self.engine.step(self._last_tok, sub, temp)
+            self.stats.decode_steps += 1
+            for slot, req in list(self.active.items()):
+                tok = int(nxt[slot])
+                req.output.append(tok)
+                self._last_tok[slot] = tok
+                self.stats.emitted_tokens += 1
+                self._maybe_finish(req)
             self.stats.ticks += 1
-            return
-        # temperature is uniform per decode step; use max over active (the
-        # engine masks inactive slots). Mixed-temperature batches would need
-        # a per-slot temperature vector — kept scalar for compile stability.
-        temp = max(r.temperature for r in self.active.values())
-        self._rng, sub = jax.random.split(self._rng)
-        nxt = self.engine.step(self._last_tok, sub, temp)
-        self.stats.decode_steps += 1
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            self._last_tok[slot] = tok
-            self.stats.emitted_tokens += 1
-            self._maybe_finish(req)
-        self.stats.ticks += 1
 
     def run(self, *, max_ticks: int = 10_000) -> SchedulerStats:
         """Run until queue + active drain (or tick budget)."""
         t0 = time.perf_counter()
         for _ in range(max_ticks):
-            if not self.queue and not self.active:
+            if not self.has_work():
                 break
             self.tick()
         self.stats.wall_s = time.perf_counter() - t0

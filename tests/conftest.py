@@ -1,9 +1,117 @@
+import functools
+import inspect
+import random
+import sys
+import types
+
 import jax
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — tests must see the real single CPU
 # device (the dry-run forces 512 devices in its own process only).
+
+# ---------------------------------------------------------------------------
+# Offline-container shim: the image has no `hypothesis`, and installing
+# packages is off-limits. Provide a tiny deterministic property-testing
+# stand-in (same decorator surface: @given/@settings + the strategies the
+# suite uses) so the property tests still run N seeded examples instead of
+# failing at collection. If real hypothesis is ever installed it wins.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda r: fn(self._draw(r)))
+
+        def filter(self, pred):
+            def draw(r):
+                for _ in range(100):
+                    x = self._draw(r)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate too strict")
+            return _Strategy(draw)
+
+    _TEXT_ALPHABET = ("abcdefghij \t\n\x00éλ🙂0123456789"
+                      "ABCDEFGHIJKLMNOPQRSTUVWXYZ!@#$%^&*()_+-=")
+
+    def _strategies() -> types.ModuleType:
+        st = types.ModuleType("hypothesis.strategies")
+
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        def lists(elems, min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: [elems.example(r)
+                           for _ in range(r.randint(min_size, max_size))])
+
+        def text(alphabet=_TEXT_ALPHABET, min_size=0, max_size=20):
+            chars = list(alphabet)
+            return _Strategy(
+                lambda r: "".join(r.choice(chars)
+                                  for _ in range(r.randint(min_size, max_size))))
+
+        st.integers, st.booleans, st.floats = integers, booleans, floats
+        st.sampled_from, st.lists, st.text = sampled_from, lists, text
+        return st
+
+    def _given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            bound = dict(zip(names, pos_strategies))
+            bound.update(kw_strategies)
+            remaining = [p for n, p in sig.parameters.items() if n not in bound]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in bound.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__          # pytest must see the new signature
+            return wrapper
+        return deco
+
+    def _settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def _assume(condition):
+        if not condition:
+            pytest.skip("assumption not met (hypothesis shim)")
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given, _hyp.settings, _hyp.assume = _given, _settings, _assume
+    _hyp.strategies = _strategies()
+    _hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, function_scoped_fixture=None)
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies
 
 
 @pytest.fixture

@@ -1,0 +1,265 @@
+"""v2 REST surface: versioned routing, async batched inference, jobs,
+undeploy, structured errors, and the route-table <-> swagger invariant."""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.core import MAXServer
+
+BUILD_KW = {"max_seq": 64, "max_batch": 4}
+# generous coalescing window so concurrent test clients reliably share a batch
+SERVICE_KW = {"batch_window_s": 0.15}
+
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw=BUILD_KW, service_kw=SERVICE_KW) as s:
+        yield s
+
+
+def _req(server, method, path, payload=None):
+    data = json.dumps(payload).encode() if payload is not None else None
+    req = urllib.request.Request(server.url + path, data,
+                                 {"Content-Type": "application/json"},
+                                 method=method)
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _get(server, path):
+    return _req(server, "GET", path)
+
+
+def _post(server, path, payload):
+    return _req(server, "POST", path, payload)
+
+
+# -- routing & spec ----------------------------------------------------------
+
+def test_swagger_covers_every_route(server):
+    """Acceptance: swagger.json enumerates 100% of routable endpoints —
+    asserted by diffing the live route table against the spec."""
+    code, spec = _get(server, "/swagger.json")
+    assert code == 200 and spec["openapi"].startswith("3.")
+    code, table = _get(server, "/v2/routes")
+    assert code == 200 and len(table["routes"]) >= 20
+    missing = [r for r in table["routes"]
+               if r["path"] not in spec["paths"]
+               or r["method"].lower() not in spec["paths"][r["path"]]]
+    assert missing == [], f"routes absent from swagger: {missing}"
+    # both API generations are in the table
+    versions = {r["version"] for r in table["routes"]}
+    assert versions == {"v1", "v2"}
+
+
+def test_method_not_allowed_is_405(server):
+    code, env = _get(server, "/v2/model/qwen3-4b/predict")
+    assert code == 405
+    assert env["error"]["code"] == "METHOD_NOT_ALLOWED"
+    code, _ = _req(server, "DELETE", "/models")
+    assert code == 405
+
+
+def test_unknown_v2_route_is_structured_404(server):
+    code, env = _get(server, "/v2/nope")
+    assert code == 404 and env["error"]["code"] == "NOT_FOUND"
+
+
+# -- v1 back-compat ----------------------------------------------------------
+
+def test_v1_prefix_aliases_bare_routes(server):
+    for path in ("/models", "/health", "/model/rwkv6-7b/metadata"):
+        bare, pref = _get(server, path), _get(server, "/v1" + path)
+        assert bare[0] == pref[0] == 200
+        assert bare[1] == pref[1]
+
+
+def test_v1_envelope_byte_compatible(server):
+    """Every existing v1 route still answers the exact envelope shape."""
+    code, env = _post(server, "/model/max-sentiment/predict",
+                      {"input": ["good", "bad"]})
+    assert code == 200
+    assert set(env) == {"status", "predictions", "model_id", "latency_ms"}
+    assert env["status"] == "ok" and len(env["predictions"]) == 2
+
+    code, env = _post(server, "/model/max-sentiment/predict",
+                      {"input": {"no_text": 1}})
+    assert code == 400
+    assert env["status"] == "error" and isinstance(env["error"], str)
+
+    code, env = _post(server, "/model/nope/predict", {"input": "x"})
+    assert code == 404
+    assert env["status"] == "error" and isinstance(env["error"], str)
+
+
+# -- explicit input semantics (v1 AND v2) ------------------------------------
+
+@pytest.mark.parametrize("prefix", ["", "/v2"])
+def test_missing_input_is_400(server, prefix):
+    code, env = _post(server, f"{prefix}/model/max-sentiment/predict", {})
+    assert code == 400 and env["status"] == "error"
+    code, env = _post(server, f"{prefix}/model/max-sentiment/predict",
+                      {"text": "not wrapped in input"})
+    assert code == 400
+    code, env = _post(server, f"{prefix}/model/max-sentiment/predict",
+                      {"input": None})
+    assert code == 400
+
+
+def test_v2_input_errors_are_structured(server):
+    code, env = _post(server, "/v2/model/max-sentiment/predict", {})
+    assert env["error"]["code"] == "MISSING_INPUT"
+    code, env = _post(server, "/v2/model/max-sentiment/predict",
+                      {"input": None})
+    assert env["error"]["code"] == "INVALID_INPUT"
+    code, env = _post(server, "/v2/model/nope/predict", {"input": "x"})
+    assert code == 404 and env["error"]["code"] == "MODEL_NOT_FOUND"
+
+
+# -- v2 predict / batching ---------------------------------------------------
+
+def test_v2_predict_single(server):
+    code, env = _post(server, "/v2/model/qwen3-4b/predict",
+                      {"input": {"text": "hello", "max_new_tokens": 4}})
+    assert code == 200 and env["status"] == "ok"
+    assert isinstance(env["predictions"][0]["generated_text"], str)
+    assert env["model_id"] == "qwen3-4b"
+
+
+def test_concurrent_clients_coalesce_into_decode_batches(server):
+    """Acceptance: N simultaneous HTTP predicts are served as shared engine
+    decode batches (mean batch size > 1, at least one batch with >= 2)."""
+    model = "minicpm-2b"                  # untouched by other tests here
+    # warm build+compile so the timed burst measures steady-state behavior
+    code, _ = _post(server, f"/v2/model/{model}/predict",
+                    {"input": {"text": "warm", "max_new_tokens": 2}})
+    assert code == 200
+
+    n, results = 4, {}
+
+    def client(i):
+        results[i] = _post(server, f"/v2/model/{model}/predict",
+                           {"input": {"text": f"req {i}",
+                                      "max_new_tokens": 8}})
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(results[i][0] == 200 and results[i][1]["status"] == "ok"
+               for i in range(n)), results
+
+    code, stats = _get(server, f"/v2/model/{model}/stats")
+    assert code == 200
+    svc = stats["service"]
+    assert svc["kind"] == "batched"
+    assert svc["completed"] >= n + 1
+    assert svc["max_batch_seen"] >= 2, svc
+    assert svc["mean_batch_size"] > 1.0, svc
+
+
+def test_v2_predict_batch_endpoint(server):
+    code, env = _post(server, "/v2/model/max-sentiment/predict_batch",
+                      {"inputs": ["nice", "awful", "fine"]})
+    assert code == 200 and env["status"] == "ok" and env["count"] == 3
+    for r in env["results"]:
+        assert r["status"] == "ok"
+        assert set(r["predictions"][0][0]) == {"positive", "negative"}
+
+    # one bad input degrades only its own result
+    code, env = _post(server, "/v2/model/qwen3-4b/predict_batch",
+                      {"inputs": [{"text": "ok", "max_new_tokens": 2},
+                                  {"bad": "shape"}]})
+    assert code == 200 and env["status"] == "partial"
+    assert env["results"][0]["status"] == "ok"
+    assert env["results"][1]["status"] == "error"
+
+    code, env = _post(server, "/v2/model/qwen3-4b/predict_batch",
+                      {"inputs": []})
+    assert code == 400 and env["error"]["code"] == "INVALID_INPUT"
+
+
+# -- jobs --------------------------------------------------------------------
+
+def test_job_lifecycle_submit_poll_result(server):
+    code, sub = _post(server, "/v2/model/qwen3-4b/jobs",
+                      {"input": {"text": "generate", "max_new_tokens": 6}})
+    assert code == 202 and sub["status"] == "ok"
+    job_id = sub["job"]["id"]
+    assert sub["poll"] == f"/v2/jobs/{job_id}"
+    assert sub["job"]["state"] in ("queued", "running")
+
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        code, env = _get(server, f"/v2/jobs/{job_id}")
+        assert code == 200
+        if env["job"]["state"] in ("done", "error"):
+            break
+        time.sleep(0.05)
+    assert env["job"]["state"] == "done", env
+    result = env["job"]["result"]
+    assert result["status"] == "ok"
+    assert len(result["predictions"][0]["generated_text"]) > 0
+    assert env["job"]["finished_at"] >= env["job"]["submitted_at"]
+
+
+def test_unknown_job_404(server):
+    code, env = _get(server, "/v2/jobs/deadbeef")
+    assert code == 404 and env["error"]["code"] == "JOB_NOT_FOUND"
+
+
+# -- deploy / undeploy -------------------------------------------------------
+
+def test_v2_deploy_and_undeploy_lifecycle(server):
+    model = "max-caption"
+    code, env = _post(server, f"/v2/model/{model}/deploy",
+                      {"service": "sync"})
+    assert code == 200 and env["service"] == "sync"
+    assert model in env["deployed"]
+
+    code, env = _post(server, f"/v2/model/{model}/predict",
+                      {"input": {"image_id": 1, "max_new_tokens": 2}})
+    assert code == 200 and env["status"] == "ok"
+
+    code, env = _req(server, "DELETE", f"/v2/model/{model}")
+    assert code == 200 and model not in env["deployed"]
+    assert model not in _get(server, "/health")[1]["deployments"]
+
+    code, env = _req(server, "DELETE", f"/v2/model/{model}")
+    assert code == 404 and env["error"]["code"] == "NOT_DEPLOYED"
+
+    code, env = _get(server, f"/v2/model/{model}/stats")
+    assert code == 404 and env["error"]["code"] == "NOT_DEPLOYED"
+
+    code, env = _post(server, f"/v2/model/{model}/deploy",
+                      {"service": "bogus"})
+    assert code == 400 and env["error"]["code"] == "INVALID_INPUT"
+
+    # switching a classifier to batched is infeasible — 400, and the
+    # running sync deployment must survive the rejected request
+    _post(server, "/model/max-sentiment/predict", {"input": ["warm"]})
+    code, env = _post(server, "/v2/model/max-sentiment/deploy",
+                      {"service": "batched"})
+    assert code == 400 and env["error"]["code"] == "INVALID_INPUT"
+    code, env = _post(server, "/v2/model/max-sentiment/predict",
+                      {"input": ["still here"]})
+    assert code == 200 and env["status"] == "ok"
+
+
+def test_v2_models_reports_deployment_state(server):
+    code, env = _get(server, "/v2/models")
+    assert code == 200
+    by_id = {m["id"]: m for m in env["models"]}
+    assert by_id["qwen3-4b"]["deployed"] is True
+    assert by_id["qwen3-4b"]["service"] == "batched"
+    assert by_id["llama3-405b"]["deployed"] is False

