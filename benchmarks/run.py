@@ -12,6 +12,13 @@ architectural. Each benchmark below pins one of them to a number:
   serving_http            requests/s + p50/p95 latency through the REAL
                           HTTP stack, sync vs batched service (also
                           written to BENCH_serving.json for trend lines)
+  qos_overload            2 greedy `batch` clients flood the queue while 1
+                          `interactive` client keeps sending small
+                          requests: interactive p95 under QoS admission
+                          (priority + per-client fairness) vs plain FIFO
+                          (also into BENCH_serving.json; `--quick` runs
+                          just this scenario in <30s and exits nonzero on
+                          regression)
   kernel_<name>           Pallas kernel (interpret) vs jnp oracle allclose +
                           oracle timing (CPU container: correctness-scale)
   roofline_terms          derived from the dry-run records (see
@@ -209,6 +216,101 @@ def bench_serving_http(out_path: str = "BENCH_serving.json"):
         f"batched/sync={report['speedup_x']}x -> {out_path}")
 
 
+def bench_qos_overload(out_path: str = "BENCH_serving.json",
+                       quick: bool = False) -> bool:
+    """The QoS acceptance scenario: under sustained overload from two
+    greedy ``batch`` clients, an ``interactive`` client's p95 latency with
+    the deficit-weighted-priority controller must beat plain FIFO
+    admission. Returns True when it does (the ``--quick`` gate also
+    accepts qos_p95 within 2x of the uncontended baseline)."""
+    import json as _json
+    import threading
+
+    import repro.core.assets  # noqa: F401 — populate the exchange
+    from repro.core import BatchedService, EXCHANGE, QoSConfig
+    from repro.serving.metrics import percentile
+
+    n_interactive = 6 if quick else 14
+    greedy_batch, greedy_tokens = (6, 6) if quick else (8, 8)
+    wrapper = EXCHANGE.get("qwen3-4b").build(max_seq=64, max_batch=2)
+    scenario_out: dict = {"greedy_clients": 2, "greedy_batch": greedy_batch,
+                          "policies": {}}
+
+    def pctl(lat, q):
+        # same nearest-rank estimator /v2/metrics reports, so benchmark
+        # p95s stay comparable with the server's own numbers
+        return percentile(sorted(lat), q)
+
+    def interactive_call(svc, i):
+        t0 = time.perf_counter()
+        env = svc.predict({"text": f"ui {i}", "max_new_tokens": 2},
+                          qos={"priority": "interactive", "client": "ui"})
+        assert env["status"] == "ok", env
+        return time.perf_counter() - t0
+
+    solo_p95 = None
+    for policy in ("fifo", "drr"):
+        svc = BatchedService(wrapper, batch_window_s=0.005,
+                             qos=QoSConfig(policy=policy, max_queue=256))
+        try:
+            svc.predict({"text": "warm", "max_new_tokens": 2})   # compile
+            if solo_p95 is None:      # uncontended baseline, once
+                solo = [interactive_call(svc, -1 - k) for k in range(3)]
+                solo_p95 = pctl(solo, 0.95)
+            stop = threading.Event()
+
+            def greedy(name):
+                while not stop.is_set():
+                    svc.predict_batch(
+                        [{"text": f"{name} {i}",
+                          "max_new_tokens": greedy_tokens}
+                         for i in range(greedy_batch)],
+                        qos={"priority": "batch", "client": name})
+
+            threads = [threading.Thread(target=greedy, args=(f"greedy{i}",))
+                       for i in range(2)]
+            for t in threads:
+                t.start()
+            time.sleep(0.3)                       # let the backlog build
+            lat = [interactive_call(svc, i) for i in range(n_interactive)]
+            stop.set()
+            for t in threads:
+                t.join()
+            stats = svc.stats()
+            scenario_out["policies"][policy] = {
+                "interactive_p50_ms": round(pctl(lat, 0.50) * 1e3, 1),
+                "interactive_p95_ms": round(pctl(lat, 0.95) * 1e3, 1),
+                "completed": stats["completed"],
+                "mean_batch_size": stats["mean_batch_size"],
+            }
+            row(f"qos_overload_{policy}_interactive", pctl(lat, 0.95) * 1e6,
+                f"p50={scenario_out['policies'][policy]['interactive_p50_ms']}ms "
+                f"p95={scenario_out['policies'][policy]['interactive_p95_ms']}ms")
+        finally:
+            svc.close()
+
+    fifo_p95 = scenario_out["policies"]["fifo"]["interactive_p95_ms"]
+    qos_p95 = scenario_out["policies"]["drr"]["interactive_p95_ms"]
+    scenario_out["solo_p95_ms"] = round(solo_p95 * 1e3, 1)
+    scenario_out["speedup_x"] = round(fifo_p95 / max(qos_p95, 1e-9), 2)
+    ok = qos_p95 < fifo_p95 or qos_p95 <= 2 * scenario_out["solo_p95_ms"]
+    # merge into the serving report so trend lines keep one file
+    report = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                report = _json.load(f)
+        except Exception:
+            report = {}
+    report["qos_overload"] = scenario_out
+    with open(out_path, "w") as f:
+        _json.dump(report, f, indent=1)
+    row("qos_overload_speedup", 0.0,
+        f"fifo/qos={scenario_out['speedup_x']}x "
+        f"solo_p95={scenario_out['solo_p95_ms']}ms -> {out_path}")
+    return ok
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -275,14 +377,27 @@ def bench_roofline_terms():
         row("roofline_records", 0, f"unreadable: {e}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="run only the QoS overload smoke (<30s); exit "
+                         "nonzero if interactive-class p95 regresses")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
+    if args.quick:
+        ok = bench_qos_overload(quick=True)
+        print(f"# quick qos smoke: "
+              f"{'ok' if ok else 'INTERACTIVE P95 REGRESSION'}", flush=True)
+        raise SystemExit(0 if ok else 1)
     bench_wrapper_overhead()
     bench_registry()
     bench_deploy_latency()
     bench_api_roundtrip()
     bench_serving_throughput()
     bench_serving_http()
+    bench_qos_overload()
     bench_kernels()
     bench_roofline_terms()
     print(f"# {len(ROWS)} benchmarks complete", flush=True)

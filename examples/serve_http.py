@@ -9,8 +9,11 @@ decode batches — and finishes with the async job flow and per-deployment
 health.
 
     PYTHONPATH=src python examples/serve_http.py
+    PYTHONPATH=src python examples/serve_http.py --qos   # QoS demo: two
+        # clients with different priorities against one deployment
 """
 
+import argparse
 import json
 import threading
 import time
@@ -20,9 +23,11 @@ import repro.core.assets  # noqa: F401
 from repro.core import MAXServer
 
 
-def post(url, path, payload):
+def post(url, path, payload, headers=None):
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(headers or {})
     req = urllib.request.Request(url + path, json.dumps(payload).encode(),
-                                 {"Content-Type": "application/json"})
+                                 hdrs)
     return json.loads(urllib.request.urlopen(req).read())
 
 
@@ -109,5 +114,64 @@ def main():
         print(json.dumps(get(server.url, "/health"), indent=1))
 
 
+def qos_demo():
+    """Two clients, two priorities, one deployment: a greedy `batch`
+    client floods the queue while an `interactive` client keeps sending
+    small requests — the QoS admission controller holds the interactive
+    latency, and /v2/metrics shows the per-class accounting."""
+    with MAXServer(build_kw={"max_seq": 64, "max_batch": 2}) as server:
+        print(f"MAX serving at {server.url}")
+        post(server.url, "/v2/model/qwen3-4b/deploy", {"service": "batched"})
+        post(server.url, "/v2/model/qwen3-4b/predict",      # warm compile
+             {"input": {"text": "warm", "max_new_tokens": 2}})
+
+        stop = threading.Event()
+
+        def greedy():
+            while not stop.is_set():
+                post(server.url, "/v2/model/qwen3-4b/predict_batch",
+                     {"inputs": [{"text": f"bulk {i}", "max_new_tokens": 6}
+                                 for i in range(6)],
+                      "priority": "batch"},
+                     headers={"X-MAX-Client": "bulk-ingest"})
+
+        th = threading.Thread(target=greedy)
+        th.start()
+        time.sleep(0.3)                       # backlog builds
+        lats = []
+        for i in range(8):
+            t0 = time.perf_counter()
+            env = post(server.url, "/v2/model/qwen3-4b/predict",
+                       {"input": {"text": f"user {i}", "max_new_tokens": 2},
+                        "priority": "interactive", "deadline_ms": 30000},
+                       headers={"X-MAX-Client": "ui"})
+            assert env["status"] == "ok", env
+            lats.append((time.perf_counter() - t0) * 1e3)
+        stop.set()
+        th.join()
+        lats.sort()
+        print(f"\ninteractive latency vs a greedy batch client: "
+              f"p50={lats[len(lats) // 2]:.0f}ms p95={lats[-1]:.0f}ms")
+
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        print(f"queue by class: {stats['qos']['queued_by_class']}  "
+              f"shed={stats['qos']['shed']}")
+        metrics = get(server.url, "/v2/metrics")["metrics"]
+        print("\nper-class request counts (/v2/metrics):")
+        for k, v in metrics["counters"].items():
+            if "requests_total" in k:
+                print(f"  {k} = {v:.0f}")
+        for k, v in metrics["histograms"].items():
+            if "queue_wait" in k:
+                print(f"  {k}: p50={v['p50'] * 1e3:.1f}ms "
+                      f"p95={v['p95'] * 1e3:.1f}ms n={v['count']}")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--qos", action="store_true",
+                    help="run the QoS two-priority demo instead")
+    if ap.parse_args().qos:
+        qos_demo()
+    else:
+        main()

@@ -20,3 +20,9 @@ from repro.core.deployment import Deployment, DeploymentManager
 from repro.core.router import RequestCtx, Route, Router
 from repro.core.api import ApiError, MAXServer, build_router, build_swagger
 from repro.core.skeleton import register_asset, skeleton_source
+# QoS/observability subsystem (serving-layer, re-exported for API users)
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.qos import (
+    AdmissionController, AdmissionError, DeadlineExceeded, QoSConfig,
+    QueueFull, RateLimited,
+)

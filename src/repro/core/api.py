@@ -25,10 +25,20 @@ service is a :class:`~repro.core.service.BatchedService`):
     POST   /v2/model/{id}/predict_batch-> explicit multi-input
     POST   /v2/model/{id}/jobs         -> async submit (202 + job id)
     GET    /v2/jobs/{job_id}           -> poll a job
-    POST   /v2/model/{id}/deploy       -> deploy (optional service mode)
+    DELETE /v2/jobs/{job_id}           -> drop a job record
+    POST   /v2/model/{id}/deploy       -> deploy (service mode + qos config)
     DELETE /v2/model/{id}              -> undeploy
     GET    /v2/model/{id}/stats        -> service-level stats (batch sizes…)
+    GET    /v2/metrics                 -> QoS/serving metrics (JSON, or
+                                          Prometheus text with
+                                          ?format=prometheus)
     GET    /v2/routes                  -> the route table itself
+
+QoS: v2 predict/predict_batch/jobs bodies accept optional ``priority``
+(interactive | batch | best_effort), ``client`` (identity for fairness and
+rate limiting; the ``X-MAX-Client`` header wins over the body field), and
+``deadline_ms`` (shed the request with ``DEADLINE_EXCEEDED`` if it cannot
+start in time).
 
 Implemented on the stdlib ``ThreadingHTTPServer`` (offline container — no
 Flask), which is faithful anyway: MAX's per-model servers are thin WSGI
@@ -41,12 +51,14 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Tuple
+from urllib.parse import parse_qsl
 
 from repro.core.deployment import DeploymentManager
 from repro.core.registry import EXCHANGE, ModelRegistry
 from repro.core.router import RequestCtx, Router
 from repro.core.service import ServiceOverloaded
 from repro.core.wrapper import MAXError
+from repro.serving.qos import PRIORITIES, AdmissionError
 
 API_VERSION = "v1"          # of the back-compat surface
 API_VERSIONS = ("v1", "v2")
@@ -62,8 +74,10 @@ ERROR_STATUS = {
     "NOT_FOUND": 404,
     "METHOD_NOT_ALLOWED": 405,
     "QUEUE_FULL": 429,
+    "RATE_LIMITED": 429,
     "INTERNAL": 500,
     "TIMEOUT": 504,
+    "DEADLINE_EXCEEDED": 504,
 }
 
 
@@ -95,6 +109,17 @@ _ENVELOPE_SCHEMA = {
 }
 _INPUT_SCHEMA = {"type": "object", "properties": {"input": {}},
                  "required": ["input"]}
+_QOS_PROPS = {
+    "priority": {"type": "string", "enum": list(PRIORITIES)},
+    "client": {"type": "string",
+               "description": "fairness/rate-limit identity "
+                              "(X-MAX-Client header wins)"},
+    "deadline_ms": {"type": "number",
+                    "description": "shed if not started within this budget"},
+}
+_INPUT_SCHEMA_V2 = {"type": "object",
+                    "properties": {"input": {}, **_QOS_PROPS},
+                    "required": ["input"]}
 
 
 def build_router(server: Optional["MAXServer"] = None) -> Router:
@@ -130,25 +155,34 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
           summary="Catalogue with deployment/service status")
     r.add("POST", "/v2/model/{model_id}/predict", h("_h_predict_v2"),
           summary="Predict; concurrent requests are micro-batched into "
-                  "engine decode batches",
-          request_schema=_INPUT_SCHEMA, response_schema=_ENVELOPE_SCHEMA)
+                  "engine decode batches (QoS: priority/client/deadline_ms)",
+          request_schema=_INPUT_SCHEMA_V2, response_schema=_ENVELOPE_SCHEMA)
     r.add("POST", "/v2/model/{model_id}/predict_batch",
           h("_h_predict_batch_v2"),
           summary="Explicit multi-input predict",
           request_schema={"type": "object",
-                          "properties": {"inputs": {"type": "array"}},
+                          "properties": {"inputs": {"type": "array"},
+                                         **_QOS_PROPS},
                           "required": ["inputs"]})
     r.add("POST", "/v2/model/{model_id}/jobs", h("_h_job_submit"),
           summary="Submit an async generation job",
-          request_schema=_INPUT_SCHEMA)
+          request_schema=_INPUT_SCHEMA_V2)
     r.add("GET", "/v2/jobs/{job_id}", h("_h_job_get"),
           summary="Poll an async job")
+    r.add("DELETE", "/v2/jobs/{job_id}", h("_h_job_delete"),
+          summary="Delete a job record (finished jobs also expire after "
+                  "the service's job TTL)")
     r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
-          summary="Deploy an asset (optional {'service': sync|batched|auto})")
+          summary="Deploy an asset (optional {'service': sync|batched|auto,"
+                  " 'qos': {...}})")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
-          summary="Service-level stats (batching, queue, jobs)")
+          summary="Service-level stats (batching, queue, jobs, QoS)")
+    r.add("GET", "/v2/metrics", h("_h_metrics"),
+          summary="Serving metrics: requests by class/outcome, queue-wait "
+                  "percentiles, shed counts (?format=prometheus for text "
+                  "exposition)")
     r.add("GET", "/v2/routes", h("_h_routes"),
           summary="The route table (source of truth for this spec)")
     return r
@@ -223,18 +257,30 @@ class MAXServer:
                 pass
 
             def _send(self, code: int, payload: Dict[str, Any]):
-                body = json.dumps(payload).encode()
+                # handlers may return a pre-rendered non-JSON body (the
+                # Prometheus exposition) via the _raw escape hatch
+                if isinstance(payload, dict) and "_raw" in payload:
+                    body = payload["_raw"].encode()
+                    ctype = payload.get("_content_type", "text/plain")
+                else:
+                    body = json.dumps(payload).encode()
+                    ctype = "application/json"
                 self.send_response(code)
-                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))
                 self.end_headers()
                 self.wfile.write(body)
 
+            def _hdrs(self):
+                return {k.lower(): v for k, v in self.headers.items()}
+
             def do_GET(self):
-                self._send(*outer.dispatch("GET", self.path, None))
+                self._send(*outer.dispatch("GET", self.path, None,
+                                           headers=self._hdrs()))
 
             def do_DELETE(self):
-                self._send(*outer.dispatch("DELETE", self.path, None))
+                self._send(*outer.dispatch("DELETE", self.path, None,
+                                           headers=self._hdrs()))
 
             def do_POST(self):
                 n = int(self.headers.get("Content-Length", 0))
@@ -247,16 +293,19 @@ class MAXServer:
                     else:
                         self._send(400, _v1_error("bad JSON"))
                     return
-                self._send(*outer.dispatch("POST", self.path, data))
+                self._send(*outer.dispatch("POST", self.path, data,
+                                           headers=self._hdrs()))
 
         self._server = ThreadingHTTPServer((host, port), Handler)
         self._thread: Optional[threading.Thread] = None
 
     # -- dispatch ---------------------------------------------------------------
 
-    def dispatch(self, method: str, path: str, body: Optional[Any]
+    def dispatch(self, method: str, path: str, body: Optional[Any],
+                 headers: Optional[Dict[str, str]] = None
                  ) -> Tuple[int, Dict[str, Any]]:
-        path = path.split("?", 1)[0]
+        path, _, qs = path.partition("?")
+        query = dict(parse_qsl(qs))
         route, params, allowed = self.router.dispatch(method, path)
         v2 = path.startswith("/v2/")
         if route is None:
@@ -270,7 +319,9 @@ class MAXServer:
             return 404, _v2_error("NOT_FOUND", msg) if v2 else (
                 404, _v1_error(msg))
         try:
-            return route.handler(RequestCtx(method, path, params, body))
+            return route.handler(RequestCtx(method, path, params, body,
+                                            query=query,
+                                            headers=headers or {}))
         except ApiError as e:
             payload = _v2_error(e.code, str(e)) if v2 else _v1_error(str(e))
             return e.status, payload
@@ -318,6 +369,35 @@ class MAXServer:
         if body["input"] is None:
             raise ApiError("INVALID_INPUT", "'input' must not be null")
         return body["input"]
+
+    @staticmethod
+    def _require_qos(ctx) -> Optional[Dict[str, Any]]:
+        """Request-scoped QoS fields: body ``priority`` / ``client`` /
+        ``deadline_ms`` plus the ``X-MAX-Client`` header (header wins —
+        proxies inject it; bodies are client-authored). Returns None when
+        the request carries no QoS at all (the service applies defaults)."""
+        body = ctx.body if isinstance(ctx.body, dict) else {}
+        qos: Dict[str, Any] = {}
+        priority = body.get("priority")
+        if priority is not None:
+            if not isinstance(priority, str):
+                raise ApiError("INVALID_INPUT", "'priority' must be a string")
+            qos["priority"] = priority
+        client = ctx.headers.get("x-max-client") or body.get("client")
+        if client is not None:
+            if not isinstance(client, str) or not client:
+                raise ApiError("INVALID_INPUT",
+                               "'client' must be a non-empty string")
+            qos["client"] = client
+        deadline_ms = body.get("deadline_ms")
+        if deadline_ms is not None:
+            if (isinstance(deadline_ms, bool)
+                    or not isinstance(deadline_ms, (int, float))
+                    or deadline_ms <= 0):
+                raise ApiError("INVALID_INPUT",
+                               "'deadline_ms' must be a positive number")
+            qos["deadline_s"] = float(deadline_ms) / 1e3
+        return qos or None
 
     @staticmethod
     def _v2_envelope(env: Dict[str, Any]) -> Tuple[int, Dict[str, Any]]:
@@ -392,8 +472,9 @@ class MAXServer:
 
     def _h_predict_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
         inp = self._require_input(ctx.body)
+        qos = self._require_qos(ctx)
         dep = self._ensure_deployed(ctx.params["model_id"])
-        return self._v2_envelope(dep.predict(inp))
+        return self._v2_envelope(dep.predict(inp, qos))
 
     def _h_predict_batch_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
         if not isinstance(ctx.body, dict) or "inputs" not in ctx.body:
@@ -402,21 +483,25 @@ class MAXServer:
         if not isinstance(inputs, list) or not inputs:
             raise ApiError("INVALID_INPUT",
                            "'inputs' must be a non-empty array")
+        qos = self._require_qos(ctx)
         dep = self._ensure_deployed(ctx.params["model_id"])
         results = [self._v2_envelope(env)[1]
-                   for env in dep.predict_batch(inputs)]
+                   for env in dep.predict_batch(inputs, qos)]
         ok = sum(1 for r in results if r.get("status") == "ok")
         return 200, {"status": "ok" if ok == len(results) else "partial",
                      "results": results, "count": len(results)}
 
     def _h_job_submit(self, ctx) -> Tuple[int, Dict[str, Any]]:
         inp = self._require_input(ctx.body)
+        qos = self._require_qos(ctx)
         model_id = ctx.params["model_id"]
         dep = self._ensure_deployed(model_id)
         try:
-            job = dep.submit_job(inp)
+            job = dep.submit_job(inp, qos)
         except ServiceOverloaded as e:
             raise ApiError("QUEUE_FULL", str(e)) from None
+        except AdmissionError as e:
+            raise ApiError(e.code, str(e)) from None
         except MAXError as e:
             raise ApiError("INVALID_INPUT", str(e)) from None
         with self._job_lock:
@@ -440,21 +525,46 @@ class MAXServer:
                            f"(model {model_id!r} undeployed?)") from None
         return 200, {"status": "ok", "job": job.to_json()}
 
+    def _h_job_delete(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        job_id = ctx.params["job_id"]
+        with self._job_lock:
+            model_id = self._job_index.get(job_id)
+        if model_id is None:
+            raise ApiError("JOB_NOT_FOUND", f"unknown job {job_id!r}")
+        try:
+            deleted = self.manager.get(model_id).service.delete_job(job_id)
+        except KeyError:
+            deleted = False         # undeployed: records are gone anyway
+        with self._job_lock:
+            self._job_index.pop(job_id, None)
+        if not deleted:
+            raise ApiError("JOB_NOT_FOUND",
+                           f"job {job_id!r} no longer exists") from None
+        return 200, {"status": "ok", "deleted": job_id}
+
     def _h_deploy_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
         body = ctx.body if isinstance(ctx.body, dict) else {}
         mode = body.get("service")
         if mode is not None and mode not in ("sync", "batched", "auto"):
             raise ApiError("INVALID_INPUT",
                            f"unknown service mode {mode!r}")
+        qos = body.get("qos")
+        if qos is not None and not isinstance(qos, dict):
+            raise ApiError("INVALID_INPUT", "'qos' must be an object")
         try:
             dep = self.manager.deploy(ctx.params["model_id"],
-                                      service_mode=mode, **self.build_kw)
+                                      service_mode=mode, qos=qos,
+                                      **self.build_kw)
         except KeyError as e:
             raise ApiError("MODEL_NOT_FOUND", str(e)) from None
-        except ValueError as e:     # mode infeasible for this wrapper
+        except ValueError as e:     # mode/qos infeasible for this wrapper
             raise ApiError("INVALID_INPUT", str(e)) from None
+        cfg = dep.service.qos_cfg
         return 200, {"status": "ok", "model_id": dep.asset_id,
                      "service": dep.service.kind,
+                     "qos": {"policy": cfg.policy, "rate": cfg.rate,
+                             "max_queue_per_class": cfg.max_queue,
+                             "class_weights": dict(cfg.class_weights)},
                      "deployed": self.manager.deployed()}
 
     def _h_undeploy(self, ctx) -> Tuple[int, Dict[str, Any]]:
@@ -477,6 +587,18 @@ class MAXServer:
                      "requests": dep.stats.requests,
                      "errors": dep.stats.errors,
                      "mean_latency_ms": round(dep.stats.mean_latency_ms, 2)}
+
+    def _h_metrics(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        reg = self.manager.metrics
+        if ctx.query.get("format") == "prometheus":
+            return 200, {"_raw": reg.to_prometheus(),
+                         "_content_type": "text/plain; version=0.0.4"}
+        out = reg.to_json()
+        tokens = sum(v for k, v in out["counters"].items()
+                     if k.startswith("max_generated_tokens_total"))
+        out["derived"] = {
+            "tokens_per_s": round(tokens / max(out["uptime_s"], 1e-9), 3)}
+        return 200, {"status": "ok", "metrics": out}
 
     def _h_routes(self, ctx) -> Tuple[int, Dict[str, Any]]:
         return 200, {"status": "ok", "routes": self.router.table()}

@@ -32,6 +32,8 @@ from typing import Any, Dict, List, Optional
 from repro.core.registry import ModelRegistry, EXCHANGE
 from repro.core.service import InferenceService, Job, make_service
 from repro.core.wrapper import MAXModelWrapper
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.qos import QoSConfig
 
 
 @dataclass
@@ -73,46 +75,58 @@ class Deployment:
                           env.get("status") == "ok")
         return env
 
-    def predict(self, inp: Any) -> Dict[str, Any]:
+    def predict(self, inp: Any,
+                qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         t0 = time.perf_counter()
-        return self._record(t0, self.service.predict(inp))
+        return self._record(t0, self.service.predict(inp, qos))
 
-    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+    def predict_batch(self, inputs: List[Any],
+                      qos: Optional[Dict[str, Any]] = None
+                      ) -> List[Dict[str, Any]]:
         t0 = time.perf_counter()
-        envs = self.service.predict_batch(inputs)
+        envs = self.service.predict_batch(inputs, qos)
         per_input = (time.perf_counter() - t0) / max(len(inputs), 1)
         for env in envs:
             self.stats.record(per_input, env.get("status") == "ok")
         return envs
 
-    def submit_job(self, inp: Any) -> Job:
-        return self.service.submit_job(inp)
+    def submit_job(self, inp: Any,
+                   qos: Optional[Dict[str, Any]] = None) -> Job:
+        return self.service.submit_job(inp, qos)
 
 
 class DeploymentManager:
     def __init__(self, registry: Optional[ModelRegistry] = None, *,
                  service_mode: str = "auto",
-                 service_kw: Optional[Dict[str, Any]] = None):
+                 service_kw: Optional[Dict[str, Any]] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.registry = registry if registry is not None else EXCHANGE
         self.service_mode = service_mode
         self.service_kw = service_kw or {}
+        # one registry across all deployments: /v2/metrics is the whole
+        # exchange's view, labelled per model/class/outcome
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._deployments: Dict[str, Deployment] = {}
         self._building: Dict[str, threading.Event] = {}
         self._lock = threading.Lock()
 
     def deploy(self, asset_id: str, *, mesh_slice: Optional[str] = None,
                service_mode: Optional[str] = None,
+               qos: Optional[Any] = None,
                **build_kw) -> Deployment:
+        if qos is not None and not isinstance(qos, QoSConfig):
+            qos = QoSConfig.from_json(qos)    # validate before any teardown
         while True:
             with self._lock:
                 dep = self._deployments.get(asset_id)
             if dep is not None:
                 # an explicitly requested concrete mode replaces a
-                # deployment of a different kind ("auto"/None accept
-                # whatever is running) — silently returning the old
-                # service would drop the operator's request
-                if (service_mode in (None, "auto")
-                        or dep.service.kind == service_mode):
+                # deployment of a different kind, and an explicit QoS
+                # config always redeploys ("auto"/None accept whatever is
+                # running) — silently returning the old service would
+                # drop the operator's request
+                if (qos is None and (service_mode in (None, "auto")
+                                     or dep.service.kind == service_mode)):
                     return dep
                 if (service_mode == "batched"
                         and not dep.wrapper.supports_generation()):
@@ -134,8 +148,12 @@ class DeploymentManager:
         try:
             asset = self.registry.get(asset_id)
             wrapper = asset.build(**build_kw)       # the "container start"
+            service_kw = dict(self.service_kw)
+            service_kw.setdefault("metrics", self.metrics)
+            if qos is not None:
+                service_kw["qos"] = qos             # per-deploy override
             service = make_service(
-                wrapper, service_mode or self.service_mode, **self.service_kw)
+                wrapper, service_mode or self.service_mode, **service_kw)
             dep = Deployment(asset_id, service, mesh_slice=mesh_slice)
             with self._lock:
                 self._deployments[asset_id] = dep

@@ -26,11 +26,14 @@ _PARAM_RE = re.compile(r"\{(\w+)\}")
 
 @dataclass
 class RequestCtx:
-    """Everything a handler needs: matched path params + parsed JSON body."""
+    """Everything a handler needs: matched path params, parsed JSON body,
+    query-string params, and (lower-cased) request headers."""
     method: str
     path: str
     params: Dict[str, str] = field(default_factory=dict)
     body: Optional[Any] = None
+    query: Dict[str, str] = field(default_factory=dict)
+    headers: Dict[str, str] = field(default_factory=dict)
 
 
 Handler = Callable[[RequestCtx], Tuple[int, Dict[str, Any]]]

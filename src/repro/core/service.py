@@ -9,15 +9,23 @@ strategy pluggable:
                            cheap per-call models).
 - :class:`BatchedService`  owns a :class:`ContinuousBatchingScheduler` on a
                            background worker thread; concurrent HTTP
-                           requests land in a bounded queue, a short
+                           requests land in a QoS admission queue, a short
                            *batching window* lets simultaneous arrivals
                            coalesce, and the engine decodes them as ONE
                            batch. Throughput scales with batch size instead
                            of thread count.
 
+Admission is governed by a :class:`~repro.serving.qos.AdmissionController`
+(priority classes, per-client deficit-weighted fairness, token-bucket rate
+limits, deadline shedding) — both services consume one, record every
+outcome in a shared :class:`~repro.serving.metrics.MetricsRegistry`, and
+expose per-class/per-client queue depth in ``stats()``.
+
 Both speak the same envelope contract as ``wrapper.predict_envelope`` so
 the API layer (v1 or v2) cannot tell them apart, and both support async
-*jobs* (submit -> poll) for long generations.
+*jobs* (submit -> poll) for long generations. Finished job records expire
+after ``job_ttl_s`` (plus a bounded-count fallback) and can be deleted
+explicitly, so long-running servers don't accrete job state.
 """
 
 from __future__ import annotations
@@ -31,10 +39,22 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.core.wrapper import MAXError, MAXModelWrapper
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.qos import (
+    AdmissionController, AdmissionError, QoSConfig, QueueFull,
+)
 
 
 class ServiceOverloaded(MAXError):
     """Bounded request queue is full — client should back off (HTTP 429)."""
+
+
+#: request-scoped QoS fields accepted by predict/predict_batch/submit_job
+QOS_KEYS = ("priority", "client", "deadline_s")
+
+
+def _qos_field(qos: Optional[Dict[str, Any]], key: str):
+    return qos.get(key) if qos else None
 
 
 # ---------------------------------------------------------------------------
@@ -69,8 +89,18 @@ class InferenceService(abc.ABC):
     kind: str = "abstract"
     retain_jobs: int = 512            # finished jobs kept for polling
 
-    def __init__(self, wrapper: MAXModelWrapper):
+    def __init__(self, wrapper: MAXModelWrapper, *,
+                 qos: Optional[Any] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 job_ttl_s: Optional[float] = None):
         self.wrapper = wrapper
+        self.qos_cfg = qos if isinstance(qos, QoSConfig) \
+            else QoSConfig.from_json(qos)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.job_ttl_s = job_ttl_s
+        self.admission = AdmissionController(
+            self.qos_cfg, metrics=self.metrics,
+            model_id=wrapper.metadata.id)
         self._jobs: Dict[str, Job] = {}
         self._jobs_lock = threading.Lock()
 
@@ -78,15 +108,31 @@ class InferenceService(abc.ABC):
     def model_id(self) -> str:
         return self.wrapper.metadata.id
 
+    def _count_request(self, priority: Optional[str],
+                       env: Dict[str, Any]):
+        """One requests_total increment per finished request; rejections
+        are counted by the admission controller at submit time, so the sum
+        over outcomes equals total submit attempts."""
+        outcome = "ok" if env.get("status") == "ok" \
+            else str(env.get("code") or "error").lower()
+        self.metrics.inc(
+            "max_requests_total", 1,
+            **{"model": self.model_id, "outcome": outcome,
+               "class": priority or self.qos_cfg.default_priority})
+
     # -- predictions -------------------------------------------------------
 
     @abc.abstractmethod
-    def predict(self, inp: Any) -> Dict[str, Any]:
-        """Return the standardized envelope for one input."""
+    def predict(self, inp: Any,
+                qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Return the standardized envelope for one input. ``qos`` carries
+        request-scoped fields (:data:`QOS_KEYS`)."""
 
-    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+    def predict_batch(self, inputs: List[Any],
+                      qos: Optional[Dict[str, Any]] = None
+                      ) -> List[Dict[str, Any]]:
         """Per-input envelopes for an explicit multi-input request."""
-        return [self.predict(i) for i in inputs]
+        return [self.predict(i, qos) for i in inputs]
 
     # -- jobs --------------------------------------------------------------
 
@@ -96,6 +142,22 @@ class InferenceService(abc.ABC):
             self._jobs[job.id] = job
         return job
 
+    def _gc_jobs_locked(self):
+        """Expire finished jobs past the TTL and enforce the count bound
+        (``_jobs_lock`` held)."""
+        finished = [jid for jid, j in self._jobs.items()
+                    if j.state in ("done", "error")]
+        if self.job_ttl_s is not None:
+            cutoff = time.time() - self.job_ttl_s
+            for jid in finished:
+                if (self._jobs[jid].finished_at or 0) < cutoff:
+                    del self._jobs[jid]
+            finished = [jid for jid in finished if jid in self._jobs]
+        # bounded retention, like the scheduler's completed map: evict
+        # the oldest finished jobs so records don't grow with uptime
+        for jid in finished[:max(0, len(finished) - self.retain_jobs)]:
+            del self._jobs[jid]
+
     def _finish_job(self, job: Job, envelope: Dict[str, Any]):
         with self._jobs_lock:
             # state flips LAST: pollers read without the lock, and a job
@@ -103,35 +165,44 @@ class InferenceService(abc.ABC):
             job.result = envelope
             job.error = envelope.get("error") \
                 if envelope.get("status") != "ok" else None
+            if isinstance(job.error, dict):     # structured error message
+                job.error = job.error.get("message", str(job.error))
             job.finished_at = time.time()
             job.state = "done" if envelope.get("status") == "ok" else "error"
-            # bounded retention, like the scheduler's completed map: evict
-            # the oldest finished jobs so records don't grow with uptime
-            finished = [jid for jid, j in self._jobs.items()
-                        if j.state in ("done", "error")]
-            for jid in finished[:max(0, len(finished) - self.retain_jobs)]:
-                del self._jobs[jid]
+            self._gc_jobs_locked()
 
     @abc.abstractmethod
-    def submit_job(self, inp: Any) -> Job:
+    def submit_job(self, inp: Any,
+                   qos: Optional[Dict[str, Any]] = None) -> Job:
         """Enqueue ``inp`` for asynchronous prediction; returns immediately."""
 
     def get_job(self, job_id: str) -> Job:
         with self._jobs_lock:
+            self._gc_jobs_locked()
             try:
                 return self._jobs[job_id]
             except KeyError:
                 raise KeyError(f"unknown job {job_id!r}") from None
 
+    def delete_job(self, job_id: str) -> bool:
+        """Drop a job record (``DELETE /v2/jobs/{id}``). Deleting a
+        queued/running job removes the *record* only — in-flight work is
+        not cancelled, its late result just has nowhere to land."""
+        with self._jobs_lock:
+            return self._jobs.pop(job_id, None) is not None
+
     # -- lifecycle / introspection ----------------------------------------
 
     def stats(self) -> Dict[str, Any]:
         with self._jobs_lock:
+            self._gc_jobs_locked()
             jobs = len(self._jobs)
-        return {"kind": self.kind, "jobs": jobs}
+        return {"kind": self.kind, "jobs": jobs,
+                "job_ttl_s": self.job_ttl_s,
+                "qos": self.admission.stats()}
 
     def close(self):
-        pass
+        self.metrics.unregister_gauges(model=self.model_id)
 
 
 # ---------------------------------------------------------------------------
@@ -141,8 +212,8 @@ class InferenceService(abc.ABC):
 class SyncService(InferenceService):
     kind = "sync"
 
-    def __init__(self, wrapper: MAXModelWrapper):
-        super().__init__(wrapper)
+    def __init__(self, wrapper: MAXModelWrapper, **kw):
+        super().__init__(wrapper, **kw)
         # generation wrappers keep decode-slot state on their engine; two
         # HTTP threads calling predict concurrently would race on it (the
         # pre-service server had exactly this bug), so those run one call
@@ -154,19 +225,56 @@ class SyncService(InferenceService):
         self._job_thread: Optional[threading.Thread] = None
         self._closed = False
 
-    def predict(self, inp: Any) -> Dict[str, Any]:
+    def _admit_or_envelope(self, qos: Optional[Dict[str, Any]],
+                           cost: float = 1.0) -> Optional[Dict[str, Any]]:
+        """Sync admission = token-bucket + class validation only (there is
+        no queue to prioritise — the request thread runs the call now)."""
+        try:
+            self.admission.try_acquire(
+                _qos_field(qos, "client") or "anon", cost,
+                _qos_field(qos, "priority"))
+            return None
+        except AdmissionError as e:
+            # no _count_request here: rate-limits are already counted by
+            # the controller (counting again would double the series), and
+            # an invalid priority must not mint a metrics label from a
+            # client-controlled string
+            return {"status": "error", "error": str(e), "code": e.code,
+                    "model_id": self.model_id}
+
+    def predict(self, inp: Any,
+                qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        rejected = self._admit_or_envelope(qos)
+        if rejected is not None:
+            return rejected
         if self._serialize:
             with self._predict_lock:
-                return self.wrapper.predict_envelope(inp)
-        return self.wrapper.predict_envelope(inp)
+                env = self.wrapper.predict_envelope(inp)
+        else:
+            env = self.wrapper.predict_envelope(inp)
+        self._count_request(_qos_field(qos, "priority"), env)
+        return env
 
-    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+    def predict_batch(self, inputs: List[Any],
+                      qos: Optional[Dict[str, Any]] = None
+                      ) -> List[Dict[str, Any]]:
+        rejected = self._admit_or_envelope(qos, cost=float(len(inputs)))
+        if rejected is not None:
+            return [dict(rejected) for _ in inputs]
         if self._serialize:
             with self._predict_lock:
-                return self.wrapper.predict_batch_envelope(inputs)
-        return self.wrapper.predict_batch_envelope(inputs)
+                envs = self.wrapper.predict_batch_envelope(inputs)
+        else:
+            envs = self.wrapper.predict_batch_envelope(inputs)
+        for env in envs:
+            self._count_request(_qos_field(qos, "priority"), env)
+        return envs
 
-    def submit_job(self, inp: Any) -> Job:
+    def submit_job(self, inp: Any,
+                   qos: Optional[Dict[str, Any]] = None) -> Job:
+        # admission failures surface at submit (429), not as dead jobs
+        self.admission.try_acquire(_qos_field(qos, "client") or "anon",
+                                   1.0, _qos_field(qos, "priority"))
         job = self._new_job()
         with self._job_cv:
             if self._closed:
@@ -178,7 +286,7 @@ class SyncService(InferenceService):
                     target=self._job_worker, daemon=True,
                     name=f"sync-jobs-{self.model_id}")
                 self._job_thread.start()
-            self._job_queue.append((job, inp))
+            self._job_queue.append((job, inp, qos))
             self._job_cv.notify()
         return job
 
@@ -189,10 +297,16 @@ class SyncService(InferenceService):
                     self._job_cv.wait()
                 if self._closed:
                     return
-                job, inp = self._job_queue.popleft()
+                job, inp, qos = self._job_queue.popleft()
             job.state = "running"
             try:
-                env = self.predict(inp)
+                # rate limit was paid at submit; run the wrapper directly
+                if self._serialize:
+                    with self._predict_lock:
+                        env = self.wrapper.predict_envelope(inp)
+                else:
+                    env = self.wrapper.predict_envelope(inp)
+                self._count_request(_qos_field(qos, "priority"), env)
             except Exception as e:              # fault isolation per job
                 env = {"status": "error", "error": str(e),
                        "model_id": self.model_id}
@@ -205,11 +319,12 @@ class SyncService(InferenceService):
             self._job_queue.clear()
             self._job_cv.notify_all()
         # fail undrained jobs now — pollers must not spin on 'queued' forever
-        for job, _ in queued:
+        for job, _inp, _qos in queued:
             self._finish_job(job, {
                 "status": "error",
                 "error": f"service for {self.model_id!r} is closed",
                 "model_id": self.model_id})
+        super().close()
 
 
 # ---------------------------------------------------------------------------
@@ -236,44 +351,52 @@ class BatchStats:
     scheduler's own stats (the single source of truth for decode batches)."""
     submitted: int = 0
     completed: int = 0
-    rejected: int = 0
+    rejected: int = 0                 # queue-full + rate-limited at submit
 
 
 class BatchedService(InferenceService):
     """Aggregates concurrent requests into engine decode batches.
 
     A single worker thread owns the :class:`ContinuousBatchingScheduler`
-    (and therefore the engine cache) — HTTP threads only enqueue work and
-    wait on a per-request event, so no engine state is ever touched
-    concurrently. ``batch_window_s`` is the coalescing window: when the
-    engine is idle and the first request arrives, the worker waits that
-    long (or until the batch is full) for simultaneous arrivals before the
-    first prefill, then keeps admitting newcomers every tick (continuous
-    batching proper).
+    (and therefore the engine cache) — HTTP threads submit through the
+    scheduler's admission controller (which may reject with structured
+    ``QUEUE_FULL`` / ``RATE_LIMITED`` on the *request* thread) and wait on
+    a per-request event, so no engine state is ever touched concurrently.
+    ``batch_window_s`` is the coalescing window: when the engine is idle
+    and the first request arrives, the worker waits that long (or until
+    the batch is full) for simultaneous arrivals before the first prefill,
+    then keeps admitting newcomers every tick (continuous batching
+    proper). Dequeue order is the controller's: priority classes, then
+    deficit-weighted fairness across clients — not raw FIFO.
     """
 
     kind = "batched"
 
     def __init__(self, wrapper: MAXModelWrapper, *,
                  batch_window_s: float = 0.01, max_queue: int = 64,
-                 request_timeout_s: float = 300.0):
-        super().__init__(wrapper)
+                 request_timeout_s: float = 300.0, **kw):
         if not wrapper.supports_generation():
             raise ValueError(
                 f"{wrapper.metadata.id!r} does not implement the generation "
                 "protocol (prepare_generation/format_generation); "
                 "use SyncService")
+        if kw.get("qos") is None:
+            kw["qos"] = QoSConfig(max_queue=max_queue)
+        super().__init__(wrapper, **kw)
         from repro.serving.scheduler import ContinuousBatchingScheduler
         self.engine = wrapper.engine
-        self.scheduler = ContinuousBatchingScheduler(self.engine)
+        self.scheduler = ContinuousBatchingScheduler(
+            self.engine, admission=self.admission)
         self.batch_window_s = batch_window_s
-        self.max_queue = max_queue
+        self.max_queue = self.qos_cfg.max_queue
         self.request_timeout_s = request_timeout_s
         self.batch_stats = BatchStats()
-        self._pending: deque[_Work] = deque()
+        self._inflight: Dict[int, _Work] = {}
         self._cv = threading.Condition()
         self._closed = False
         self._worker_error: Optional[str] = None
+        self.metrics.register_gauge(
+            "max_queue_depth", self.admission.depth, model=self.model_id)
         self._thread = threading.Thread(
             target=self._worker, daemon=True,
             name=f"batched-{self.model_id}")
@@ -281,7 +404,8 @@ class BatchedService(InferenceService):
 
     # -- request path ------------------------------------------------------
 
-    def _enqueue(self, inp: Any, job: Optional[Job] = None) -> _Work:
+    def _enqueue(self, inp: Any, job: Optional[Job] = None,
+                 qos: Optional[Dict[str, Any]] = None) -> _Work:
         prompt, gen_kw, extra = self.wrapper.prepare_generation(inp)
         # reject here, on the request thread: a raise inside the worker's
         # tick would fail every request sharing the decode batch
@@ -294,11 +418,20 @@ class BatchedService(InferenceService):
         with self._cv:
             if self._closed:
                 raise MAXError(f"service for {self.model_id!r} is closed")
-            if len(self._pending) >= self.max_queue:
+            try:
+                work.request = self.scheduler.submit(
+                    prompt, extra=extra,
+                    priority=_qos_field(qos, "priority"),
+                    client=_qos_field(qos, "client"),
+                    deadline_s=_qos_field(qos, "deadline_s"),
+                    **gen_kw)
+            except QueueFull as e:
                 self.batch_stats.rejected += 1
-                raise ServiceOverloaded(
-                    f"request queue full ({self.max_queue}); retry later")
-            self._pending.append(work)
+                raise ServiceOverloaded(str(e)) from None
+            except AdmissionError:
+                self.batch_stats.rejected += 1      # rate-limited etc.
+                raise
+            self._inflight[work.request.id] = work
             self.batch_stats.submitted += 1
             self._cv.notify_all()
         return work
@@ -310,13 +443,17 @@ class BatchedService(InferenceService):
         return {"status": "error", "error": msg, "code": code,
                 "model_id": self.model_id}
 
-    def _enqueue_or_error(self, inp: Any):
+    def _enqueue_or_error(self, inp: Any, job: Optional[Job] = None,
+                          qos: Optional[Dict[str, Any]] = None):
         try:
-            return self._enqueue(inp)
+            return self._enqueue(inp, job, qos)
         except ServiceOverloaded as e:
-            return self._error_envelope(str(e), "QUEUE_FULL")
+            env = self._error_envelope(str(e), "QUEUE_FULL")
+        except AdmissionError as e:
+            env = self._error_envelope(str(e), e.code)
         except MAXError as e:
-            return self._error_envelope(str(e))
+            env = self._error_envelope(str(e))
+        return env
 
     def _await(self, work) -> Dict[str, Any]:
         if isinstance(work, dict):              # rejected at enqueue
@@ -326,21 +463,28 @@ class BatchedService(InferenceService):
                 f"timed out after {self.request_timeout_s}s", "TIMEOUT")
         return work.envelope
 
-    def predict(self, inp: Any) -> Dict[str, Any]:
-        return self._await(self._enqueue_or_error(inp))
+    def predict(self, inp: Any,
+                qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        return self._await(self._enqueue_or_error(inp, qos=qos))
 
-    def predict_batch(self, inputs: List[Any]) -> List[Dict[str, Any]]:
+    def predict_batch(self, inputs: List[Any],
+                      qos: Optional[Dict[str, Any]] = None
+                      ) -> List[Dict[str, Any]]:
         # enqueue all first so they share decode batches, then wait all
         return [self._await(w)
-                for w in [self._enqueue_or_error(i) for i in inputs]]
+                for w in [self._enqueue_or_error(i, qos=qos)
+                          for i in inputs]]
 
-    def submit_job(self, inp: Any) -> Job:
+    def submit_job(self, inp: Any,
+                   qos: Optional[Dict[str, Any]] = None) -> Job:
         job = self._new_job()
         try:
-            self._enqueue(inp, job=job)
-        except MAXError:
-            # bad input / full queue is a submit-time failure: surface it
-            # as the HTTP error (429/400), not a 202 with a dead job
+            self._enqueue(inp, job=job, qos=qos)
+        except (MAXError, AdmissionError):
+            # bad input / full queue / rate limit is a submit-time failure:
+            # surface it as the HTTP error (429/400), not a 202 with a
+            # dead job (AdmissionError is not a MAXError — both must
+            # release the record)
             with self._jobs_lock:
                 self._jobs.pop(job.id, None)
             raise
@@ -348,57 +492,66 @@ class BatchedService(InferenceService):
 
     # -- worker ------------------------------------------------------------
 
-    def _drain_pending(self, inflight: Dict[int, _Work]):
-        """Move queued work into the scheduler (worker thread only)."""
-        while True:
-            with self._cv:
-                if not self._pending:
-                    return
-                work = self._pending.popleft()
-            if work.job is not None:
-                work.job.state = "running"
-            work.request = self.scheduler.submit(
-                work.prompt, extra=work.extra, **work.gen_kw)
-            inflight[work.request.id] = work
-
     def _finalize(self, work: _Work):
         req = work.request
-        try:
-            preds = self.wrapper.format_generation(req.output,
-                                                   len(work.prompt))
-            env = {"status": "ok", "predictions": preds,
-                   "model_id": self.model_id,
-                   "latency_ms": round(
-                       (time.perf_counter() - work.t0) * 1e3, 3)}
-        except MAXError as e:
-            env = self._error_envelope(str(e))
+        if req.error_code is not None:          # shed by the controller
+            env = self._error_envelope(req.error, req.error_code)
+        else:
+            try:
+                preds = self.wrapper.format_generation(req.output,
+                                                       len(work.prompt))
+                env = {"status": "ok", "predictions": preds,
+                       "model_id": self.model_id,
+                       "latency_ms": round(
+                           (time.perf_counter() - work.t0) * 1e3, 3)}
+                self.metrics.inc("max_generated_tokens_total",
+                                 len(req.output), model=self.model_id)
+            except MAXError as e:
+                env = self._error_envelope(str(e))
         work.envelope = env
-        self.batch_stats.completed += 1
+        if req.error_code != "DEADLINE_EXCEEDED":
+            # shed work never ran — it shows up under 'shed', not
+            # 'completed' (keeps service and scheduler counts reconciled)
+            self.batch_stats.completed += 1
+        self._count_request(req.priority, env)
         if work.job is not None:
             self._finish_job(work.job, env)
         work.event.set()
 
-    def _fail_all(self, inflight: Dict[int, _Work], msg: str,
-                  code: str = "INTERNAL"):
-        for work in inflight.values():
+    def _reap(self):
+        """Finalize done requests; flip jobs of admitted work to running."""
+        with self._cv:
+            done = [self._inflight.pop(rid)
+                    for rid in [rid for rid, w in self._inflight.items()
+                                if w.request.done]]
+            for w in self._inflight.values():
+                if (w.job is not None and w.job.state == "queued"
+                        and w.request.admitted_at_tick >= 0):
+                    w.job.state = "running"
+        for work in done:
+            self._finalize(work)
+
+    def _fail_all(self, msg: str, code: str = "INTERNAL"):
+        with self._cv:
+            works = list(self._inflight.values())
+            self._inflight.clear()
+        for work in works:
             work.envelope = self._error_envelope(msg, code)
             if work.job is not None:
                 self._finish_job(work.job, work.envelope)
             work.event.set()
-        inflight.clear()
 
     def _worker(self):
-        inflight: Dict[int, _Work] = {}
         while True:
             with self._cv:
-                while not self._pending and not self._closed:
+                while not self.scheduler.has_work() and not self._closed:
                     self._cv.wait()
                 if self._closed:
                     break
                 # coalescing window: give simultaneous arrivals a chance to
                 # share the first prefill/decode batch
                 deadline = time.monotonic() + self.batch_window_s
-                while (len(self._pending) < self.engine.max_batch
+                while (self.scheduler.queued_count() < self.engine.max_batch
                        and not self._closed):
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
@@ -407,24 +560,21 @@ class BatchedService(InferenceService):
                 if self._closed:
                     break
             try:
-                self._run_batch(inflight)
+                self._run_batch()
             except Exception as e:              # fault isolation: the worker
                 self._worker_error = str(e)     # must survive bad batches
-                self._fail_all(inflight, f"batch failed: {e}", "INTERNAL")
-        self._fail_all(inflight,
-                       f"service for {self.model_id!r} is closed", "INTERNAL")
+                self._fail_all(f"batch failed: {e}", "INTERNAL")
+        self._fail_all(f"service for {self.model_id!r} is closed", "INTERNAL")
 
-    def _run_batch(self, inflight: Dict[int, _Work]):
+    def _run_batch(self):
         """Tick the scheduler until it drains, admitting newcomers between
-        ticks — later arrivals join the running batch (continuous batching)."""
+        ticks — later arrivals join the running batch (continuous
+        batching); the controller decides who gets the next free slot."""
         sched = self.scheduler
-        self._drain_pending(inflight)
-        while sched.has_work():
+        while sched.has_work() and not self._closed:
             sched.tick()
-            for rid in [rid for rid, w in inflight.items()
-                        if w.request.done]:
-                self._finalize(inflight.pop(rid))
-            self._drain_pending(inflight)
+            self._reap()
+        self._reap()
 
     # -- introspection / lifecycle ----------------------------------------
 
@@ -435,11 +585,12 @@ class BatchedService(InferenceService):
             "submitted": bs.submitted,
             "completed": bs.completed,
             "rejected": bs.rejected,
+            "shed": ss.shed,
             "decode_steps": ss.decode_steps,
             "mean_batch_size": round(ss.mean_batch_size, 3),
             "max_batch_seen": ss.max_occupancy,
             "batch_window_s": self.batch_window_s,
-            "queue_depth": len(self._pending),
+            "queue_depth": self.scheduler.queued_count(),
             "engine_max_batch": self.engine.max_batch,
         })
         if self._worker_error:
@@ -449,19 +600,14 @@ class BatchedService(InferenceService):
     def close(self):
         with self._cv:
             self._closed = True
-            queued = list(self._pending)
-            self._pending.clear()
             self._cv.notify_all()
-        # fail queued work immediately — waiters must not sit out the full
-        # request timeout on an undeployed model (inflight work is failed
-        # by the worker on its way out)
-        msg = f"service for {self.model_id!r} is closed"
-        for work in queued:
-            work.envelope = self._error_envelope(msg, "INTERNAL")
-            if work.job is not None:
-                self._finish_job(work.job, work.envelope)
-            work.event.set()
+        # the worker exits at its next wait/tick boundary and fails
+        # everything it still holds; the direct _fail_all below covers a
+        # worker stuck past the join timeout (each work is popped exactly
+        # once under the lock, so nothing double-finalizes)
         self._thread.join(timeout=5)
+        self._fail_all(f"service for {self.model_id!r} is closed", "INTERNAL")
+        super().close()
 
 
 # ---------------------------------------------------------------------------
@@ -472,14 +618,18 @@ def make_service(wrapper: MAXModelWrapper, mode: str = "auto",
                  **service_kw) -> InferenceService:
     """``mode``: 'sync' | 'batched' | 'auto' (batched iff the wrapper speaks
     the generation protocol — classifiers and other per-call models stay
-    sync)."""
+    sync). ``qos`` / ``metrics`` / ``job_ttl_s`` apply to either kind;
+    the remaining kwargs are batched-service tuning."""
+    shared = {k: service_kw.pop(k)
+              for k in ("qos", "metrics", "job_ttl_s")
+              if k in service_kw}
     if mode == "sync":
-        return SyncService(wrapper)
+        return SyncService(wrapper, **shared)
     if mode == "batched":
-        return BatchedService(wrapper, **service_kw)
+        return BatchedService(wrapper, **service_kw, **shared)
     if mode == "auto":
         if wrapper.supports_generation():
-            return BatchedService(wrapper, **service_kw)
-        return SyncService(wrapper)
+            return BatchedService(wrapper, **service_kw, **shared)
+        return SyncService(wrapper, **shared)
     raise ValueError(f"unknown service mode {mode!r} "
                      "(expected sync|batched|auto)")

@@ -1,3 +1,8 @@
 from repro.serving.engine import GenerationEngine, GenerationResult
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SchedulerStats
 from repro.serving.sampling import sample, mask_padded_vocab
+from repro.serving.metrics import Counter, Histogram, MetricsRegistry
+from repro.serving.qos import (
+    AdmissionController, AdmissionError, DeadlineExceeded, InvalidPriority,
+    QoSConfig, QueueFull, RateLimited, PRIORITIES,
+)

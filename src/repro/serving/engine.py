@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serving.sampling import sample
+from repro.serving.sampling import mask_padded_vocab
 
 F32 = jnp.float32
 
@@ -91,14 +91,17 @@ class GenerationEngine:
         return jax.tree.map(put, batch_cache, one_cache)
 
     def _decode_impl(self, params, cache, tokens, rng, temperature, active):
+        """One decode step; ``temperature`` is a per-slot [max_batch]
+        vector so mixed-temperature batches don't interfere — each row
+        samples at its own temperature, rows at 0 take the greedy argmax.
+        The fixed vector shape keeps the step compile-stable."""
         logits, cache = self.model.decode_step(params, cache, tokens)
-        greedy = jnp.argmax(
-            jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
-                      logits, -1e9), axis=-1).astype(jnp.int32)
-        sampled = sample(logits, rng, temperature=1.0,
-                         logical_vocab=self.cfg.vocab_size)
-        use_sampled = temperature > 0
-        nxt = jnp.where(use_sampled, sampled, greedy)
+        masked = mask_padded_vocab(logits, self.cfg.vocab_size)
+        greedy = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+        sampled = jax.random.categorical(rng, scaled, axis=-1) \
+            .astype(jnp.int32)
+        nxt = jnp.where(temperature > 0, sampled, greedy)
         nxt = jnp.where(active, nxt, 0)
         return nxt, cache
 
@@ -150,12 +153,16 @@ class GenerationEngine:
     def release_slot(self, slot: int):
         self._active[slot] = False
 
-    def step(self, tokens: np.ndarray, rng, temperature: float = 0.0):
-        """One decode step for the whole batch. tokens [max_batch] int32."""
+    def step(self, tokens: np.ndarray, rng, temperature=0.0):
+        """One decode step for the whole batch. tokens [max_batch] int32;
+        ``temperature`` is a scalar (applied to every slot) or a per-slot
+        [max_batch] vector."""
         active = jnp.asarray(self._active)
+        temps = np.broadcast_to(np.asarray(temperature, np.float32),
+                                (self.max_batch,))
         nxt, self._cache = self._decode(
             self.params, self._cache, jnp.asarray(tokens, jnp.int32), rng,
-            jnp.asarray(temperature, F32), active)
+            jnp.asarray(temps, F32), active)
         self._lengths[self._active] += 1
         return np.asarray(nxt)
 

@@ -7,9 +7,17 @@ immediately backfills. This is the serving loop a TPU pod actually needs —
 the paper's per-request ``model.predict()`` generalised to batched,
 compiled execution.
 
+Admission order is pluggable: by default a FIFO deque (arrival order), or a
+:class:`~repro.serving.qos.AdmissionController` — priority classes,
+per-client fairness, and deadline shedding — when one is passed. Shed
+requests retire with ``error_code='DEADLINE_EXCEEDED'`` without ever
+touching an engine slot.
+
 Invariants (property-tested):
 - a slot is never double-occupied;
-- admission is FIFO (no starvation): requests are admitted in arrival order;
+- admission never starves: FIFO is arrival order; under QoS every
+  non-empty priority class is served within one weighted round, and order
+  *within* a (class, client) pair stays FIFO;
 - every admitted request retires with <= max_new_tokens generated;
 - throughput accounting: sum of emitted tokens == sum over requests.
 
@@ -41,11 +49,16 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     extra: Optional[Dict[str, Any]] = None
+    # QoS identity (set when submitted through an AdmissionController)
+    priority: str = "batch"
+    client: str = "anon"
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
     slot: int = -1
     admitted_at_tick: int = -1
     finished_at_tick: int = -1
+    error: Optional[str] = None
+    error_code: Optional[str] = None      # e.g. DEADLINE_EXCEEDED when shed
 
     @property
     def done(self) -> bool:
@@ -59,6 +72,7 @@ class SchedulerStats:
     prefills: int = 0
     emitted_tokens: int = 0
     completed: int = 0
+    shed: int = 0                     # deadline-expired, never ran
     wall_s: float = 0.0
     occupancy_sum: int = 0            # sum of active-batch sizes per decode
     max_occupancy: int = 0
@@ -75,11 +89,15 @@ class SchedulerStats:
 
 class ContinuousBatchingScheduler:
     def __init__(self, engine: GenerationEngine, *, seed: int = 0,
-                 retain_completed: int = 1024):
+                 retain_completed: int = 1024, admission=None):
         self.engine = engine
-        self.queue: deque[Request] = deque()
+        self.admission = admission        # Optional[AdmissionController]
+        self.queue: deque[Request] = deque()      # FIFO path (admission=None)
         self.active: Dict[int, Request] = {}      # slot -> request
         self._last_tok = np.zeros((engine.max_batch,), np.int32)
+        # per-slot temperature: mixed-temperature batches must not
+        # interfere (fixed [max_batch] shape keeps the decode compile-stable)
+        self._temps = np.zeros((engine.max_batch,), np.float32)
         self._rng = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
         self._lock = threading.RLock()
@@ -92,53 +110,103 @@ class ContinuousBatchingScheduler:
 
     def submit(self, prompt: List[int], *, max_new_tokens: int = 32,
                temperature: float = 0.0,
-               extra: Optional[Dict[str, Any]] = None) -> Request:
-        with self._lock:
-            req = Request(next(self._ids), list(prompt), max_new_tokens,
-                          temperature, extra)
-            self.queue.append(req)
-            return req
+               extra: Optional[Dict[str, Any]] = None,
+               priority: Optional[str] = None,
+               client: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        """Enqueue a request. With an admission controller attached this
+        may raise a :class:`~repro.serving.qos.AdmissionError`
+        (rate-limited / queue-full) on the *submitting* thread — rejection
+        must never reach the decode loop.
+
+        Deliberately does NOT take the scheduler lock: ``tick`` holds it
+        across a whole engine decode step, and request threads must not
+        queue behind JAX compute just to enqueue. The id counter is an
+        atomic ``itertools.count``; the controller and the FIFO deque have
+        their own synchronization."""
+        req = Request(next(self._ids), list(prompt), max_new_tokens,
+                      temperature, extra)
+        if self.admission is not None:
+            ticket = self.admission.submit(
+                req, priority=priority, client=client,
+                deadline_s=deadline_s)
+            req.priority, req.client = ticket.priority, ticket.client
+        else:
+            self.queue.append(req)      # deque.append is atomic
+        return req
 
     def poll(self, request_id: int) -> Optional[Request]:
         """Completed request by id, else None (still queued/active)."""
         with self._lock:
             return self._completed.get(request_id)
 
+    def queued_count(self) -> int:
+        # lock-free: depth()/len() are point-in-time reads used for window
+        # heuristics and stats — they must not stall behind a decode step
+        if self.admission is not None:
+            return self.admission.depth()
+        return len(self.queue)
+
     def has_work(self) -> bool:
-        with self._lock:
-            return bool(self.queue or self.active)
+        if self.admission is not None:
+            return bool(self.admission.depth() or self.active)
+        return bool(self.queue or self.active)
 
     # -- scheduling ----------------------------------------------------------
 
+    def _retire(self, req: Request):
+        req.finished_at_tick = self.stats.ticks
+        req.extra = None              # may pin large arrays (image embeds…)
+        self._completed[req.id] = req
+        while len(self._completed) > self.retain_completed:
+            self._completed.pop(next(iter(self._completed)))
+
+    def _shed(self, req: Request):
+        req.error = ("deadline exceeded while queued "
+                     f"(waited for a decode slot, class {req.priority!r})")
+        req.error_code = "DEADLINE_EXCEEDED"
+        self._retire(req)
+        self.stats.shed += 1
+
+    def _place(self, req: Request, slot: int):
+        logits = self.engine.insert_request(req.prompt, slot,
+                                            extra=req.extra)
+        first = int(np.asarray(logits[0, :self.engine.cfg.vocab_size]
+                               ).argmax())
+        req.slot = slot
+        req.admitted_at_tick = self.stats.ticks
+        req.output.append(first)
+        self._last_tok[slot] = first
+        self._temps[slot] = req.temperature
+        self.active[slot] = req
+        self.stats.prefills += 1
+        self.stats.emitted_tokens += 1
+        self._maybe_finish(req)
+
     def _admit(self):
         free = self.engine.free_slots()
+        if self.admission is not None:
+            # controller decides order; it also sweeps deadline-expired
+            # work even when no slot is free (k == 0) so doomed requests
+            # fail promptly instead of rotting behind a full batch
+            tickets, shed = self.admission.take(len(free))
+            for t in shed:
+                self._shed(t.item)
+            for t in tickets:
+                self._place(t.item, free.pop(0))
+            return
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.popleft()            # FIFO: no starvation
-            logits = self.engine.insert_request(req.prompt, slot,
-                                                extra=req.extra)
-            first = int(np.asarray(logits[0, :self.engine.cfg.vocab_size]
-                                   ).argmax())
-            req.slot = slot
-            req.admitted_at_tick = self.stats.ticks
-            req.output.append(first)
-            self._last_tok[slot] = first
-            self.active[slot] = req
-            self.stats.prefills += 1
-            self.stats.emitted_tokens += 1
-            self._maybe_finish(req)
+            self._place(req, slot)
 
     def _maybe_finish(self, req: Request):
         eos = self.engine.eos_id
         if (len(req.output) >= req.max_new_tokens
                 or (eos is not None and req.output and req.output[-1] == eos)):
-            req.finished_at_tick = self.stats.ticks
             self.engine.release_slot(req.slot)
             del self.active[req.slot]
-            req.extra = None          # may pin large arrays (image embeds…)
-            self._completed[req.id] = req
-            while len(self._completed) > self.retain_completed:
-                self._completed.pop(next(iter(self._completed)))
+            self._retire(req)
             self.stats.completed += 1
 
     def tick(self):
@@ -148,16 +216,14 @@ class ContinuousBatchingScheduler:
             if not self.active:
                 self.stats.ticks += 1
                 return
-            # temperature is uniform per decode step; use max over active
-            # (the engine masks inactive slots). Mixed-temperature batches
-            # would need a per-slot temperature vector — kept scalar for
-            # compile stability.
-            temp = max(r.temperature for r in self.active.values())
             self._rng, sub = jax.random.split(self._rng)
             self.stats.occupancy_sum += len(self.active)
             self.stats.max_occupancy = max(self.stats.max_occupancy,
                                            len(self.active))
-            nxt = self.engine.step(self._last_tok, sub, temp)
+            # per-slot temperature vector: each request samples at its own
+            # temperature (greedy where 0); inactive slots are masked by
+            # the engine
+            nxt = self.engine.step(self._last_tok, sub, self._temps)
             self.stats.decode_steps += 1
             for slot, req in list(self.active.items()):
                 tok = int(nxt[slot])

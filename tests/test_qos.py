@@ -1,0 +1,493 @@
+"""QoS subsystem: admission-controller policy (priority ordering, weighted
+per-client fairness, token-bucket rate limits, deadline shedding), the
+metrics registry and ``/v2/metrics`` endpoint, job TTL/DELETE, per-slot
+temperature, and the per-priority-class no-starvation property."""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.assets  # noqa: F401
+from repro.configs import CONFIGS
+from repro.core import (
+    EXCHANGE, MAXModelWrapper, MAXServer, ModelMetadata, SyncService,
+)
+from repro.core.api import ERROR_STATUS
+from repro.models import build_model
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine
+from repro.serving.metrics import Histogram, MetricsRegistry
+from repro.serving.qos import (
+    AdmissionController, InvalidPriority, QoSConfig, QueueFull, RateLimited,
+    DEFAULT_CLASS_WEIGHTS,
+)
+
+BUILD_KW = {"max_seq": 64, "max_batch": 4}
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def make_ctl(**cfg_kw):
+    clock = FakeClock()
+    ctl = AdmissionController(QoSConfig(**cfg_kw), clock=clock,
+                              model_id="m")
+    return ctl, clock
+
+
+# -- admission controller: policy ---------------------------------------------
+
+def test_priority_classes_weighted_ordering():
+    """With every class backlogged, dequeues follow the class weights
+    (default 8:3:1) and the very first pick is interactive."""
+    ctl, _ = make_ctl()
+    for i in range(20):
+        for cls in ("best_effort", "batch", "interactive"):   # worst order
+            ctl.submit(f"{cls}{i}", priority=cls, client="c")
+    total = sum(DEFAULT_CLASS_WEIGHTS.values())
+    admitted, shed = ctl.take(total)
+    assert shed == []
+    assert admitted[0].priority == "interactive"
+    counts = {}
+    for t in admitted:
+        counts[t.priority] = counts.get(t.priority, 0) + 1
+    assert counts == DEFAULT_CLASS_WEIGHTS
+
+
+def test_within_class_and_client_is_fifo():
+    ctl, _ = make_ctl()
+    items = [ctl.submit(i, priority="batch", client="same")
+             for i in range(10)]
+    admitted, _ = ctl.take(10)
+    assert [t.item for t in admitted] == [t.item for t in items]
+
+
+def test_greedy_client_does_not_starve_polite_client():
+    """Deficit round-robin: a client with 50 queued requests and a client
+    with 5 alternate — the greedy backlog queues behind itself."""
+    ctl, _ = make_ctl()
+    for i in range(50):
+        ctl.submit(("greedy", i), priority="batch", client="greedy")
+    for i in range(5):
+        ctl.submit(("polite", i), priority="batch", client="polite")
+    admitted, _ = ctl.take(10)
+    polite_served = [t.item for t in admitted if t.client == "polite"]
+    assert polite_served == [("polite", i) for i in range(5)], \
+        f"polite client starved: {[t.item for t in admitted]}"
+
+
+def test_token_bucket_rate_limit_and_refill():
+    ctl, clock = make_ctl(rate=1.0, burst=2.0)
+    ctl.submit("a", client="c1")
+    ctl.submit("b", client="c1")
+    with pytest.raises(RateLimited):
+        ctl.submit("c", client="c1")
+    ctl.submit("d", client="c2")          # buckets are per client
+    clock.t = 1.0                          # 1s -> 1 token back
+    ctl.submit("e", client="c1")
+    with pytest.raises(RateLimited):
+        ctl.submit("f", client="c1")
+    assert ctl.stats()["rate_limited"] == 2
+
+
+def test_queue_cap_is_per_class():
+    ctl, _ = make_ctl(max_queue=2)
+    ctl.submit("a", priority="batch")
+    ctl.submit("b", priority="batch")
+    with pytest.raises(QueueFull):
+        ctl.submit("c", priority="batch")
+    # a flooded batch class must not block interactive admission
+    ctl.submit("d", priority="interactive")
+    assert ctl.stats()["queued_by_class"]["interactive"] == 1
+
+
+def test_deadline_shedding_and_shed_metrics():
+    ctl, clock = make_ctl()
+    ctl.submit("doomed", priority="batch", deadline_s=0.5)
+    ctl.submit("fine", priority="batch")
+    clock.t = 1.0
+    admitted, shed = ctl.take(5)
+    assert [t.item for t in shed] == ["doomed"]
+    assert [t.item for t in admitted] == ["fine"]
+    assert ctl.stats()["shed"] == 1
+    counters = ctl.metrics.to_json()["counters"]
+    assert counters['max_shed_total{class="batch",model="m"}'] == 1.0
+    # sweeps run even when no slot is free (k=0): doomed work never rots
+    ctl.submit("doomed2", priority="batch", deadline_s=0.1)
+    clock.t = 2.0
+    _, shed = ctl.take(0)
+    assert [t.item for t in shed] == ["doomed2"]
+
+
+def test_fifo_policy_preserves_arrival_order_across_classes():
+    ctl, _ = make_ctl(policy="fifo")
+    ctl.submit("a", priority="best_effort", client="x")
+    ctl.submit("b", priority="interactive", client="y")
+    ctl.submit("c", priority="batch", client="x")
+    admitted, _ = ctl.take(3)
+    assert [t.item for t in admitted] == ["a", "b", "c"]
+
+
+def test_unknown_priority_and_bad_config_rejected():
+    ctl, _ = make_ctl()
+    with pytest.raises(InvalidPriority):
+        ctl.submit("x", priority="urgent")
+    with pytest.raises(ValueError):
+        QoSConfig(policy="wat")
+    with pytest.raises(ValueError):
+        QoSConfig(rate=-1)
+    with pytest.raises(ValueError):
+        QoSConfig(quantum=0)            # would livelock the DRR loop
+    with pytest.raises(ValueError):
+        QoSConfig.from_json({"nope": 1})
+    assert QoSConfig.from_json({}).policy == "drr"
+
+
+@settings(max_examples=10, deadline=None)
+@given(classes=st.lists(
+    st.sampled_from(["interactive", "batch", "best_effort"]),
+    min_size=3, max_size=40))
+def test_no_priority_class_starves(classes):
+    """Property: draining one item at a time, any class with queued work
+    is served at least once per weighted round (sum of class weights) —
+    the per-priority-class restatement of the scheduler's old FIFO
+    no-starvation invariant."""
+    ctl, _ = make_ctl()
+    for i, cls in enumerate(classes):
+        ctl.submit((cls, i), priority=cls, client=f"client{i % 3}")
+    bound = sum(DEFAULT_CLASS_WEIGHTS.values())
+    waiting = {c: 0 for c in DEFAULT_CLASS_WEIGHTS}
+    served = []
+    while ctl.depth():
+        admitted, shed = ctl.take(1)
+        assert len(admitted) == 1 and not shed
+        t = admitted[0]
+        served.append(t)
+        depths = ctl.stats()["queued_by_class"]
+        for c in waiting:
+            waiting[c] = 0 if (c == t.priority or not depths[c]) \
+                else waiting[c] + 1
+            assert waiting[c] <= bound, f"{c} starved for {waiting[c]} picks"
+    assert len(served) == len(classes)
+    # within one (class, client) pair, order stays FIFO
+    for cls in DEFAULT_CLASS_WEIGHTS:
+        for client in {t.client for t in served}:
+            idx = [t.item[1] for t in served
+                   if t.priority == cls and t.client == client]
+            assert idx == sorted(idx)
+
+
+# -- metrics registry ---------------------------------------------------------
+
+def test_histogram_percentiles_and_buckets():
+    h = Histogram(buckets=(0.1, 1.0))
+    for v in [0.05] * 50 + [0.5] * 45 + [5.0] * 5:
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["p50"] in (0.05, 0.5)
+    assert snap["p95"] == 5.0
+    cum = dict(h.cumulative())
+    assert cum["0.1"] == 50 and cum["1.0"] == 95 and cum["+Inf"] == 100
+
+
+def test_registry_prometheus_rendering():
+    reg = MetricsRegistry()
+    reg.inc("max_requests_total", 2, model="m", outcome="ok")
+    reg.observe("max_queue_wait_seconds", 0.02, model="m")
+    reg.register_gauge("max_queue_depth", lambda: 3, model="m")
+    text = reg.to_prometheus()
+    assert "# TYPE max_requests_total counter" in text
+    assert 'max_requests_total{model="m",outcome="ok"} 2.0' in text
+    assert "# TYPE max_queue_depth gauge" in text
+    assert 'max_queue_depth{model="m"} 3' in text
+    assert "# TYPE max_queue_wait_seconds histogram" in text
+    assert 'max_queue_wait_seconds_bucket{model="m",le="+Inf"} 1' in text
+    assert 'max_queue_wait_seconds_count{model="m"} 1' in text
+    js = reg.to_json()
+    assert js["counters"]['max_requests_total{model="m",outcome="ok"}'] == 2.0
+    reg.unregister_gauges(model="m")
+    assert "max_queue_depth" not in reg.to_prometheus()
+
+
+def test_error_status_covers_qos_codes():
+    assert ERROR_STATUS["RATE_LIMITED"] == 429
+    assert ERROR_STATUS["DEADLINE_EXCEEDED"] == 504
+
+
+# -- scheduler integration ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = CONFIGS["max-sentiment"]
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_scheduler_admission_order_comes_from_controller(small_model):
+    """max_batch=1 serializes admissions: late-arriving interactive work
+    must overtake the queued batch backlog, FIFO within each class."""
+    model, params = small_model
+    eng = GenerationEngine(model, params, max_batch=1, max_seq=32)
+    sched = ContinuousBatchingScheduler(
+        eng, admission=AdmissionController(QoSConfig()))
+    bulk = [sched.submit([1 + i], max_new_tokens=2, priority="batch")
+            for i in range(3)]
+    inter = [sched.submit([10 + i], max_new_tokens=2,
+                          priority="interactive") for i in range(2)]
+    stats = sched.run()
+    assert stats.completed == 5 and stats.shed == 0
+    assert max(r.admitted_at_tick for r in inter) \
+        < max(r.admitted_at_tick for r in bulk)
+    for group in (bulk, inter):
+        ticks = [r.admitted_at_tick for r in group]
+        assert ticks == sorted(ticks)
+        assert all(len(r.output) == 2 for r in group)
+
+
+def test_scheduler_sheds_expired_without_touching_engine(small_model):
+    model, params = small_model
+    eng = GenerationEngine(model, params, max_batch=2, max_seq=32)
+    sched = ContinuousBatchingScheduler(
+        eng, admission=AdmissionController(QoSConfig()))
+    doomed = sched.submit([1], max_new_tokens=4, deadline_s=0.0)
+    ok = sched.submit([2], max_new_tokens=4)
+    stats = sched.run()
+    assert doomed.done and doomed.error_code == "DEADLINE_EXCEEDED"
+    assert doomed.slot == -1 and doomed.output == []     # never admitted
+    assert sched.poll(doomed.id) is doomed
+    assert ok.done and ok.error_code is None and len(ok.output) == 4
+    assert stats.shed == 1 and stats.completed == 1
+
+
+def test_mixed_temperature_batch_does_not_interfere(small_model):
+    """Per-slot temperature: a greedy (t=0) request co-batched with a hot
+    (t=1.5) request must emit exactly its solo greedy tokens — the old
+    max-over-active scalar broke this."""
+    model, params = small_model
+    eng = GenerationEngine(model, params, max_batch=2, max_seq=32)
+    sched = ContinuousBatchingScheduler(eng)
+    greedy = sched.submit([1, 2, 3], max_new_tokens=5, temperature=0.0)
+    sched.submit([4, 5], max_new_tokens=5, temperature=1.5)
+    sched.run()
+    solo_sched = ContinuousBatchingScheduler(eng)
+    solo = solo_sched.submit([1, 2, 3], max_new_tokens=5, temperature=0.0)
+    solo_sched.run()
+    assert greedy.output == solo.output
+
+
+# -- job TTL / delete ---------------------------------------------------------
+
+class EchoWrapper(MAXModelWrapper):
+    MODEL_META_DATA = ModelMetadata(id="echo-qos", name="Echo",
+                                    description="test stub", type="Test")
+
+    def _predict(self, x):
+        return [x]
+
+
+def _wait_done(svc, job, timeout=10.0):
+    deadline = time.time() + timeout
+    while job.state not in ("done", "error") and time.time() < deadline:
+        time.sleep(0.01)
+    assert job.state == "done"
+
+
+def test_finished_jobs_expire_after_ttl():
+    svc = SyncService(EchoWrapper(), job_ttl_s=0.05)
+    try:
+        job = svc.submit_job("x")
+        _wait_done(svc, job)
+        assert svc.get_job(job.id) is job       # alive inside the TTL
+        time.sleep(0.1)
+        with pytest.raises(KeyError):
+            svc.get_job(job.id)                 # expired
+        assert svc.stats()["jobs"] == 0
+    finally:
+        svc.close()
+
+
+def test_delete_job_drops_record():
+    svc = SyncService(EchoWrapper())
+    try:
+        job = svc.submit_job("y")
+        _wait_done(svc, job)
+        assert svc.delete_job(job.id) is True
+        assert svc.delete_job(job.id) is False
+        with pytest.raises(KeyError):
+            svc.get_job(job.id)
+    finally:
+        svc.close()
+
+
+# -- HTTP surface -------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw=BUILD_KW,
+                   service_kw={"batch_window_s": 0.02}) as s:
+        yield s
+
+
+def _req(server, method, path, payload=None, headers=None):
+    data = json.dumps(payload).encode() if payload is not None else None
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(headers or {})
+    req = urllib.request.Request(server.url + path, data, hdrs,
+                                 method=method)
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, r.headers.get("Content-Type"), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, e.headers.get("Content-Type"), e.read()
+
+
+def test_metrics_endpoint_consistent_with_stats(server):
+    """Acceptance: per-class requests_total for a model sums to the same
+    request count /v2/model/{id}/stats reports."""
+    for priority in ("interactive", "batch", "interactive"):
+        code, _, body = _req(server, "POST",
+                             "/v2/model/max-sentiment/predict",
+                             {"input": ["fine"], "priority": priority},
+                             headers={"X-MAX-Client": "metrics-test"})
+        assert code == 200, body
+    code, _, body = _req(server, "GET", "/v2/model/max-sentiment/stats")
+    requests = json.loads(body)["requests"]
+    code, ctype, body = _req(server, "GET", "/v2/metrics")
+    assert code == 200 and ctype == "application/json"
+    metrics = json.loads(body)["metrics"]
+    by_class = {k: v for k, v in metrics["counters"].items()
+                if k.startswith("max_requests_total")
+                and 'model="max-sentiment"' in k}
+    assert sum(by_class.values()) == requests
+    assert any('class="interactive"' in k for k in by_class)
+    assert any('class="batch"' in k for k in by_class)
+    assert "tokens_per_s" in metrics["derived"]
+
+
+def test_metrics_prometheus_format(server):
+    code, ctype, body = _req(server, "GET",
+                             "/v2/metrics?format=prometheus")
+    text = body.decode()
+    assert code == 200 and ctype.startswith("text/plain")
+    assert "# TYPE max_requests_total counter" in text
+    assert "max_requests_total{" in text
+
+
+def test_batched_qos_deadline_and_queue_wait_metrics(server):
+    """A generative predict with an unmeetable deadline is shed with a 504
+    DEADLINE_EXCEEDED envelope; a served one leaves per-class queue-wait
+    percentiles in /v2/metrics."""
+    code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/predict",
+                         {"input": {"text": "ok", "max_new_tokens": 2},
+                          "priority": "interactive"})
+    assert code == 200, body
+    code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/predict",
+                         {"input": {"text": "late", "max_new_tokens": 2},
+                          "deadline_ms": 0.001})
+    env = json.loads(body)
+    assert code == 504 and env["error"]["code"] == "DEADLINE_EXCEEDED", env
+    _, _, body = _req(server, "GET", "/v2/metrics")
+    hists = json.loads(body)["metrics"]["histograms"]
+    key = ('max_queue_wait_seconds{class="interactive",'
+           'model="qwen3-4b"}')
+    assert hists[key]["count"] >= 1
+    _, _, body = _req(server, "GET", "/v2/model/qwen3-4b/stats")
+    svc = json.loads(body)["service"]
+    assert svc["shed"] >= 1
+    assert svc["qos"]["policy"] == "drr"
+
+
+def test_deploy_with_qos_rate_limits_per_client(server):
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/deploy",
+                         {"service": "sync",
+                          "qos": {"rate": 0.001, "burst": 1}})
+    assert code == 200
+    assert json.loads(body)["qos"]["rate"] == 0.001
+    payload = {"input": {"image_id": 1, "max_new_tokens": 2}}
+    hdrs = {"X-MAX-Client": "throttled"}
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/predict",
+                         payload, headers=hdrs)
+    assert code == 200, body
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/predict",
+                         payload, headers=hdrs)
+    env = json.loads(body)
+    assert code == 429 and env["error"]["code"] == "RATE_LIMITED", env
+    # a different client identity has its own bucket
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/predict",
+                         payload, headers={"X-MAX-Client": "other"})
+    assert code == 200, body
+    # bad qos config is a structured 400, deployment survives
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/deploy",
+                         {"qos": {"rate": -5}})
+    assert code == 400
+    assert json.loads(body)["error"]["code"] == "INVALID_INPUT"
+    # explicit empty qos resets to defaults (redeploys)
+    code, _, body = _req(server, "POST", "/v2/model/max-caption/deploy",
+                         {"service": "sync", "qos": {}})
+    assert code == 200 and json.loads(body)["qos"]["rate"] is None
+
+
+def test_job_delete_endpoint(server):
+    code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/jobs",
+                         {"input": {"text": "j", "max_new_tokens": 2}})
+    assert code == 202
+    job_id = json.loads(body)["job"]["id"]
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        _, _, body = _req(server, "GET", f"/v2/jobs/{job_id}")
+        if json.loads(body)["job"]["state"] in ("done", "error"):
+            break
+        time.sleep(0.05)
+    code, _, body = _req(server, "DELETE", f"/v2/jobs/{job_id}")
+    assert code == 200 and json.loads(body)["deleted"] == job_id
+    code, _, body = _req(server, "GET", f"/v2/jobs/{job_id}")
+    assert code == 404
+    code, _, body = _req(server, "DELETE", f"/v2/jobs/{job_id}")
+    assert code == 404
+
+
+def test_rate_limited_job_submit_does_not_leak_records(server):
+    """A 429 at job submit must not leave a forever-'queued' job record."""
+    code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/deploy",
+                         {"service": "batched",
+                          "qos": {"rate": 0.001, "burst": 1}})
+    assert code == 200, body
+    payload = {"input": {"text": "j", "max_new_tokens": 2}}
+    hdrs = {"X-MAX-Client": "job-limited"}
+    code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/jobs",
+                         payload, headers=hdrs)
+    assert code == 202, body
+    for _ in range(3):
+        code, _, body = _req(server, "POST", "/v2/model/qwen3-4b/jobs",
+                             payload, headers=hdrs)
+        env = json.loads(body)
+        assert code == 429 and env["error"]["code"] == "RATE_LIMITED", env
+    _, _, body = _req(server, "GET", "/v2/model/qwen3-4b/stats")
+    assert json.loads(body)["service"]["jobs"] == 1   # only the accepted one
+    code, _, _ = _req(server, "POST", "/v2/model/qwen3-4b/deploy",
+                      {"service": "batched", "qos": {}})   # reset policy
+    assert code == 200
+
+
+def test_invalid_qos_fields_are_400(server):
+    for bad in ({"input": ["x"], "priority": 7},
+                {"input": ["x"], "deadline_ms": -1},
+                {"input": ["x"], "client": ""}):
+        code, _, body = _req(server, "POST",
+                             "/v2/model/max-sentiment/predict", bad)
+        env = json.loads(body)
+        assert code == 400 and env["error"]["code"] == "INVALID_INPUT", env
+    code, _, body = _req(server, "POST", "/v2/model/max-sentiment/predict",
+                         {"input": ["x"], "priority": "urgent"})
+    assert code == 400
