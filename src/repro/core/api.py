@@ -75,6 +75,10 @@ ERROR_STATUS = {
     "METHOD_NOT_ALLOWED": 405,
     "QUEUE_FULL": 429,
     "RATE_LIMITED": 429,
+    # generation hit the deployment's cache capacity (prompt + generated
+    # tokens reached max_seq) — the request asked for more than the
+    # deployment can hold, so it is a client-side 400, not a 5xx
+    "MAX_SEQ_EXCEEDED": 400,
     "INTERNAL": 500,
     "TIMEOUT": 504,
     "DEADLINE_EXCEEDED": 504,

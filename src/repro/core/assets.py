@@ -57,7 +57,8 @@ class _EngineWrapper(MAXModelWrapper):
     """Shared plumbing: model + params + generation engine."""
 
     def __init__(self, asset: ModelAsset, *, smoke: bool = True,
-                 max_batch: int = 4, max_seq: int = 128, seed: int = 0):
+                 max_batch: int = 4, max_seq: int = 128, seed: int = 0,
+                 decode_chunk: int = 8):
         cfg = asset.config
         if smoke and cfg.name in ASSIGNED:
             cfg = reduce_for_smoke(cfg)
@@ -66,7 +67,8 @@ class _EngineWrapper(MAXModelWrapper):
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.engine = GenerationEngine(self.model, self.params,
                                        max_batch=max_batch, max_seq=max_seq,
-                                       eos_id=TOKENIZER.eos_id)
+                                       eos_id=TOKENIZER.eos_id,
+                                       decode_chunk=decode_chunk)
         self.MODEL_META_DATA = asset.metadata
 
     def _result(self, tokens: List[int], prompt_len: int) -> GenerationResult:

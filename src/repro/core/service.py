@@ -108,6 +108,21 @@ class InferenceService(abc.ABC):
     def model_id(self) -> str:
         return self.wrapper.metadata.id
 
+    def _request_cost(self, inp: Any) -> float:
+        """Admission cost of one input — parses the generation-style dict
+        field and delegates the pricing rule to
+        :meth:`QoSConfig.request_cost` (shared with the scheduler, so both
+        service kinds price identical traffic identically)."""
+        if not self.wrapper.supports_generation():
+            return self.qos_cfg.request_cost(1)   # classifiers: one unit
+        budget = None
+        if isinstance(inp, dict):
+            try:
+                budget = int(inp["max_new_tokens"])
+            except (KeyError, TypeError, ValueError):
+                budget = None
+        return self.qos_cfg.request_cost(budget)
+
     def _count_request(self, priority: Optional[str],
                        env: Dict[str, Any]):
         """One requests_total increment per finished request; rejections
@@ -244,7 +259,7 @@ class SyncService(InferenceService):
 
     def predict(self, inp: Any,
                 qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        rejected = self._admit_or_envelope(qos)
+        rejected = self._admit_or_envelope(qos, cost=self._request_cost(inp))
         if rejected is not None:
             return rejected
         if self._serialize:
@@ -258,7 +273,8 @@ class SyncService(InferenceService):
     def predict_batch(self, inputs: List[Any],
                       qos: Optional[Dict[str, Any]] = None
                       ) -> List[Dict[str, Any]]:
-        rejected = self._admit_or_envelope(qos, cost=float(len(inputs)))
+        rejected = self._admit_or_envelope(
+            qos, cost=sum(self._request_cost(i) for i in inputs))
         if rejected is not None:
             return [dict(rejected) for _ in inputs]
         if self._serialize:
@@ -274,7 +290,8 @@ class SyncService(InferenceService):
                    qos: Optional[Dict[str, Any]] = None) -> Job:
         # admission failures surface at submit (429), not as dead jobs
         self.admission.try_acquire(_qos_field(qos, "client") or "anon",
-                                   1.0, _qos_field(qos, "priority"))
+                                   self._request_cost(inp),
+                                   _qos_field(qos, "priority"))
         job = self._new_job()
         with self._job_cv:
             if self._closed:
@@ -368,13 +385,21 @@ class BatchedService(InferenceService):
     then keeps admitting newcomers every tick (continuous batching
     proper). Dequeue order is the controller's: priority classes, then
     deficit-weighted fairness across clients — not raw FIFO.
+
+    ``decode_chunk`` is the fused-decode granularity: the scheduler syncs
+    to host (and admits newcomers / retires finished work) once per chunk
+    of up to that many tokens, not once per token. Larger chunks cut
+    dispatch overhead; smaller chunks admit fresh arrivals sooner — the
+    batching window and the chunk size together bound how long a request
+    can wait before joining the batch (window + one chunk).
     """
 
     kind = "batched"
 
     def __init__(self, wrapper: MAXModelWrapper, *,
                  batch_window_s: float = 0.01, max_queue: int = 64,
-                 request_timeout_s: float = 300.0, **kw):
+                 request_timeout_s: float = 300.0,
+                 decode_chunk: Optional[int] = None, **kw):
         if not wrapper.supports_generation():
             raise ValueError(
                 f"{wrapper.metadata.id!r} does not implement the generation "
@@ -386,7 +411,8 @@ class BatchedService(InferenceService):
         from repro.serving.scheduler import ContinuousBatchingScheduler
         self.engine = wrapper.engine
         self.scheduler = ContinuousBatchingScheduler(
-            self.engine, admission=self.admission)
+            self.engine, admission=self.admission,
+            decode_chunk=decode_chunk)
         self.batch_window_s = batch_window_s
         self.max_queue = self.qos_cfg.max_queue
         self.request_timeout_s = request_timeout_s
@@ -587,6 +613,13 @@ class BatchedService(InferenceService):
             "rejected": bs.rejected,
             "shed": ss.shed,
             "decode_steps": ss.decode_steps,
+            "decode_chunks": ss.chunks,
+            "decode_chunk": self.scheduler.decode_chunk,
+            "cache_overflows": ss.cache_overflows,
+            "emitted_tokens": ss.emitted_tokens,
+            # wall time accrues per tick, so this is real whichever loop
+            # drives the scheduler (run() or the service worker)
+            "tokens_per_s": round(ss.tokens_per_s, 2),
             "mean_batch_size": round(ss.mean_batch_size, 3),
             "max_batch_seen": ss.max_occupancy,
             "batch_window_s": self.batch_window_s,

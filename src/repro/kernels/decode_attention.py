@@ -6,11 +6,25 @@ group at once: the q block is ``[G, hd]`` (all query heads sharing one KV
 head), so the MXU sees ``(G x hd) @ (hd x bs)`` tiles instead of degenerate
 single-row matmuls.
 
-``lengths`` rides in scalar-prefetch (SMEM) and masks cache slots past the
-per-sequence length. This kernel is the per-shard body of the
-context-parallel decode path: on a sequence-sharded cache each shard runs
-it over its local slice and the (m, l, acc) partials combine with small
-collectives (the pure-jnp path lets GSPMD derive the same combine).
+``lengths`` rides in scalar-prefetch (SMEM) and serves two purposes:
+
+- inside a block it masks cache slots past the per-sequence length;
+- it makes the kernel *length-aware*: KV blocks wholly past a sequence's
+  length are skipped. The k/v index maps clamp the block index to the last
+  block that holds any valid entry for this sequence (a revisited block
+  issues no new DMA), and the block body is ``pl.when``-guarded so the
+  skipped iterations do no compute. Decode cost is therefore proportional
+  to the actual context length, not ``max_seq``. Skipping is numerically
+  exact: a fully-masked trailing block contributes ``alpha == 1`` and
+  ``p == exp(NEG_INF - m) == 0`` to the flash combine, i.e. nothing.
+
+``lengths`` must be >= 1 (the engine always passes ``cache_len + 1``); a
+zero length would skip every block and emit zeros.
+
+This kernel is the per-shard body of the context-parallel decode path: on
+a sequence-sharded cache each shard runs it over its local slice and the
+(m, l, acc) partials combine with small collectives (the pure-jnp path
+lets GSPMD derive the same combine).
 """
 
 from __future__ import annotations
@@ -37,26 +51,32 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
-    k = k_ref[0, 0].astype(jnp.float32)            # [bs, hd]
-    v = v_ref[0, 0].astype(jnp.float32)            # [bs, hd]
-    hd = q.shape[-1]
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * hd ** -0.5
-
     length = lens_ref[b]
-    pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(pos < length, s, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    # length-aware skip: blocks wholly past this sequence's length do no
+    # compute (their k/v index maps also re-fetch the last valid block, so
+    # they issue no DMA either)
+    @pl.when(ki * bs < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)        # [bs, hd]
+        v = v_ref[0, 0].astype(jnp.float32)        # [bs, hd]
+        hd = q.shape[-1]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * hd ** -0.5
+
+        pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
     def _finish():
@@ -77,6 +97,13 @@ def decode_attention(q, k, v, lengths, *, bs=256, interpret=False):
     kt = jnp.swapaxes(k, 1, 2)                     # [B, KV, S, hd]
     vt = jnp.swapaxes(v, 1, 2)
 
+    def kv_index(b, h, ki, lens_ref):
+        # clamp to the last block holding a valid entry for sequence b:
+        # iterations past it re-request the same block (no new DMA) and the
+        # body's pl.when guard skips their compute
+        last = jnp.maximum((lens_ref[b] + bs - 1) // bs - 1, 0)
+        return (b, h, jnp.minimum(ki, last), 0)
+
     grid = (B, KV, S // bs)
     out = pl.pallas_call(
         functools.partial(_decode_kernel, bs=bs),
@@ -85,8 +112,8 @@ def decode_attention(q, k, v, lengths, *, bs=256, interpret=False):
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, bs, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
-                pl.BlockSpec((1, 1, bs, hd), lambda b, h, ki, *_: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, bs, hd), kv_index),
+                pl.BlockSpec((1, 1, bs, hd), kv_index),
             ],
             out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
             scratch_shapes=[

@@ -201,10 +201,14 @@ def prefill(params, batch, cfg: ModelConfig, *, cache_len: Optional[int] = None,
     return _lm_logits(params, cfg, last), cache
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, active=None):
     """tokens [B] -> (logits [B, V], cache). Cross cache must be filled
-    (prefill, or `encode_to_cache` for encoder-only priming)."""
+    (prefill, or `encode_to_cache` for encoder-only priming).
+
+    ``active`` ([B] bool, optional): slots marked inactive do not advance
+    ``lengths`` (fused multi-step decode termination state)."""
     lengths = cache["lengths"]
+    adv = jnp.int32(1) if active is None else active.astype(jnp.int32)
     x = _embed_tokens(params, cfg, tokens[:, None])[:, 0]
     E = cfg.encoder_seq
     enc_lengths = jnp.full_like(lengths, E)
@@ -233,7 +237,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
     x, (ks, vs) = jax.lax.scan(
         body, x, (params["dec_layers"], cache["k"], cache["v"],
                   cache["xk"], cache["xv"]))
-    cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
+    cache = dict(cache, k=ks, v=vs, lengths=lengths + adv)
     return _lm_logits(params, cfg, x), cache
 
 

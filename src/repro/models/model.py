@@ -7,7 +7,9 @@ functions (safe to ``jax.jit`` / ``pjit``):
 - ``forward(params, batch) -> (logits, aux)``          (train / scoring)
 - ``loss(params, batch, rng=None) -> (scalar, metrics)``
 - ``prefill(params, batch, cache_len=None) -> (last_logits, cache)``
-- ``decode_step(params, cache, tokens) -> (logits, cache)``
+- ``decode_step(params, cache, tokens, active=None) -> (logits, cache)``
+  (``active`` [B] bool is the fused-decode termination state: inactive
+  slots do not advance their cache length)
 - ``init_cache(batch, seq_len) -> cache``
 """
 
@@ -81,8 +83,8 @@ def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
         return mod.prefill(params, batch, cfg, cache_len=cache_len,
                            cache_dtype=cache_dtype)
 
-    def decode_step(params, cache, tokens):
-        return mod.decode_step(params, cache, tokens, cfg)
+    def decode_step(params, cache, tokens, active=None):
+        return mod.decode_step(params, cache, tokens, cfg, active=active)
 
     def init_cache(batch_size, seq_len):
         if is_encdec:

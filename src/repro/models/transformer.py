@@ -527,9 +527,18 @@ def _moe_decode(lp, x_t, cfg):
     return x_t + y[:, 0]
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    """tokens [B] -> (logits [B, V_padded] f32, updated cache)."""
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, active=None):
+    """tokens [B] -> (logits [B, V_padded] f32, updated cache).
+
+    ``active`` (optional [B] bool) is the per-slot termination state used by
+    the fused multi-step decode path: slots marked inactive do not advance
+    ``cache["lengths"]`` (their KV/state writes land at a position that stays
+    past their valid length, i.e. are invisible), so a sequence that hit EOS
+    or its token budget mid-chunk is frozen while the rest of the batch keeps
+    decoding. ``active=None`` keeps the legacy advance-everyone semantics.
+    """
     lengths = cache["lengths"]
+    adv = jnp.int32(1) if active is None else active.astype(jnp.int32)
     x = _embed_tokens(params, cfg, tokens[:, None])[:, 0]
 
     if cfg.family == "ssm":
@@ -547,7 +556,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
             body, x, (params["layers"], cache["wkv"], cache["tm_shift"],
                       cache["cm_shift"]))
         cache = dict(cache, wkv=wkv, tm_shift=tms, cm_shift=cms,
-                     lengths=lengths + 1)
+                     lengths=lengths + adv)
         return _lm_logits(params, cfg, x), cache
 
     if cfg.family == "hybrid":
@@ -590,7 +599,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
             x, (th, tc) = jax.lax.scan(
                 tail_body, x, (params["tail"], cache["tail_h"], cache["tail_conv"]))
             cache = dict(cache, tail_h=th, tail_conv=tc)
-        cache["lengths"] = lengths + 1
+        cache["lengths"] = lengths + adv
         return _lm_logits(params, cfg, x), cache
 
     ring_window = cfg.sliding_window if (
@@ -646,7 +655,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
         (x, kc, vc), _ = jax.lax.scan(
             body, (x, cache["k"], cache["v"]),
             (params["layers"], jnp.arange(cfg.num_layers)))
-        cache = dict(cache, k=kc, v=vc, lengths=lengths + 1)
+        cache = dict(cache, k=kc, v=vc, lengths=lengths + adv)
         return _lm_logits(params, cfg, x), cache
 
     # baseline: cache streamed through xs/ys
@@ -659,5 +668,5 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
 
     x, (kc, vc) = jax.lax.scan(body, x,
                                (params["layers"], cache["k"], cache["v"]))
-    cache = dict(cache, k=kc, v=vc, lengths=lengths + 1)
+    cache = dict(cache, k=kc, v=vc, lengths=lengths + adv)
     return _lm_logits(params, cfg, x), cache

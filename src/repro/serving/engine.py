@@ -10,6 +10,17 @@ All hot functions are jitted once per (bucket) shape:
 - ``_prefill_one``: prompt [1, bucket] -> (last logits, single-slot cache)
 - ``_insert``: copy a single-slot cache into slot ``i`` of the batch cache
 - ``_decode``: one step for all slots (+ sampling), inactive slots masked
+- ``_chunk``: ``lax.scan`` over ``decode_chunk`` fused decode steps with
+  on-device sampling and per-slot termination masks (EOS / token budget /
+  ``max_seq`` capacity) — the scheduler syncs to host once per chunk
+  instead of once per token.
+
+The decode fast path is *sync-free*: the engine keeps the next input token
+per slot on device (``_next_tok``). ``insert_request`` computes the first
+generated token with an on-device argmax and returns it as an unforced
+device scalar, so admitting a request never blocks the host on a
+device->host read — the prefill dispatch overlaps the in-flight decode
+chunk and the scheduler reads tokens at its single per-chunk sync point.
 """
 
 from __future__ import annotations
@@ -17,7 +28,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +61,7 @@ class GenerationEngine:
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, eos_id: Optional[int] = None,
+                 decode_chunk: int = 8,
                  extra_inputs: Optional[Dict[str, Any]] = None):
         self.model = model
         self.params = params
@@ -57,16 +69,30 @@ class GenerationEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
+        # fused decode steps per host sync (compile-stable; per-slot budgets
+        # stop individual sequences mid-chunk). Floored to a power of two
+        # up front: the scheduler's budget alignment only ever uses pow2
+        # lengths, so accepting e.g. 12 verbatim would silently run 8
+        self.decode_chunk = 1 << (max(1, int(decode_chunk)).bit_length() - 1)
         # static per-request extra inputs (e.g. image embeds builder)
         self.extra_inputs = extra_inputs or {}
 
         self._cache = model.init_cache(max_batch, max_seq)
         self._lengths = np.zeros((max_batch,), np.int32)
         self._active = np.zeros((max_batch,), bool)
+        # device-resident next input token per slot (sync-free admission:
+        # insert_request writes it with an on-device argmax, step_chunk
+        # carries it forward — the host never has to know it)
+        self._next_tok = jnp.zeros((max_batch,), jnp.int32)
 
         self._prefill_jit: Dict[int, Any] = {}
         self._decode = jax.jit(self._decode_impl)
+        # one compiled scan per chunk length actually used (lazy, bounded
+        # by decode_chunk): the scheduler aligns chunks to the earliest
+        # completion, so short lengths recur and long ones amortize
+        self._chunk_jit: Dict[int, Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._first_tok = jax.jit(self._first_tok_impl)
 
     # -- jitted internals ---------------------------------------------------
 
@@ -90,20 +116,79 @@ class GenerationEngine:
             return dst
         return jax.tree.map(put, batch_cache, one_cache)
 
-    def _decode_impl(self, params, cache, tokens, rng, temperature, active):
-        """One decode step; ``temperature`` is a per-slot [max_batch]
-        vector so mixed-temperature batches don't interfere — each row
-        samples at its own temperature, rows at 0 take the greedy argmax.
-        The fixed vector shape keeps the step compile-stable."""
-        logits, cache = self.model.decode_step(params, cache, tokens)
+    def _first_tok_impl(self, logits, next_tok, slot):
+        """First generated token from prefill logits (greedy over the
+        logical vocab), written into the device next-token buffer."""
+        masked = mask_padded_vocab(logits[0], self.cfg.vocab_size)
+        first = jnp.argmax(masked).astype(jnp.int32)
+        return first, next_tok.at[slot].set(first)
+
+    def _sample(self, logits, rng, temperature):
+        """Per-slot-temperature sampling: rows at 0 take the greedy argmax."""
         masked = mask_padded_vocab(logits, self.cfg.vocab_size)
         greedy = jnp.argmax(masked, axis=-1).astype(jnp.int32)
         scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
         sampled = jax.random.categorical(rng, scaled, axis=-1) \
             .astype(jnp.int32)
-        nxt = jnp.where(temperature > 0, sampled, greedy)
+        return jnp.where(temperature > 0, sampled, greedy)
+
+    def _decode_impl(self, params, cache, tokens, rng, temperature, active):
+        """One decode step; ``temperature`` is a per-slot [max_batch]
+        vector so mixed-temperature batches don't interfere — each row
+        samples at its own temperature. The fixed vector shape keeps the
+        step compile-stable. ``active`` gates both sampling output and the
+        per-slot cache-length advance (a slot at ``max_seq`` capacity must
+        not write past its cache)."""
+        logits, cache = self.model.decode_step(params, cache, tokens,
+                                               active=active)
+        nxt = self._sample(logits, rng, temperature)
         nxt = jnp.where(active, nxt, 0)
         return nxt, cache
+
+    def _runnable(self, tok, left, lengths, run):
+        """Per-slot continuation mask: a slot keeps decoding while it has
+        token budget, cache capacity for the next KV write, and its input
+        token is not EOS."""
+        run = run & (left > 0) & (lengths < self.max_seq)
+        if self.eos_id is not None:
+            run = run & (tok != self.eos_id)
+        return run
+
+    def _chunk_impl(self, k, params, cache, next_tok, rng, temperature,
+                    budgets, active):
+        """Fused multi-step decode: ``lax.scan`` over ``k`` steps with
+        on-device sampling and termination.
+
+        Per step, slots whose mask is off keep their input token and do not
+        advance their cache length; the step's KV/state writes for them land
+        past their valid length (invisible) and are overwritten on the next
+        insert. Returns (cache, next_tok, tokens [B, K], emitted [B, K])
+        where ``emitted[b]`` is a contiguous prefix mask — once a slot
+        terminates it never resumes within the chunk.
+
+        RNG parity contract (property-tested): step ``i`` uses ``sub_i``
+        from the chain ``rng_i, sub_i = split(rng_{i-1})`` — identical to
+        driving ``decode_chunk`` single ``step()`` calls with the same
+        chain, so fused and stepwise decode are token-identical.
+        """
+        def body(carry, _):
+            cache, tok, rng, run, left = carry
+            rng, sub = jax.random.split(rng)
+            logits, cache = self.model.decode_step(params, cache, tok,
+                                                   active=run)
+            nxt = self._sample(logits, sub, temperature)
+            # dead slots hold their token: keeps the carry stable and the
+            # (batch-coupled, e.g. MoE-capacity) compute deterministic
+            nxt = jnp.where(run, nxt, tok)
+            left = left - run.astype(jnp.int32)
+            run_next = self._runnable(nxt, left, cache["lengths"], run)
+            return (cache, nxt, rng, run_next, left), (nxt, run)
+
+        run0 = self._runnable(next_tok, budgets, cache["lengths"], active)
+        (cache, tok, _, _, _), (toks, emitted) = jax.lax.scan(
+            body, (cache, next_tok, rng, run0, budgets), None, length=k)
+        return (cache, tok,
+                jnp.swapaxes(toks, 0, 1), jnp.swapaxes(emitted, 0, 1))
 
     # -- public API ------------------------------------------------------------
 
@@ -116,9 +201,17 @@ class GenerationEngine:
     def free_slots(self) -> List[int]:
         return [i for i in range(self.max_batch) if not self._active[i]]
 
+    def capacity_left(self, slot: int) -> int:
+        """KV writes remaining before ``slot``'s cache is full. 0 means the
+        slot cannot decode another token (retire with MAX_SEQ_EXCEEDED)."""
+        return int(self.max_seq - self._lengths[slot])
+
     def insert_request(self, prompt: List[int], slot: int,
-                       extra: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
-        """Prefill ``prompt`` and place it into ``slot``. Returns last logits."""
+                       extra: Optional[Dict[str, Any]] = None) -> jax.Array:
+        """Prefill ``prompt`` into ``slot``; returns the first generated
+        token as an *unforced* device scalar (greedy argmax over the prefill
+        logits, computed on device). Callers defer the host read to their
+        next sync point — admission never stalls the decode loop."""
         assert not self._active[slot], f"slot {slot} busy"
         bucket = _bucket(len(prompt))
         if bucket > self.max_seq:
@@ -146,9 +239,11 @@ class GenerationEngine:
         logits, one_cache = self._prefill_jit[bucket](self.params, batch)
         self._cache = self._insert(self._cache, one_cache,
                                    jnp.asarray(slot, jnp.int32))
+        first, self._next_tok = self._first_tok(
+            logits, self._next_tok, jnp.asarray(slot, jnp.int32))
         self._lengths[slot] = true_len
         self._active[slot] = True
-        return logits
+        return first
 
     def release_slot(self, slot: int):
         self._active[slot] = False
@@ -156,15 +251,53 @@ class GenerationEngine:
     def step(self, tokens: np.ndarray, rng, temperature=0.0):
         """One decode step for the whole batch. tokens [max_batch] int32;
         ``temperature`` is a scalar (applied to every slot) or a per-slot
-        [max_batch] vector."""
-        active = jnp.asarray(self._active)
+        [max_batch] vector. Slots whose cache is full (length == max_seq)
+        are masked: they emit 0 and do not advance — lengths never grow
+        past the cache."""
+        active = jnp.asarray(self._active & (self._lengths < self.max_seq))
         temps = np.broadcast_to(np.asarray(temperature, np.float32),
                                 (self.max_batch,))
         nxt, self._cache = self._decode(
             self.params, self._cache, jnp.asarray(tokens, jnp.int32), rng,
             jnp.asarray(temps, F32), active)
-        self._lengths[self._active] += 1
+        self._lengths[self._active & (self._lengths < self.max_seq)] += 1
         return np.asarray(nxt)
+
+    def step_chunk(self, rng, temperature, budgets, k: Optional[int] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """Dispatch one fused chunk of ``k`` (default ``decode_chunk``)
+        decode steps.
+
+        ``budgets`` [max_batch] int32 = tokens each slot may still emit
+        (0 for free slots). Input tokens come from the device-resident
+        ``_next_tok`` buffer (written by ``insert_request`` and the
+        previous chunk), so no host state crosses to the device. Callers
+        (the scheduler) pass ``k = min(decode_chunk, earliest remaining
+        budget)`` so a chunk never runs masked steps past the first
+        completion — short requests sync at per-token cadence, long
+        co-batches amortize the full chunk.
+
+        Returns unforced device arrays ``(tokens [B, k], emitted [B, k])``;
+        the caller reads both in ONE host sync and then calls
+        :meth:`commit_chunk` with the per-slot emission counts.
+        """
+        # k is the caller's explicit choice (the scheduler budget-aligns
+        # it); decode_chunk is only the default
+        k = self.decode_chunk if k is None else max(1, int(k))
+        if k not in self._chunk_jit:
+            self._chunk_jit[k] = jax.jit(partial(self._chunk_impl, k))
+        temps = np.broadcast_to(np.asarray(temperature, np.float32),
+                                (self.max_batch,))
+        self._cache, self._next_tok, toks, emitted = self._chunk_jit[k](
+            self.params, self._cache, self._next_tok, rng,
+            jnp.asarray(temps, F32), jnp.asarray(budgets, jnp.int32),
+            jnp.asarray(self._active))
+        return toks, emitted
+
+    def commit_chunk(self, emitted_counts: np.ndarray):
+        """Fold a chunk's per-slot emission counts into the host-side
+        length mirror (each emitted token wrote exactly one KV/state entry)."""
+        self._lengths += np.asarray(emitted_counts, np.int32)
 
     # -- convenience: synchronous batch generation ------------------------------
 
@@ -179,16 +312,25 @@ class GenerationEngine:
         rng = jax.random.PRNGKey(seed)
         last_tok = np.zeros((self.max_batch,), np.int32)
         outs: List[List[int]] = [[] for _ in prompts]
-        for i, p in enumerate(prompts):
-            logits = self.insert_request(
-                p, i, extra=extras[i] if extras else None)
-            first = int(np.asarray(jnp.argmax(
-                jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
-                          logits[0], -1e9))))
+        firsts = [self.insert_request(p, i,
+                                      extra=extras[i] if extras else None)
+                  for i, p in enumerate(prompts)]
+        for i, f in enumerate(firsts):            # one deferred sync point
+            first = int(f)
             outs[i].append(first)
             last_tok[i] = first
         done = [False] * len(prompts)
+        capped = [False] * len(prompts)
         for step in range(max_new_tokens - 1):
+            # a slot at cache capacity cannot decode another token — stop
+            # rather than collect the masked 0s step() emits for it (the
+            # scheduler path retires the same condition as MAX_SEQ_EXCEEDED;
+            # here the result reports finished=False)
+            for i in range(len(prompts)):
+                if not done[i] and self.capacity_left(i) <= 0:
+                    done[i] = capped[i] = True
+            if all(done):
+                break
             rng, sub = jax.random.split(rng)
             nxt = self.step(last_tok, sub, temperature)
             for i in range(len(prompts)):
@@ -204,9 +346,10 @@ class GenerationEngine:
         dt = time.perf_counter() - t0
         results = []
         for i, p in enumerate(prompts):
+            finished = bool(done[i]) if self.eos_id is not None else True
             results.append(GenerationResult(
                 tokens=outs[i], prompt_len=len(p), steps=len(outs[i]),
-                finished=bool(done[i]) if self.eos_id is not None else True,
+                finished=finished and not capped[i],   # capacity-truncated
                 latency_s=dt))
             self.release_slot(i)
         return results

@@ -33,6 +33,7 @@ every decision is recorded in a :class:`~repro.serving.metrics.MetricsRegistry`.
 from __future__ import annotations
 
 import itertools
+import math
 import threading
 import time
 from collections import deque
@@ -88,15 +89,23 @@ class QoSConfig:
     max_queue: int = 64                 # per priority class
     class_weights: Mapping[str, int] = field(
         default_factory=lambda: dict(DEFAULT_CLASS_WEIGHTS))
-    rate: Optional[float] = None        # requests/s per client; None = off
+    rate: Optional[float] = None        # cost units/s per client; None = off
     burst: Optional[float] = None       # bucket size; default max(rate, 1)
     default_priority: str = "batch"
     quantum: float = 1.0                # DRR quantum (cost units per visit)
     policy: str = "drr"                 # "drr" | "fifo" (fifo = legacy order)
+    # what one cost unit means: "request" charges a flat 1 per request,
+    # "token" charges max_new_tokens — long generations drain the bucket
+    # (and earn DRR deficit) proportionally to the decode work they buy,
+    # so they are priced honestly instead of riding a flat tariff
+    rate_unit: str = "request"          # "request" | "token"
 
     def __post_init__(self):
         if self.policy not in ("drr", "fifo"):
             raise ValueError(f"unknown qos policy {self.policy!r}")
+        if self.rate_unit not in ("request", "token"):
+            raise ValueError(f"unknown rate_unit {self.rate_unit!r} "
+                             "(expected 'request' or 'token')")
         if self.default_priority not in self.class_weights:
             raise ValueError(
                 f"default_priority {self.default_priority!r} not in "
@@ -111,6 +120,23 @@ class QoSConfig:
             raise ValueError("quantum must be positive")
         if self.rate is not None and self.rate <= 0:
             raise ValueError("rate must be positive (or null to disable)")
+
+    #: token budget charged for a generation request that omits
+    #: max_new_tokens — matches the generation wrappers' default
+    #: (core/assets.py), or a client could dodge token pricing by
+    #: leaving the field out
+    DEFAULT_TOKEN_BUDGET = 16
+
+    def request_cost(self, max_new_tokens: Optional[int] = None) -> float:
+        """Admission cost of one request under this config: a flat 1, or
+        its token budget when ``rate_unit == "token"``. The single source
+        of truth for both service kinds and the scheduler — they must not
+        price the same request differently."""
+        if self.rate_unit != "token":
+            return 1.0
+        n = self.DEFAULT_TOKEN_BUDGET if max_new_tokens is None \
+            else max_new_tokens
+        return float(max(1, int(n)))
 
     @property
     def classes(self) -> List[str]:
@@ -128,7 +154,7 @@ class QoSConfig:
         if not isinstance(d, Mapping):
             raise ValueError("qos config must be a JSON object")
         allowed = {"max_queue", "class_weights", "rate", "burst",
-                   "default_priority", "quantum", "policy"}
+                   "default_priority", "quantum", "policy", "rate_unit"}
         unknown = set(d) - allowed
         if unknown:
             raise ValueError(f"unknown qos config keys {sorted(unknown)} "
@@ -228,8 +254,9 @@ class AdmissionController:
                 self.rate_limited_total += 1
             self.metrics.inc("max_requests_total", 1,
                              outcome="rate_limited", **self._labels(priority))
+            unit = "token" if self.cfg.rate_unit == "token" else "req"
             raise RateLimited(
-                f"client {client!r} exceeded {self.cfg.rate:g} req/s "
+                f"client {client!r} exceeded {self.cfg.rate:g} {unit}/s "
                 f"(burst {bucket.burst:g}); retry later")
 
     def submit(self, item: Any, *, priority: Optional[str] = None,
@@ -326,7 +353,22 @@ class AdmissionController:
         if self.cfg.policy == "fifo":
             client = min(by_client, key=lambda c: by_client[c][0].seq)
         else:
-            while True:
+            # arithmetic fast-forward: with token-unit costs a head request
+            # may need thousands of quanta — credit the whole rounds every
+            # client would accrue in one pass instead of spinning
+            # O(cost/quantum) visits under the admission lock. Identical to
+            # running the visit loop that many full rotations.
+            rounds = min(
+                max(1.0, math.ceil(
+                    (by_client[c][0].cost
+                     - self._deficit.get((cls, c), 0.0)) / self.cfg.quantum))
+                for c in rot)
+            if rounds > 1:
+                for c in rot:
+                    key = (cls, c)
+                    self._deficit[key] = self._deficit.get(key, 0.0) \
+                        + (rounds - 1) * self.cfg.quantum
+            while True:                 # terminates within one rotation now
                 client = rot[0]
                 key = (cls, client)
                 self._deficit[key] = self._deficit.get(key, 0.0) \
@@ -397,5 +439,6 @@ class AdmissionController:
                 "rate_limited": self.rate_limited_total,
                 "queue_full": self.queue_full_total,
                 "rate": self.cfg.rate,
+                "rate_unit": self.cfg.rate_unit,
                 "max_queue_per_class": self.cfg.max_queue,
             }

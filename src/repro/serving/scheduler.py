@@ -1,17 +1,28 @@
 """Continuous batching scheduler.
 
 Drives a :class:`GenerationEngine`'s slot API: admits queued requests into
-free decode slots as soon as they open (prefill-on-admit), runs one batched
-decode step per tick for all active slots, retires finished requests and
+free decode slots as soon as they open (prefill-on-admit), runs one fused
+decode *chunk* (up to ``decode_chunk`` tokens per slot, compiled as one
+``lax.scan`` with on-device sampling and termination masks) per tick for
+all active slots, retires finished requests on chunk boundaries and
 immediately backfills. This is the serving loop a TPU pod actually needs —
 the paper's per-request ``model.predict()`` generalised to batched,
-compiled execution.
+compiled execution, with ONE host<->device sync per chunk instead of one
+per token (the dispatch-bound regime continuous-batching systems target).
+
+Admission is *non-blocking*: placing a request dispatches its prefill and
+an on-device argmax for the first token, but the host read of that token
+is deferred to the tick's single sync point — admitting a request overlaps
+the in-flight decode work instead of stalling every active slot.
 
 Admission order is pluggable: by default a FIFO deque (arrival order), or a
 :class:`~repro.serving.qos.AdmissionController` — priority classes,
 per-client fairness, and deadline shedding — when one is passed. Shed
 requests retire with ``error_code='DEADLINE_EXCEEDED'`` without ever
-touching an engine slot.
+touching an engine slot. With ``rate_unit="token"`` in the QoS config,
+admission cost is charged as ``max_new_tokens`` instead of a flat 1 —
+long generations are priced honestly by the token buckets and the DRR
+fairness quantum alike.
 
 Invariants (property-tested):
 - a slot is never double-occupied;
@@ -19,7 +30,12 @@ Invariants (property-tested):
   non-empty priority class is served within one weighted round, and order
   *within* a (class, client) pair stays FIFO;
 - every admitted request retires with <= max_new_tokens generated;
-- throughput accounting: sum of emitted tokens == sum over requests.
+- fused K-step decode is token-identical to K single steps;
+- a slot whose cache fills retires cleanly with ``MAX_SEQ_EXCEEDED``
+  instead of writing past ``max_seq``;
+- throughput accounting: sum of emitted tokens == sum over requests, and
+  ``wall_s`` accrues per tick so ``tokens_per_s`` is real whichever loop
+  drives ``tick()``.
 
 Thread-safety: ``submit``/``poll``/``tick`` take an internal lock so HTTP
 threads can enqueue while a single worker thread drives ``tick`` (the model
@@ -34,7 +50,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -68,12 +84,14 @@ class Request:
 @dataclass
 class SchedulerStats:
     ticks: int = 0
-    decode_steps: int = 0
+    decode_steps: int = 0             # engine decode steps (chunk = K steps)
+    chunks: int = 0                   # fused chunk dispatches (sync points)
     prefills: int = 0
     emitted_tokens: int = 0
     completed: int = 0
     shed: int = 0                     # deadline-expired, never ran
-    wall_s: float = 0.0
+    cache_overflows: int = 0          # retired with MAX_SEQ_EXCEEDED
+    wall_s: float = 0.0               # accrued per tick (run() adds nothing)
     occupancy_sum: int = 0            # sum of active-batch sizes per decode
     max_occupancy: int = 0
 
@@ -89,15 +107,24 @@ class SchedulerStats:
 
 class ContinuousBatchingScheduler:
     def __init__(self, engine: GenerationEngine, *, seed: int = 0,
-                 retain_completed: int = 1024, admission=None):
+                 retain_completed: int = 1024, admission=None,
+                 decode_chunk: Optional[int] = None):
         self.engine = engine
+        # scheduler-local override: two schedulers sharing an engine (e.g.
+        # a warm-up one) must not reconfigure each other through it.
+        # Floored to a power of two like the engine default — the reported
+        # decode_chunk must be the one that actually runs
+        self._decode_chunk = 1 << (max(1, int(decode_chunk)).bit_length() - 1) \
+            if decode_chunk is not None else None
         self.admission = admission        # Optional[AdmissionController]
         self.queue: deque[Request] = deque()      # FIFO path (admission=None)
         self.active: Dict[int, Request] = {}      # slot -> request
-        self._last_tok = np.zeros((engine.max_batch,), np.int32)
         # per-slot temperature: mixed-temperature batches must not
         # interfere (fixed [max_batch] shape keeps the decode compile-stable)
         self._temps = np.zeros((engine.max_batch,), np.float32)
+        # requests placed this tick whose on-device first token has not
+        # been read yet (resolved at the tick's sync point)
+        self._pending_first: List[Tuple[Request, jax.Array]] = []
         self._rng = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
         self._lock = threading.RLock()
@@ -107,6 +134,11 @@ class ContinuousBatchingScheduler:
         self.retain_completed = retain_completed
         self._completed: Dict[int, Request] = {}
         self.stats = SchedulerStats()
+
+    @property
+    def decode_chunk(self) -> int:
+        return self._decode_chunk if self._decode_chunk is not None \
+            else self.engine.decode_chunk
 
     def submit(self, prompt: List[int], *, max_new_tokens: int = 32,
                temperature: float = 0.0,
@@ -120,7 +152,7 @@ class ContinuousBatchingScheduler:
         must never reach the decode loop.
 
         Deliberately does NOT take the scheduler lock: ``tick`` holds it
-        across a whole engine decode step, and request threads must not
+        across a whole engine decode chunk, and request threads must not
         queue behind JAX compute just to enqueue. The id counter is an
         atomic ``itertools.count``; the controller and the FIFO deque have
         their own synchronization."""
@@ -129,6 +161,7 @@ class ContinuousBatchingScheduler:
         if self.admission is not None:
             ticket = self.admission.submit(
                 req, priority=priority, client=client,
+                cost=self.admission.cfg.request_cost(max_new_tokens),
                 deadline_s=deadline_s)
             req.priority, req.client = ticket.priority, ticket.client
         else:
@@ -169,19 +202,15 @@ class ContinuousBatchingScheduler:
         self.stats.shed += 1
 
     def _place(self, req: Request, slot: int):
-        logits = self.engine.insert_request(req.prompt, slot,
-                                            extra=req.extra)
-        first = int(np.asarray(logits[0, :self.engine.cfg.vocab_size]
-                               ).argmax())
+        """Dispatch prefill + on-device first token; no host sync here —
+        the first token is read with the chunk at the tick's sync point."""
+        first = self.engine.insert_request(req.prompt, slot, extra=req.extra)
         req.slot = slot
         req.admitted_at_tick = self.stats.ticks
-        req.output.append(first)
-        self._last_tok[slot] = first
         self._temps[slot] = req.temperature
         self.active[slot] = req
+        self._pending_first.append((req, first))
         self.stats.prefills += 1
-        self.stats.emitted_tokens += 1
-        self._maybe_finish(req)
 
     def _admit(self):
         free = self.engine.free_slots()
@@ -204,41 +233,97 @@ class ContinuousBatchingScheduler:
         eos = self.engine.eos_id
         if (len(req.output) >= req.max_new_tokens
                 or (eos is not None and req.output and req.output[-1] == eos)):
-            self.engine.release_slot(req.slot)
-            del self.active[req.slot]
-            self._retire(req)
+            self._release(req)
             self.stats.completed += 1
 
+    def _release(self, req: Request):
+        self.engine.release_slot(req.slot)
+        del self.active[req.slot]
+        self._retire(req)
+
+    def _overflow(self, req: Request):
+        """Cache full before the request finished: retire cleanly instead
+        of writing past ``max_seq`` (the engine's termination mask already
+        froze the slot on device)."""
+        req.error = (f"sequence reached max_seq {self.engine.max_seq} after "
+                     f"{len(req.output)} generated tokens "
+                     f"(requested {req.max_new_tokens})")
+        req.error_code = "MAX_SEQ_EXCEEDED"
+        self._release(req)
+        # counted as completed (it ran and retired — the service layer
+        # counts it too, keeping the two 'completed' totals reconciled;
+        # only shed work is excluded on both sides) plus the specific
+        # overflow counter
+        self.stats.completed += 1
+        self.stats.cache_overflows += 1
+
+    def _resolve_pending_first(self):
+        """The deferred host reads for this tick's admissions (the decode
+        chunk for previously-active slots is already in flight)."""
+        for req, first in self._pending_first:
+            req.output.append(int(first))
+            self.stats.emitted_tokens += 1
+        self._pending_first.clear()
+
     def tick(self):
-        """One scheduler iteration: admit -> decode -> retire."""
+        """One scheduler iteration: admit -> decode chunk -> retire.
+
+        Exactly one host sync per tick (reading the chunk's token block),
+        however many tokens the chunk produced."""
+        t0 = time.perf_counter()
         with self._lock:
             self._admit()
-            if not self.active:
-                self.stats.ticks += 1
-                return
-            self._rng, sub = jax.random.split(self._rng)
-            self.stats.occupancy_sum += len(self.active)
-            self.stats.max_occupancy = max(self.stats.max_occupancy,
-                                           len(self.active))
-            # per-slot temperature vector: each request samples at its own
-            # temperature (greedy where 0); inactive slots are masked by
-            # the engine
-            nxt = self.engine.step(self._last_tok, sub, self._temps)
-            self.stats.decode_steps += 1
-            for slot, req in list(self.active.items()):
-                tok = int(nxt[slot])
-                req.output.append(tok)
-                self._last_tok[slot] = tok
-                self.stats.emitted_tokens += 1
-                self._maybe_finish(req)
+            toks = emitted = None
+            if self.active:
+                budgets = np.zeros((self.engine.max_batch,), np.int32)
+                pending = {id(r) for r, _ in self._pending_first}
+                for slot, req in self.active.items():
+                    have = len(req.output) + (1 if id(req) in pending else 0)
+                    budgets[slot] = max(0, req.max_new_tokens - have)
+                # budget-aligned chunk: never decode past the earliest
+                # completion, so a finishing request's result is visible at
+                # the very next sync instead of idling masked behind
+                # longer co-tenants (interactive latency == stepwise while
+                # long batches still amortize the full chunk). Rounded down
+                # to a power of two so the engine compiles a bounded set of
+                # scan programs ({1,2,4,8,...}) — a solo request's budget
+                # decomposes binarily, warming every size it will ever use.
+                k = min(self.decode_chunk,
+                        max(1, min(int(budgets[s]) for s in self.active)))
+                k = 1 << (k.bit_length() - 1)
+                self._rng, sub = jax.random.split(self._rng)
+                toks, emitted = self.engine.step_chunk(
+                    sub, self._temps, budgets, k)
+            # single sync point: first tokens of fresh admissions, then the
+            # chunk block (np.asarray forces both)
+            self._resolve_pending_first()
+            if toks is not None:
+                toks = np.asarray(toks)
+                emitted = np.asarray(emitted)
+                counts = emitted.sum(axis=1).astype(np.int32)
+                self.engine.commit_chunk(counts)
+                per_step = emitted.sum(axis=0)
+                self.stats.chunks += 1
+                self.stats.decode_steps += int((per_step > 0).sum())
+                self.stats.occupancy_sum += int(per_step.sum())
+                self.stats.max_occupancy = max(self.stats.max_occupancy,
+                                               int(per_step.max(initial=0)))
+                for slot, req in list(self.active.items()):
+                    n = int(counts[slot])
+                    req.output.extend(int(t) for t in toks[slot, :n])
+                    self.stats.emitted_tokens += n
+                    self._maybe_finish(req)
+                    if not req.done and self.engine.capacity_left(slot) <= 0:
+                        self._overflow(req)
             self.stats.ticks += 1
+            self.stats.wall_s += time.perf_counter() - t0
 
     def run(self, *, max_ticks: int = 10_000) -> SchedulerStats:
-        """Run until queue + active drain (or tick budget)."""
-        t0 = time.perf_counter()
+        """Run until queue + active drain (or tick budget). ``wall_s`` is
+        accrued inside ``tick`` so ``tokens_per_s`` stays meaningful for
+        external drivers (``BatchedService``) too."""
         for _ in range(max_ticks):
             if not self.has_work():
                 break
             self.tick()
-        self.stats.wall_s = time.perf_counter() - t0
         return self.stats

@@ -1,0 +1,325 @@
+"""Decode fast path: fused multi-step decode, length-aware decode
+attention, cache-overflow guard, and token-cost admission.
+
+The core property: the fused K-step chunk (``engine.step_chunk``) is
+token-identical to K single ``engine.step`` calls driven with the same
+RNG chain — greedy and fixed-seed sampled, mixed temperatures, mid-chunk
+termination (EOS / budget) included. Plus Pallas decode-attention parity
+vs the jnp oracle across lengths straddling block boundaries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CONFIGS
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as pallas_decode
+from repro.models import build_model
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine
+from repro.serving.qos import AdmissionController, QoSConfig, RateLimited
+
+BS = 8          # small kernel block so tests straddle boundaries cheaply
+
+
+# ---------------------------------------------------------------------------
+# length-aware Pallas decode attention vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lens", [
+    (1, BS - 1, BS),              # inside / at the first block boundary
+    (BS + 1, 2 * BS, 2 * BS + 1),  # straddling the second
+    (63, 64, 1),                  # full cache next to a near-empty one
+    (5, 32, 40),
+])
+def test_decode_attention_length_parity(lens, nprng):
+    B, H, KV, hd, S = len(lens), 4, 2, 16, 64
+    q = jnp.asarray(nprng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(nprng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(nprng.normal(size=(B, S, KV, hd)), jnp.float32)
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = pallas_decode(q, k, v, lengths, bs=BS, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_skipped_blocks_exact(nprng):
+    """Skipping trailing blocks must be *exact*: garbage in cache slots
+    past the length must not perturb the output at all."""
+    B, H, KV, hd, S = 2, 2, 1, 16, 64
+    q = jnp.asarray(nprng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(nprng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(nprng.normal(size=(B, S, KV, hd)), jnp.float32)
+    lengths = jnp.asarray([BS, 3 * BS], jnp.int32)
+    base = pallas_decode(q, k, v, lengths, bs=BS, interpret=True)
+    # poison everything past each length with huge values
+    mask = (jnp.arange(S)[None, :, None, None]
+            >= lengths[:, None, None, None])
+    k2 = jnp.where(mask, 1e9, k)
+    v2 = jnp.where(mask, -1e9, v)
+    out = pallas_decode(q, k2, v2, lengths, bs=BS, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
+# fused K-step decode == K single steps
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sentiment():
+    cfg = CONFIGS["max-sentiment"]
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _fresh_engine(sentiment, *, K, eos_id=None, max_seq=64, max_batch=2):
+    model, params = sentiment
+    return GenerationEngine(model, params, max_batch=max_batch,
+                            max_seq=max_seq, eos_id=eos_id, decode_chunk=K)
+
+
+def _run_fused(eng, prompts, rng, temps, budgets, k=None):
+    firsts = [int(eng.insert_request(p, i)) for i, p in enumerate(prompts)]
+    # explicit k: engine decode_chunk is floored to a power of two, but
+    # the parity property quantifies over arbitrary chunk lengths
+    toks, emitted = eng.step_chunk(rng, temps, budgets, k)
+    toks, emitted = np.asarray(toks), np.asarray(emitted)
+    return firsts, [
+        [int(t) for t in toks[b, :emitted[b].sum()]]
+        for b in range(len(prompts))]
+
+
+def _run_stepwise(eng, prompts, rng, temps, budgets, K):
+    """K single engine.step calls with the chunk's RNG chain, applying the
+    same termination rules on the host."""
+    firsts = [int(eng.insert_request(p, i)) for i, p in enumerate(prompts)]
+    last = np.zeros((eng.max_batch,), np.int32)
+    last[:len(prompts)] = firsts
+    left = np.asarray(budgets, np.int64).copy()
+    run = np.zeros((eng.max_batch,), bool)
+    for b, f in enumerate(firsts):
+        run[b] = left[b] > 0 and (eng.eos_id is None or f != eng.eos_id)
+    outs = [[] for _ in prompts]
+    for _ in range(K):
+        rng, sub = jax.random.split(rng)
+        nxt = eng.step(last, sub, temps)
+        for b in range(len(prompts)):
+            if not run[b]:
+                continue
+            tok = int(nxt[b])
+            outs[b].append(tok)
+            last[b] = tok
+            left[b] -= 1
+            if left[b] <= 0 or (eng.eos_id is not None and tok == eng.eos_id):
+                run[b] = False
+                eng.release_slot(b)
+    return firsts, outs
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       k=st.integers(1, 6),
+       t1=st.sampled_from([0.0, 0.7, 1.3]),
+       b1=st.integers(1, 6))
+def test_fused_chunk_matches_single_steps(sentiment, seed, k, t1, b1):
+    """Greedy + fixed-seed sampled, mixed temperatures, mid-chunk budget
+    stop: the fused scan must emit exactly the single-step tokens."""
+    prompts = [[1, 2, 3], [9]]
+    temps = np.asarray([0.0, t1], np.float32)       # slot 0 always greedy
+    budgets = np.asarray([k, b1], np.int32)
+    rng = jax.random.PRNGKey(seed)
+    ef = _fresh_engine(sentiment, K=k)
+    f_firsts, fused = _run_fused(ef, prompts, rng, temps, budgets, k)
+    es = _fresh_engine(sentiment, K=k)
+    s_firsts, stepwise = _run_stepwise(es, prompts, rng, temps, budgets, k)
+    assert f_firsts == s_firsts
+    assert fused == stepwise
+    assert len(fused[1]) == min(k, b1)              # budget honoured
+
+
+def test_fused_chunk_stops_on_eos(sentiment):
+    """Mid-chunk EOS freezes the slot: no tokens after the EOS emission."""
+    K = 8
+    temps = np.asarray([1.0, 0.0], np.float32)     # sampled: varied stream
+    probe = _fresh_engine(sentiment, K=K, eos_id=None)
+    firsts, stream = _run_fused(probe, [[1, 2, 3]], jax.random.PRNGKey(3),
+                                temps, np.asarray([K, 0], np.int32))
+    # pick an eos that first appears mid-chunk (not the prefill token)
+    eos = next(t for t in stream[0][1:-1] if t != firsts[0])
+    stop = stream[0].index(eos) + 1
+    assert 1 <= stop < K                   # genuinely mid-chunk
+    eng = _fresh_engine(sentiment, K=K, eos_id=eos)
+    _, out = _run_fused(eng, [[1, 2, 3]], jax.random.PRNGKey(3),
+                        temps, np.asarray([K, 0], np.int32))
+    assert out[0] == stream[0][:stop]      # ends WITH the eos token
+    assert out[0][-1] == eos
+
+
+def test_scheduler_output_invariant_under_chunk_size(sentiment):
+    """Greedy generations are identical whatever the chunk size — chunking
+    changes sync cadence, never tokens."""
+    def run(K):
+        eng = _fresh_engine(sentiment, K=K, max_batch=2)
+        sched = ContinuousBatchingScheduler(eng)
+        reqs = [sched.submit([1 + i], max_new_tokens=5 + (i % 3))
+                for i in range(6)]
+        stats = sched.run()
+        assert stats.completed == 6
+        return [r.output for r in reqs]
+
+    outs1, outs8 = run(1), run(8)
+    assert outs1 == outs8
+
+
+def test_chunked_scheduler_accounting(sentiment):
+    eng = _fresh_engine(sentiment, K=4, max_batch=2)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit([1 + i], max_new_tokens=6) for i in range(5)]
+    stats = sched.run()
+    assert stats.completed == 5
+    assert all(len(r.output) == 6 for r in reqs)
+    assert stats.emitted_tokens == sum(len(r.output) for r in reqs)
+    # chunked: host syncs (chunks) far fewer than tokens emitted
+    assert stats.chunks < stats.emitted_tokens
+    assert stats.decode_steps <= stats.chunks * eng.decode_chunk
+    # wall time accrues per tick -> tokens_per_s is real without run()
+    assert stats.wall_s > 0
+    assert stats.tokens_per_s > 0
+
+
+def test_wall_time_accrues_under_external_tick(sentiment):
+    """BatchedService drives tick() directly — stats must not need run()."""
+    eng = _fresh_engine(sentiment, K=2, max_batch=2)
+    sched = ContinuousBatchingScheduler(eng)
+    sched.submit([1], max_new_tokens=4)
+    while sched.has_work():
+        sched.tick()
+    assert sched.stats.wall_s > 0
+    assert sched.stats.tokens_per_s > 0
+
+
+# ---------------------------------------------------------------------------
+# cache-overflow guard
+# ---------------------------------------------------------------------------
+
+def test_max_seq_exceeded_retires_cleanly(sentiment):
+    eng = _fresh_engine(sentiment, K=4, max_seq=16, max_batch=2)
+    sched = ContinuousBatchingScheduler(eng)
+    req = sched.submit(list(range(1, 11)), max_new_tokens=20)
+    ok = sched.submit([1, 2], max_new_tokens=3)
+    stats = sched.run()
+    assert req.error_code == "MAX_SEQ_EXCEEDED"
+    assert req.done and "max_seq" in req.error
+    # prompt len 10 -> 6 KV writes of capacity, +1 prefill token = 7 out
+    assert len(req.output) == 7
+    assert stats.cache_overflows == 1
+    # engine lengths never passed the cache and the slot was freed
+    assert int(eng._lengths.max()) <= 16
+    assert not eng._active.any()
+    # co-batched + subsequent work unaffected
+    assert ok.done and ok.error_code is None and len(ok.output) == 3
+    again = sched.submit([5], max_new_tokens=2)
+    sched.run()
+    assert again.done and again.error_code is None
+
+
+def test_generate_stops_at_capacity(sentiment):
+    """The convenience path must stop at max_seq, not pad with masked 0s."""
+    eng = _fresh_engine(sentiment, K=1, max_seq=16, max_batch=1)
+    res = eng.generate([list(range(1, 13))], max_new_tokens=20)[0]
+    # 12-token prompt -> 4 KV writes of capacity: 1 prefill token + 4 more
+    assert len(res.tokens) == 5
+    assert res.finished is False           # truncated, not naturally done
+
+
+def test_scheduler_chunk_override_is_local(sentiment):
+    """A scheduler's decode_chunk override must not leak into the shared
+    engine (warm-up schedulers would reconfigure the serving one)."""
+    model, params = sentiment
+    eng = GenerationEngine(model, params, max_batch=2, max_seq=64,
+                           decode_chunk=8)
+    s1 = ContinuousBatchingScheduler(eng, decode_chunk=2)
+    assert s1.decode_chunk == 2
+    assert eng.decode_chunk == 8
+    assert ContinuousBatchingScheduler(eng).decode_chunk == 8
+
+
+def test_engine_step_never_advances_past_max_seq(sentiment):
+    """The raw per-token path is guarded too (the pre-fastpath bug:
+    step() incremented _lengths unbounded)."""
+    eng = _fresh_engine(sentiment, K=1, max_seq=16, max_batch=2)
+    eng.insert_request(list(range(1, 16)), 0)      # bucket 16 = max_seq
+    rng = jax.random.PRNGKey(0)
+    for _ in range(5):
+        rng, sub = jax.random.split(rng)
+        eng.step(np.zeros(2, np.int32), sub)
+    assert int(eng._lengths[0]) == 16              # 15-token prompt + 1 write
+
+
+# ---------------------------------------------------------------------------
+# token-cost rate limiting
+# ---------------------------------------------------------------------------
+
+def _clock():
+    t = [0.0]
+    def now():
+        return t[0]
+    now.advance = lambda dt: t.__setitem__(0, t[0] + dt)
+    return now
+
+
+def test_token_cost_rate_limit_charges_budget():
+    clock = _clock()
+    ctl = AdmissionController(
+        QoSConfig(rate=10.0, burst=16.0, rate_unit="token"), clock=clock)
+    # a 16-token generation drains the whole burst …
+    ctl.submit(object(), client="c", cost=16.0)
+    with pytest.raises(RateLimited):
+        ctl.try_acquire("c", cost=1.0)
+    # … and refills at `rate` cost-units/s
+    clock.advance(1.0)
+    ctl.try_acquire("c", cost=10.0)
+
+
+def test_scheduler_charges_tokens_when_configured(sentiment):
+    eng = _fresh_engine(sentiment, K=2)
+    ctl = AdmissionController(
+        QoSConfig(rate=100.0, burst=32.0, rate_unit="token"))
+    sched = ContinuousBatchingScheduler(eng, admission=ctl)
+    sched.submit([1], max_new_tokens=30)           # 30 of 32 units
+    with pytest.raises(RateLimited):
+        sched.submit([2], max_new_tokens=8)        # 8 > 2 left
+    sched.submit([3], max_new_tokens=2)            # exactly fits
+    stats = sched.run()
+    assert stats.completed == 2
+    # default unit stays flat: same budgets, no limit hit
+    eng2 = _fresh_engine(sentiment, K=2)
+    ctl2 = AdmissionController(QoSConfig(rate=100.0, burst=32.0))
+    sched2 = ContinuousBatchingScheduler(eng2, admission=ctl2)
+    for i in range(4):
+        sched2.submit([1 + i], max_new_tokens=30)
+    assert sched2.run().completed == 4
+
+
+def test_rate_unit_validation():
+    with pytest.raises(ValueError):
+        QoSConfig(rate_unit="characters")
+    assert QoSConfig.from_json({"rate_unit": "token"}).rate_unit == "token"
+    assert "rate_unit" in AdmissionController(QoSConfig()).stats()
+
+
+# ---------------------------------------------------------------------------
+# non-blocking admission
+# ---------------------------------------------------------------------------
+
+def test_insert_returns_unforced_device_scalar(sentiment):
+    """Admission hands back a device value (deferred read), and it equals
+    the greedy argmax the old sync path computed."""
+    eng = _fresh_engine(sentiment, K=2)
+    first = eng.insert_request([1, 2, 3], 0)
+    assert isinstance(first, jax.Array) and first.shape == ()
+    eng.release_slot(0)
+    want = eng.generate([[1, 2, 3]], max_new_tokens=1)[0].tokens[0]
+    assert int(first) == want
