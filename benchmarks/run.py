@@ -27,6 +27,11 @@ architectural. Each benchmark below pins one of them to a number:
                           into BENCH_serving.json; part of `--quick`,
                           fails when fused loses its >=1.2x edge over
                           per-token sync)
+  streaming               SSE streaming TTFT vs full-completion latency
+                          for a 64-token generation — the first `token`
+                          event must land in < 0.5x the non-streaming
+                          predict time (also into BENCH_serving.json;
+                          part of `--quick`)
   kernel_<name>           Pallas kernel (interpret) vs jnp oracle allclose +
                           oracle timing (CPU container: correctness-scale)
   roofline_terms          derived from the dry-run records (see
@@ -56,6 +61,21 @@ def _time(fn, n=20, warmup=3):
     for _ in range(n):
         fn()
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def _merge_bench(out_path: str, update: dict):
+    """Merge ``update`` into the shared report file — each bench owns its
+    keys, siblings written by other benches survive."""
+    report = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                report = json.load(f)
+        except Exception:
+            report = {}
+    report.update(update)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
 
 
 def bench_wrapper_overhead():
@@ -219,16 +239,7 @@ def bench_serving_http(out_path: str = "BENCH_serving.json"):
     bat_rps = report["modes"]["batched"]["requests_per_s"]
     report["speedup_x"] = round(bat_rps / max(sync_rps, 1e-9), 2)
     # merge: other benches (qos_overload, decode_fastpath) own sibling keys
-    merged = {}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                merged = _json.load(f)
-        except Exception:
-            merged = {}
-    merged.update(report)
-    with open(out_path, "w") as f:
-        _json.dump(merged, f, indent=1)
+    _merge_bench(out_path, report)
     row("serving_http_speedup", 0.0,
         f"batched/sync={report['speedup_x']}x -> {out_path}")
 
@@ -240,7 +251,6 @@ def bench_qos_overload(out_path: str = "BENCH_serving.json",
     the deficit-weighted-priority controller must beat plain FIFO
     admission. Returns True when it does (the ``--quick`` gate also
     accepts qos_p95 within 2x of the uncontended baseline)."""
-    import json as _json
     import threading
 
     import repro.core.assets  # noqa: F401 — populate the exchange
@@ -314,16 +324,7 @@ def bench_qos_overload(out_path: str = "BENCH_serving.json",
     scenario_out["speedup_x"] = round(fifo_p95 / max(qos_p95, 1e-9), 2)
     ok = qos_p95 < fifo_p95 or qos_p95 <= 2 * scenario_out["solo_p95_ms"]
     # merge into the serving report so trend lines keep one file
-    report = {}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                report = _json.load(f)
-        except Exception:
-            report = {}
-    report["qos_overload"] = scenario_out
-    with open(out_path, "w") as f:
-        _json.dump(report, f, indent=1)
+    _merge_bench(out_path, {"qos_overload": scenario_out})
     row("qos_overload_speedup", 0.0,
         f"fifo/qos={scenario_out['speedup_x']}x "
         f"solo_p95={scenario_out['solo_p95_ms']}ms -> {out_path}")
@@ -346,7 +347,6 @@ def bench_decode_fastpath(out_path: str = "BENCH_serving.json",
     gate machine-independent — a slower container shifts both numbers, but
     the fused path regressing toward per-token cost still fails.
     """
-    import json as _json
 
     import jax
 
@@ -402,24 +402,81 @@ def bench_decode_fastpath(out_path: str = "BENCH_serving.json",
     # quick mode runs a lighter load, so it records its own entry — its
     # tokens/s are not comparable to the full run's
     key = "decode_fastpath_quick" if quick else "decode_fastpath"
-    report = {}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                report = _json.load(f)
-        except Exception:
-            report = {}
     # within-run ratio gate: machine-independent (absolute tok/s would
     # fail on any container slower than the one that wrote the file)
     ok = fused_best >= 1.2 * step_best
-    report[key] = entry
-    with open(out_path, "w") as f:
-        _json.dump(report, f, indent=1)
+    _merge_bench(out_path, {key: entry})
     row("decode_fastpath_stepwise", 1e6 / max(step_best, 1e-9),
         f"tok/s={entry['stepwise_tok_s']}")
     row("decode_fastpath_fused", 1e6 / max(fused_best, 1e-9),
         f"tok/s={entry['fused_tok_s']} speedup_x={entry['speedup_x']} "
         f"-> {out_path}")
+    return ok
+
+
+def bench_streaming(out_path: str = "BENCH_serving.json",
+                    quick: bool = False) -> bool:
+    """The streaming acceptance scenario: for a long (64-token) generation,
+    the SSE stream's first ``token`` event must arrive well before the
+    full completion — streamed TTFT < 0.5x the non-streaming latency
+    (best-of-N on both sides; the ratio keeps the gate machine-independent).
+    Also records the streamed total so the overhead of the event bridge is
+    visible next to the plain predict path."""
+
+    import repro.core.assets  # noqa: F401 — populate the exchange
+    from repro.core import BatchedService, EXCHANGE
+
+    new_toks = 64
+    inp = {"text": "stream benchmark", "max_new_tokens": new_toks}
+    svc = BatchedService(EXCHANGE.get("qwen3-4b").build(max_seq=256,
+                                                        max_batch=2),
+                         batch_window_s=0.0)
+    trials = 2 if quick else 3
+    try:
+        # one full-budget call compiles prefill + every chunk program the
+        # 64-token budget decomposes into
+        warm = svc.predict(inp)
+        assert warm["status"] == "ok", warm
+
+        full_best = streamed_best = ttft_best = None
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            env = svc.predict(inp)
+            full = time.perf_counter() - t0
+            assert env["status"] == "ok", env
+            full_best = min(full, full_best or full)
+
+            t0 = time.perf_counter()
+            ttft = total = None
+            for ev in svc.predict_stream(inp):
+                if ev.event == "token" and ttft is None:
+                    ttft = time.perf_counter() - t0
+                elif ev.event == "done":
+                    total = time.perf_counter() - t0
+                    assert (ev.data["usage"]["completion_tokens"]
+                            == new_toks), ev.data
+            assert ttft is not None and total is not None
+            ttft_best = min(ttft, ttft_best or ttft)
+            streamed_best = min(total, streamed_best or total)
+    finally:
+        svc.close()
+
+    ratio = ttft_best / max(full_best, 1e-9)
+    ok = ratio < 0.5
+    entry = {
+        "model": "qwen3-4b",
+        "max_new_tokens": new_toks,
+        "full_latency_ms": round(full_best * 1e3, 1),
+        "streamed_ttft_ms": round(ttft_best * 1e3, 1),
+        "streamed_total_ms": round(streamed_best * 1e3, 1),
+        "ttft_ratio": round(ratio, 3),
+    }
+    _merge_bench(out_path, {"streaming": entry})
+    row("streaming_full_completion", full_best * 1e6,
+        f"latency={entry['full_latency_ms']}ms")
+    row("streaming_ttft", ttft_best * 1e6,
+        f"ttft={entry['streamed_ttft_ms']}ms "
+        f"ratio={entry['ttft_ratio']} -> {out_path}")
     return ok
 
 
@@ -494,21 +551,26 @@ def main(argv=None) -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="run only the QoS overload + decode-throughput "
-                         "smokes (<30s each); exit nonzero if interactive "
-                         "p95 or fused decode tokens/s regresses")
+                    help="run only the QoS overload + decode-throughput + "
+                         "streaming-TTFT smokes (<30s each); exit nonzero "
+                         "if interactive p95, fused decode tokens/s, or "
+                         "streamed TTFT regresses")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.quick:
         qos_ok = bench_qos_overload(quick=True)
         decode_ok = bench_decode_fastpath(quick=True)
+        stream_ok = bench_streaming(quick=True)
         print(f"# quick qos smoke: "
               f"{'ok' if qos_ok else 'INTERACTIVE P95 REGRESSION'}",
               flush=True)
         print(f"# quick decode smoke: "
               f"{'ok' if decode_ok else 'FUSED DECODE TOKENS/S REGRESSION'}",
               flush=True)
-        raise SystemExit(0 if qos_ok and decode_ok else 1)
+        stream_msg = "ok" if stream_ok else \
+            "STREAMED TTFT REGRESSION (>= 0.5x full completion)"
+        print(f"# quick streaming smoke: {stream_msg}", flush=True)
+        raise SystemExit(0 if qos_ok and decode_ok and stream_ok else 1)
     # decode_fastpath first: it measures dispatch overhead, which later
     # benches inflate (heavy compiles + heap pressure skew its timings)
     bench_decode_fastpath()
@@ -519,6 +581,7 @@ def main(argv=None) -> None:
     bench_serving_throughput()
     bench_serving_http()
     bench_qos_overload()
+    bench_streaming()
     bench_kernels()
     bench_roofline_terms()
     print(f"# {len(ROWS)} benchmarks complete", flush=True)

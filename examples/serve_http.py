@@ -11,6 +11,8 @@ health.
     PYTHONPATH=src python examples/serve_http.py
     PYTHONPATH=src python examples/serve_http.py --qos   # QoS demo: two
         # clients with different priorities against one deployment
+    PYTHONPATH=src python examples/serve_http.py --stream  # SSE streaming:
+        # live token events, job event streams, and mid-stream cancel
 """
 
 import argparse
@@ -167,11 +169,101 @@ def qos_demo():
                       f"p95={v['p95'] * 1e3:.1f}ms n={v['count']}")
 
 
+def sse_events(url, path, payload=None, headers=None):
+    """Minimal SSE client: yields {'id', 'event', 'data'} per frame as the
+    server emits them (urllib reads the chunked body incrementally)."""
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(headers or {})
+    data = json.dumps(payload).encode() if payload is not None else None
+    req = urllib.request.Request(url + path, data, hdrs,
+                                 method="POST" if payload is not None
+                                 else "GET")
+    with urllib.request.urlopen(req) as resp:
+        event = {}
+        for raw in resp:
+            line = raw.decode().rstrip("\n")
+            if not line:
+                if event:
+                    yield event
+                    event = {}
+                continue
+            key, _, val = line.partition(": ")
+            event[key] = json.loads(val) if key == "data" else val
+
+
+def stream_demo():
+    """The live serving surface: `POST /v2/model/{id}/stream` emits token
+    deltas the moment each decode chunk lands (TTFT ~ prefill + one chunk,
+    not the whole generation), `GET /v2/jobs/{id}/events` attaches to a
+    running job (resumable via Last-Event-ID), and DELETE cancels a
+    running job — freeing its decode slot at the next chunk boundary."""
+    with MAXServer(build_kw={"max_seq": 256, "max_batch": 2},
+                   service_kw={"batch_window_s": 0.0}) as server:
+        print(f"MAX serving at {server.url}")
+        post(server.url, "/v2/model/qwen3-4b/predict",       # warm compile
+             {"input": {"text": "warm", "max_new_tokens": 2}})
+
+        # 1. live token stream (the `curl -N .../stream` experience)
+        print("\nstreaming 48 tokens (each line = one SSE token event):")
+        t0 = time.perf_counter()
+        for ev in sse_events(server.url, "/v2/model/qwen3-4b/stream",
+                             {"input": {"text": "stream a story",
+                                        "max_new_tokens": 48}}):
+            dt = (time.perf_counter() - t0) * 1e3
+            if ev["event"] == "token":
+                print(f"  +{dt:6.1f}ms seq={ev['id']} "
+                      f"text={ev['data']['text']!r}")
+            else:
+                u = ev["data"].get("usage") or {}
+                print(f"  +{dt:6.1f}ms {ev['event']}: "
+                      f"ttft={u.get('ttft_ms')}ms "
+                      f"total={u.get('latency_ms')}ms "
+                      f"tokens={u.get('completion_tokens')}")
+
+        # 2. job event stream + resume
+        sub = post(server.url, "/v2/model/qwen3-4b/jobs",
+                   {"input": {"text": "job stream", "max_new_tokens": 24}})
+        job_id = sub["job"]["id"]
+        seen = []
+        for ev in sse_events(server.url, f"/v2/jobs/{job_id}/events"):
+            seen.append(ev)
+            if len(seen) == 2:          # drop the connection mid-stream…
+                break
+        print(f"\njob {job_id}: read {len(seen)} events, disconnecting; "
+              f"resuming from Last-Event-ID: {seen[-1]['id']}")
+        resumed = list(sse_events(server.url, f"/v2/jobs/{job_id}/events",
+                                  headers={"Last-Event-ID":
+                                           seen[-1]["id"]}))
+        print(f"  resumed {len(resumed)} events "
+              f"(last: {resumed[-1]['event']})")
+
+        # 3. cancel a running job: DELETE frees the decode slot
+        sub = post(server.url, "/v2/model/qwen3-4b/jobs",
+                   {"input": {"text": "endless", "max_new_tokens": 200}})
+        job_id = sub["job"]["id"]
+        time.sleep(0.2)                               # let it start
+        req = urllib.request.Request(
+            server.url + f"/v2/jobs/{job_id}", method="DELETE")
+        out = json.loads(urllib.request.urlopen(req).read())
+        print(f"\nDELETE running job -> {out}")
+        time.sleep(0.3)
+        job = get(server.url, f"/v2/jobs/{job_id}")["job"]
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        print(f"  job state: {job['state']}  "
+              f"service cancelled: {stats['cancelled']}  "
+              f"ttft p50: {stats['ttft']['p50'] * 1e3:.1f}ms")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--qos", action="store_true",
                     help="run the QoS two-priority demo instead")
-    if ap.parse_args().qos:
+    ap.add_argument("--stream", action="store_true",
+                    help="run the SSE streaming + cancellation demo")
+    args = ap.parse_args()
+    if args.qos:
         qos_demo()
+    elif args.stream:
+        stream_demo()
     else:
         main()

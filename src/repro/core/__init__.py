@@ -13,11 +13,11 @@
 from repro.core.wrapper import MAXError, MAXModelWrapper, ModelMetadata
 from repro.core.registry import EXCHANGE, ModelAsset, ModelRegistry
 from repro.core.service import (
-    BatchedService, InferenceService, Job, ServiceOverloaded, SyncService,
-    make_service,
+    BatchedService, InferenceService, Job, JobStream, ServiceOverloaded,
+    SyncService, make_service,
 )
 from repro.core.deployment import Deployment, DeploymentManager
-from repro.core.router import RequestCtx, Route, Router
+from repro.core.router import RequestCtx, Response, Route, Router, StreamEvent
 from repro.core.api import ApiError, MAXServer, build_router, build_swagger
 from repro.core.skeleton import register_asset, skeleton_source
 # QoS/observability subsystem (serving-layer, re-exported for API users)

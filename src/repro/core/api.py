@@ -22,10 +22,15 @@ service is a :class:`~repro.core.service.BatchedService`):
     GET    /v2/models                  -> catalogue + deployment status
     POST   /v2/model/{id}/predict      -> single input, coalesced into
                                           engine decode batches under load
+    POST   /v2/model/{id}/stream       -> SSE token stream (event: token /
+                                          done / error; disconnect cancels)
     POST   /v2/model/{id}/predict_batch-> explicit multi-input
     POST   /v2/model/{id}/jobs         -> async submit (202 + job id)
     GET    /v2/jobs/{job_id}           -> poll a job
-    DELETE /v2/jobs/{job_id}           -> drop a job record
+    GET    /v2/jobs/{job_id}/events    -> attach to a job's SSE stream
+                                          (resume: Last-Event-ID/?from_seq=)
+    DELETE /v2/jobs/{job_id}           -> cancel a queued/running job;
+                                          drop a finished job's record
     POST   /v2/model/{id}/deploy       -> deploy (service mode + qos config)
     DELETE /v2/model/{id}              -> undeploy
     GET    /v2/model/{id}/stats        -> service-level stats (batch sizes…)
@@ -55,7 +60,7 @@ from urllib.parse import parse_qsl
 
 from repro.core.deployment import DeploymentManager
 from repro.core.registry import EXCHANGE, ModelRegistry
-from repro.core.router import RequestCtx, Router
+from repro.core.router import RequestCtx, Response, Router, StreamEvent
 from repro.core.service import ServiceOverloaded
 from repro.core.wrapper import MAXError
 from repro.serving.qos import PRIORITIES, AdmissionError
@@ -79,6 +84,8 @@ ERROR_STATUS = {
     # tokens reached max_seq) — the request asked for more than the
     # deployment can hold, so it is a client-side 400, not a 5xx
     "MAX_SEQ_EXCEEDED": 400,
+    # the client (or its DELETE) abandoned the work: nginx's 499
+    "CANCELLED": 499,
     "INTERNAL": 500,
     "TIMEOUT": 504,
     "DEADLINE_EXCEEDED": 504,
@@ -124,6 +131,13 @@ _QOS_PROPS = {
 _INPUT_SCHEMA_V2 = {"type": "object",
                     "properties": {"input": {}, **_QOS_PROPS},
                     "required": ["input"]}
+_SSE_SCHEMA = {
+    "type": "string",
+    "description": "server-sent events: `id: <seq>` / `event: "
+                   "token|done|error` / `data: <json>` frames; token data "
+                   "carries {token_ids, text}, done carries "
+                   "{envelope, usage}, error carries {code, message}",
+}
 
 
 def build_router(server: Optional["MAXServer"] = None) -> Router:
@@ -168,14 +182,27 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
                           "properties": {"inputs": {"type": "array"},
                                          **_QOS_PROPS},
                           "required": ["inputs"]})
+    r.add("POST", "/v2/model/{model_id}/stream", h("_h_stream_v2"),
+          summary="Streaming predict: server-sent events — `token` deltas "
+                  "with monotone ids, terminal `done` (envelope + usage) "
+                  "or `error` (structured code); disconnecting cancels "
+                  "the generation (QoS fields as /predict)",
+          request_schema=_INPUT_SCHEMA_V2,
+          response_schema=_SSE_SCHEMA, response_media="text/event-stream")
     r.add("POST", "/v2/model/{model_id}/jobs", h("_h_job_submit"),
           summary="Submit an async generation job",
           request_schema=_INPUT_SCHEMA_V2)
     r.add("GET", "/v2/jobs/{job_id}", h("_h_job_get"),
           summary="Poll an async job")
+    r.add("GET", "/v2/jobs/{job_id}/events", h("_h_job_events"),
+          summary="Attach to a job's event stream (SSE); resume with "
+                  "Last-Event-ID or ?from_seq= from the job's bounded "
+                  "replay buffer",
+          response_schema=_SSE_SCHEMA, response_media="text/event-stream")
     r.add("DELETE", "/v2/jobs/{job_id}", h("_h_job_delete"),
-          summary="Delete a job record (finished jobs also expire after "
-                  "the service's job TTL)")
+          summary="Cancel a queued/running job (it finishes with state "
+                  "'cancelled' and its decode slot frees at the next "
+                  "chunk boundary); on a finished job, delete the record")
     r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
           summary="Deploy an asset (optional {'service': sync|batched|auto,"
                   " 'qos': {...}})")
@@ -275,16 +302,63 @@ class MAXServer:
                 self.end_headers()
                 self.wfile.write(body)
 
+            def _send_sse(self, resp: Response):
+                """Incremental SSE frames. No Content-Length — the
+                HTTP/1.0 connection close delimits the stream. A write
+                failing (client went away) closes the event iterator,
+                which is how disconnect-triggered cancellation reaches
+                the scheduler (the service generator sees GeneratorExit)."""
+                self.send_response(resp.status)
+                self.send_header("Content-Type", "text/event-stream")
+                self.send_header("Cache-Control", "no-cache")
+                self.send_header("X-Accel-Buffering", "no")
+                self.end_headers()
+                events = resp.events
+                last_seq = -1
+                try:
+                    while True:
+                        try:
+                            ev = next(events)
+                        except StopIteration:
+                            break
+                        except Exception as e:   # event-source fault:
+                            # structured last frame; reuse last_seq so an
+                            # auto-reconnecting client's Last-Event-ID
+                            # cursor does not regress to a replayed past
+                            ev = StreamEvent(
+                                "error", {"code": "INTERNAL",
+                                          "message": str(e)}, last_seq)
+                            events = iter(())    # nothing more to pull
+                        last_seq = ev.seq
+                        frame = (f"id: {ev.seq}\n"
+                                 f"event: {ev.event}\n"
+                                 f"data: {json.dumps(ev.data)}\n\n")
+                        try:
+                            self.wfile.write(frame.encode())
+                            self.wfile.flush()
+                        except OSError:          # client disconnected
+                            break                # mid-stream
+                finally:
+                    close = getattr(resp.events, "close", None)
+                    if close is not None:
+                        close()
+
+            def _respond(self, resp: Response):
+                if resp.streaming:
+                    self._send_sse(resp)
+                else:
+                    self._send(resp.status, resp.body)
+
             def _hdrs(self):
                 return {k.lower(): v for k, v in self.headers.items()}
 
             def do_GET(self):
-                self._send(*outer.dispatch("GET", self.path, None,
-                                           headers=self._hdrs()))
+                self._respond(outer.dispatch("GET", self.path, None,
+                                             headers=self._hdrs()))
 
             def do_DELETE(self):
-                self._send(*outer.dispatch("DELETE", self.path, None,
-                                           headers=self._hdrs()))
+                self._respond(outer.dispatch("DELETE", self.path, None,
+                                             headers=self._hdrs()))
 
             def do_POST(self):
                 n = int(self.headers.get("Content-Length", 0))
@@ -297,8 +371,8 @@ class MAXServer:
                     else:
                         self._send(400, _v1_error("bad JSON"))
                     return
-                self._send(*outer.dispatch("POST", self.path, data,
-                                           headers=self._hdrs()))
+                self._respond(outer.dispatch("POST", self.path, data,
+                                             headers=self._hdrs()))
 
         self._server = ThreadingHTTPServer((host, port), Handler)
         self._thread: Optional[threading.Thread] = None
@@ -306,8 +380,13 @@ class MAXServer:
     # -- dispatch ---------------------------------------------------------------
 
     def dispatch(self, method: str, path: str, body: Optional[Any],
-                 headers: Optional[Dict[str, str]] = None
-                 ) -> Tuple[int, Dict[str, Any]]:
+                 headers: Optional[Dict[str, str]] = None) -> Response:
+        """Route + run a handler, normalized to a :class:`Response`.
+
+        Handlers may return the legacy ``(status, dict)`` tuple (adapted)
+        or a Response carrying an SSE event iterator — the HTTP layer
+        picks the rendering off the Response, so JSON and streaming
+        endpoints share one dispatch path."""
         path, _, qs = path.partition("?")
         query = dict(parse_qsl(qs))
         route, params, allowed = self.router.dispatch(method, path)
@@ -316,31 +395,35 @@ class MAXServer:
             if allowed:
                 msg = f"{method} not allowed for {path}"
                 if v2:
-                    return 405, _v2_error("METHOD_NOT_ALLOWED", msg,
-                                          allowed=sorted(set(allowed)))
-                return 405, _v1_error(msg)
+                    return Response(405, _v2_error(
+                        "METHOD_NOT_ALLOWED", msg,
+                        allowed=sorted(set(allowed))))
+                return Response(405, _v1_error(msg))
             msg = f"no route {path}"
-            return 404, _v2_error("NOT_FOUND", msg) if v2 else (
-                404, _v1_error(msg))
+            return Response(404, _v2_error("NOT_FOUND", msg) if v2
+                            else _v1_error(msg))
         try:
-            return route.handler(RequestCtx(method, path, params, body,
-                                            query=query,
-                                            headers=headers or {}))
+            return Response.adapt(
+                route.handler(RequestCtx(method, path, params, body,
+                                         query=query,
+                                         headers=headers or {})))
         except ApiError as e:
             payload = _v2_error(e.code, str(e)) if v2 else _v1_error(str(e))
-            return e.status, payload
+            return Response(e.status, payload)
         except Exception as e:          # container fault isolation
             payload = _v2_error("INTERNAL", str(e)) if v2 \
                 else _v1_error(str(e))
-            return 500, payload
+            return Response(500, payload)
 
-    # back-compat shims for callers of the old entry points
+    # back-compat shims for callers of the old (status, json) entry points
     def handle_get(self, path: str) -> Tuple[int, Dict[str, Any]]:
-        return self.dispatch("GET", path, None)
+        resp = self.dispatch("GET", path, None)
+        return resp.status, resp.body
 
     def handle_post(self, path: str, data: Dict[str, Any]
                     ) -> Tuple[int, Dict[str, Any]]:
-        return self.dispatch("POST", path, data)
+        resp = self.dispatch("POST", path, data)
+        return resp.status, resp.body
 
     # -- shared helpers ---------------------------------------------------------
 
@@ -408,6 +491,10 @@ class MAXServer:
         """Service envelope -> (status, v2 envelope with structured error)."""
         if env.get("status") == "ok":
             return 200, env
+        if env.get("status") == "cancelled":
+            # first-class outcome, not an error shape: the envelope keeps
+            # status "cancelled" (job records show the same)
+            return ERROR_STATUS["CANCELLED"], env
         code = env.get("code", "INVALID_INPUT")
         out = _v2_error(code, str(env.get("error", "prediction failed")))
         if "model_id" in env:
@@ -480,6 +567,44 @@ class MAXServer:
         dep = self._ensure_deployed(ctx.params["model_id"])
         return self._v2_envelope(dep.predict(inp, qos))
 
+    def _h_stream_v2(self, ctx) -> Response:
+        """SSE predict: input/QoS validation failures are still plain JSON
+        4xx (the stream never opened); once validation passes, everything
+        — including admission rejection — arrives as SSE events."""
+        inp = self._require_input(ctx.body)
+        qos = self._require_qos(ctx)
+        dep = self._ensure_deployed(ctx.params["model_id"])
+        return Response.sse(dep.predict_stream(inp, qos))
+
+    def _h_job_events(self, ctx) -> Response:
+        job_id = ctx.params["job_id"]
+        with self._job_lock:
+            model_id = self._job_index.get(job_id)
+        if model_id is None:
+            raise ApiError("JOB_NOT_FOUND", f"unknown job {job_id!r}")
+        # resume cursor: Last-Event-ID (SSE auto-reconnect) is the last
+        # seq the client SAW -> deliver strictly after it; ?from_seq= is
+        # the first seq to deliver (inclusive)
+        from_seq = 0
+        last_id = ctx.headers.get("last-event-id")
+        try:
+            if ctx.query.get("from_seq") is not None:
+                from_seq = int(ctx.query["from_seq"])
+            elif last_id is not None:
+                from_seq = int(last_id) + 1
+        except ValueError:
+            raise ApiError("INVALID_INPUT",
+                           "from_seq / Last-Event-ID must be integers") \
+                from None
+        try:
+            events = self.manager.get(model_id).service.job_events(
+                job_id, max(0, from_seq))
+        except KeyError:
+            raise ApiError("JOB_NOT_FOUND",
+                           f"job {job_id!r} no longer exists "
+                           f"(model {model_id!r} undeployed?)") from None
+        return Response.sse(events)
+
     def _h_predict_batch_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
         if not isinstance(ctx.body, dict) or "inputs" not in ctx.body:
             raise ApiError("MISSING_INPUT", "missing required key 'inputs'")
@@ -530,15 +655,28 @@ class MAXServer:
         return 200, {"status": "ok", "job": job.to_json()}
 
     def _h_job_delete(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        """Cancellation is the user-facing contract: DELETE on a queued or
+        running job cancels it (job finishes with state 'cancelled', its
+        decode slot frees at the next chunk boundary and is backfilled);
+        only finished jobs have their record dropped."""
         job_id = ctx.params["job_id"]
         with self._job_lock:
             model_id = self._job_index.get(job_id)
         if model_id is None:
             raise ApiError("JOB_NOT_FOUND", f"unknown job {job_id!r}")
         try:
-            deleted = self.manager.get(model_id).service.delete_job(job_id)
+            service = self.manager.get(model_id).service
         except KeyError:
-            deleted = False         # undeployed: records are gone anyway
+            with self._job_lock:    # undeployed: records are gone anyway
+                self._job_index.pop(job_id, None)
+            raise ApiError("JOB_NOT_FOUND",
+                           f"job {job_id!r} no longer exists "
+                           f"(model {model_id!r} undeployed?)") from None
+        if service.cancel_job(job_id):
+            # record survives so the client can poll the cancelled state
+            return 200, {"status": "ok", "cancelled": job_id,
+                         "poll": f"/v2/jobs/{job_id}"}
+        deleted = service.delete_job(job_id)
         with self._job_lock:
             self._job_index.pop(job_id, None)
         if not deleted:

@@ -75,6 +75,12 @@ class _EngineWrapper(MAXModelWrapper):
         return GenerationResult(tokens=list(tokens), prompt_len=prompt_len,
                                 steps=len(tokens), finished=True)
 
+    def format_stream_delta(self, token_ids: List[int]):
+        # byte-level tokenizer: chunk decodes concatenate to the full text
+        # (multi-byte codepoints split across chunks render as replacement
+        # chars in the delta only — clients always get the exact ids too)
+        return TOKENIZER.decode(token_ids)
+
 
 class TextGenerationWrapper(_EngineWrapper):
     def _pre_process(self, inp: Any) -> Dict[str, Any]:
@@ -97,9 +103,12 @@ class TextGenerationWrapper(_EngineWrapper):
         return res[0]
 
     def _post_process(self, r) -> Any:
-        return [{"generated_text": TOKENIZER.decode(r.tokens),
-                 "generated_tokens": len(r.tokens),
-                 "prompt_tokens": r.prompt_len}]
+        out = {"generated_text": TOKENIZER.decode(r.tokens),
+               "generated_tokens": len(r.tokens),
+               "prompt_tokens": r.prompt_len}
+        if r.first_token_s is not None:     # engine-measured TTFT (sync
+            out["ttft_ms"] = round(r.first_token_s * 1e3, 3)   # path only)
+        return [out]
 
     # generation protocol — lets BatchedService coalesce concurrent HTTP
     # requests into one decode batch instead of calling engine.generate

@@ -94,6 +94,23 @@ class Deployment:
                    qos: Optional[Dict[str, Any]] = None) -> Job:
         return self.service.submit_job(inp, qos)
 
+    def predict_stream(self, inp: Any,
+                       qos: Optional[Dict[str, Any]] = None):
+        """Streaming predict with deployment-level accounting: the request
+        counts once, when its stream terminates (done/error/disconnect)."""
+        t0 = time.perf_counter()
+
+        def wrapped():
+            ok = False
+            try:
+                for ev in self.service.predict_stream(inp, qos):
+                    if ev.event == "done":
+                        ok = True
+                    yield ev
+            finally:
+                self.stats.record(time.perf_counter() - t0, ok)
+        return wrapped()
+
 
 class DeploymentManager:
     def __init__(self, registry: Optional[ModelRegistry] = None, *,

@@ -19,7 +19,9 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import (
+    Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union,
+)
 
 _PARAM_RE = re.compile(r"\{(\w+)\}")
 
@@ -36,7 +38,54 @@ class RequestCtx:
     headers: Dict[str, str] = field(default_factory=dict)
 
 
-Handler = Callable[[RequestCtx], Tuple[int, Dict[str, Any]]]
+@dataclass
+class StreamEvent:
+    """One server-sent event: ``event:`` name, JSON ``data:`` payload, and
+    a per-stream monotonically increasing ``id:`` sequence number (the
+    resume cursor for ``Last-Event-ID``)."""
+    event: str                      # token | done | error
+    data: Dict[str, Any]
+    seq: int = 0
+
+
+@dataclass
+class Response:
+    """What a handler returns: a JSON body (today's behavior) OR an event
+    iterator the HTTP layer renders as ``text/event-stream``.
+
+    Handlers keep returning bare ``(status, dict)`` tuples — the dispatcher
+    normalizes them through :meth:`adapt`, so every pre-Response handler
+    (v1 and v2 alike) is untouched. The dict ``_raw``/``_content_type``
+    escape hatch (Prometheus exposition) keeps working the same way.
+    Streaming handlers return :meth:`sse` instead; the HTTP layer closes
+    the event iterator when the client disconnects or the stream ends,
+    which is how disconnect-triggered cancellation reaches the service
+    layer (a generator sees ``GeneratorExit``).
+    """
+    status: int = 200
+    body: Optional[Dict[str, Any]] = None
+    events: Optional[Iterator[StreamEvent]] = None
+
+    @classmethod
+    def adapt(cls, result: Union["Response", Tuple[int, Dict[str, Any]]]
+              ) -> "Response":
+        if isinstance(result, Response):
+            return result
+        status, body = result
+        return cls(status=status, body=body)
+
+    @classmethod
+    def sse(cls, events: Iterable[StreamEvent], *,
+            status: int = 200) -> "Response":
+        return cls(status=status, events=iter(events))
+
+    @property
+    def streaming(self) -> bool:
+        return self.events is not None
+
+
+HandlerResult = Union[Tuple[int, Dict[str, Any]], Response]
+Handler = Callable[[RequestCtx], HandlerResult]
 
 
 @dataclass
@@ -48,6 +97,7 @@ class Route:
     version: str = "v2"               # which API generation owns the route
     request_schema: Optional[Dict[str, Any]] = None
     response_schema: Optional[Dict[str, Any]] = None
+    response_media: str = "application/json"  # e.g. text/event-stream
     tags: Tuple[str, ...] = ()
     _regex: re.Pattern = field(init=False, repr=False)
 
@@ -76,10 +126,12 @@ class Router:
             *, summary: str = "", version: str = "v2",
             request_schema: Optional[Dict[str, Any]] = None,
             response_schema: Optional[Dict[str, Any]] = None,
+            response_media: str = "application/json",
             tags: Tuple[str, ...] = ()) -> Route:
         route = Route(method, template, handler, summary=summary,
                       version=version, request_schema=request_schema,
-                      response_schema=response_schema, tags=tags)
+                      response_schema=response_schema,
+                      response_media=response_media, tags=tags)
         self.routes.append(route)
         return route
 
@@ -117,8 +169,10 @@ class Router:
                 "summary": route.summary or route.template,
                 "tags": list(route.tags) or [route.version],
                 "responses": {"200": {
-                    "description": "standardized envelope",
-                    "content": {"application/json": {
+                    "description": "standardized envelope"
+                    if route.response_media == "application/json"
+                    else "server-sent event stream",
+                    "content": {route.response_media: {
                         "schema": route.response_schema
                         or {"type": "object"}}}}},
             }

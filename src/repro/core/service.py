@@ -26,20 +26,36 @@ the API layer (v1 or v2) cannot tell them apart, and both support async
 *jobs* (submit -> poll) for long generations. Finished job records expire
 after ``job_ttl_s`` (plus a bounded-count fallback) and can be deleted
 explicitly, so long-running servers don't accrete job state.
+
+Streaming: both services implement ``predict_stream`` — an iterator of
+:class:`~repro.core.router.StreamEvent` the API layer renders as
+``text/event-stream``. ``SyncService`` falls back to the whole result as
+one ``token`` event; ``BatchedService`` bridges the scheduler worker to
+the HTTP thread through a *bounded* per-request queue fed at chunk
+boundaries (backpressure: a consumer that stops draining is treated as
+abandoned and its request is cancelled, so a dead stream never pins a
+decode slot — closing the iterator mid-stream cancels the same way).
+Every job additionally owns a :class:`JobStream`, a bounded replay buffer
+of its events that late subscribers can attach to (and resume via a
+sequence cursor); cancellation is a first-class outcome: ``cancel_job``
+works on queued AND running jobs and the envelope/job state becomes
+``cancelled``.
 """
 
 from __future__ import annotations
 
 import abc
+import queue as _queue
 import threading
 import time
 import uuid
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
+from repro.core.router import StreamEvent
 from repro.core.wrapper import MAXError, MAXModelWrapper
-from repro.serving.metrics import MetricsRegistry
+from repro.serving.metrics import TOKEN_LATENCY_BUCKETS, MetricsRegistry
 from repro.serving.qos import (
     AdmissionController, AdmissionError, QoSConfig, QueueFull,
 )
@@ -58,18 +74,87 @@ def _qos_field(qos: Optional[Dict[str, Any]], key: str):
 
 
 # ---------------------------------------------------------------------------
-# Async jobs (submit -> poll), shared by both service kinds.
+# Async jobs (submit -> poll -> attach), shared by both service kinds.
 # ---------------------------------------------------------------------------
+
+class JobStream:
+    """Bounded per-job event log with live fan-out.
+
+    The producing side (scheduler token sink / job worker) ``push``es
+    events; any number of subscribers replay the buffered events from a
+    sequence cursor and then follow live pushes — the mechanism behind
+    ``GET /v2/jobs/{id}/events`` and its ``Last-Event-ID``/``?from_seq=``
+    resume. The buffer keeps the most recent ``maxlen`` events (a resume
+    pointing before the retained window just gets what is still held); a
+    terminal ``done``/``error`` event closes the stream and releases every
+    subscriber.
+    """
+
+    def __init__(self, maxlen: int = 1024):
+        self._buf: deque = deque(maxlen=maxlen)
+        self._cv = threading.Condition()
+        self._next_seq = 0
+        self._closed = False
+
+    def push(self, event: str, data: Dict[str, Any]) -> Optional[StreamEvent]:
+        with self._cv:
+            if self._closed:          # late results after a cancel race
+                return None
+            ev = StreamEvent(event, data, self._next_seq)
+            self._next_seq += 1
+            self._buf.append(ev)
+            if event in ("done", "error"):
+                self._closed = True
+            self._cv.notify_all()
+            return ev
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def subscribe(self, from_seq: int = 0, *,
+                  timeout_s: float = 300.0) -> Iterator[StreamEvent]:
+        """Yield events with ``seq >= from_seq``: buffered ones first, then
+        live until the terminal event (or ``timeout_s`` of silence, which
+        yields a structured ``error`` event and stops)."""
+        next_seq = from_seq
+        while True:
+            with self._cv:
+                batch = [e for e in self._buf if e.seq >= next_seq]
+                while not batch and not self._closed:
+                    if not self._cv.wait(timeout_s):
+                        break                     # silence: stop below
+                    batch = [e for e in self._buf if e.seq >= next_seq]
+                closed = self._closed
+            if not batch:
+                if not closed:
+                    # synthetic frame: seq next_seq-1, NOT next_seq — a
+                    # client resuming with this id as Last-Event-ID must
+                    # land back on the real event that will get next_seq
+                    yield StreamEvent("error", {
+                        "code": "TIMEOUT",
+                        "message": f"no job events for {timeout_s}s"},
+                        next_seq - 1)
+                return
+            for ev in batch:
+                yield ev
+                next_seq = ev.seq + 1
+            if closed:                # the batch ended in the terminal event
+                return
+
 
 @dataclass
 class Job:
     id: str
     model_id: str
-    state: str = "queued"             # queued | running | done | error
+    state: str = "queued"     # queued | running | done | error | cancelled
     submitted_at: float = field(default_factory=time.time)
     finished_at: Optional[float] = None
     result: Optional[Any] = None      # envelope when done
     error: Optional[str] = None
+    stream: JobStream = field(default_factory=JobStream, repr=False)
+    cancel_requested: bool = False    # sync running jobs honor it post-hoc
 
     def to_json(self) -> Dict[str, Any]:
         out = {"id": self.id, "model_id": self.model_id, "state": self.state,
@@ -103,6 +188,15 @@ class InferenceService(abc.ABC):
             model_id=wrapper.metadata.id)
         self._jobs: Dict[str, Job] = {}
         self._jobs_lock = threading.Lock()
+        # streaming accounting (both kinds): instantaneous gauge + totals
+        self._streams_lock = threading.Lock()
+        self._active_streams = 0
+        self.streams_started = 0
+        self.streams_cancelled = 0
+        self.jobs_cancelled = 0
+        self.metrics.register_gauge(
+            "max_active_streams", lambda: self._active_streams,
+            model=wrapper.metadata.id)
 
     @property
     def model_id(self) -> str:
@@ -149,6 +243,45 @@ class InferenceService(abc.ABC):
         """Per-input envelopes for an explicit multi-input request."""
         return [self.predict(i, qos) for i in inputs]
 
+    # -- streaming ---------------------------------------------------------
+
+    @abc.abstractmethod
+    def predict_stream(self, inp: Any,
+                       qos: Optional[Dict[str, Any]] = None
+                       ) -> Iterator[StreamEvent]:
+        """Iterator of :class:`StreamEvent` for one input: ``token`` deltas
+        (monotone per-stream ``seq``), then a terminal ``done`` carrying
+        the same envelope ``predict`` would return plus usage — or an
+        ``error`` event with a structured code. Closing the iterator
+        mid-stream cancels the underlying work."""
+
+    def _stream_opened(self):
+        with self._streams_lock:
+            self._active_streams += 1
+            self.streams_started += 1
+
+    def _stream_closed(self, cancelled: bool = False):
+        with self._streams_lock:
+            self._active_streams -= 1
+            if cancelled:
+                self.streams_cancelled += 1
+
+    @staticmethod
+    def _terminal_event_data(envelope: Dict[str, Any],
+                             usage: Optional[Dict[str, Any]] = None
+                             ) -> tuple:
+        """(event_name, data) for a finished request's terminal event."""
+        status = envelope.get("status")
+        if status == "ok":
+            return "done", {"envelope": envelope, "usage": usage}
+        code = envelope.get("code") or (
+            "CANCELLED" if status == "cancelled" else "INTERNAL")
+        err = envelope.get("error")
+        if isinstance(err, dict):
+            err = err.get("message", str(err))
+        return "error", {"code": code, "message": str(err or "failed"),
+                         "envelope": envelope, "usage": usage}
+
     # -- jobs --------------------------------------------------------------
 
     def _new_job(self) -> Job:
@@ -173,18 +306,44 @@ class InferenceService(abc.ABC):
         for jid in finished[:max(0, len(finished) - self.retain_jobs)]:
             del self._jobs[jid]
 
-    def _finish_job(self, job: Job, envelope: Dict[str, Any]):
+    def _finish_job(self, job: Job, envelope: Dict[str, Any],
+                    usage: Optional[Dict[str, Any]] = None,
+                    token_event: Optional[Dict[str, Any]] = None):
+        """``token_event`` (the sync whole-result fallback) is pushed only
+        after the locked cancel resolution decides the result stands — a
+        cancelled job must not leak its discarded output to subscribers."""
         with self._jobs_lock:
+            if job.cancel_requested and envelope.get("status") != "cancelled":
+                # cancel raced completion: cancel_job set the flag under
+                # this lock while the job was still live and already
+                # answered 200 "cancelled" — that answer must win over
+                # the late result (checked here, under the same lock, so
+                # there is no window for a 'done' record to slip through)
+                envelope = {"status": "cancelled", "code": "CANCELLED",
+                            "error": "cancelled while running",
+                            "model_id": self.model_id}
+                usage = None
+            status = envelope.get("status")
             # state flips LAST: pollers read without the lock, and a job
             # observed as done/error must already carry result+finished_at
             job.result = envelope
-            job.error = envelope.get("error") \
-                if envelope.get("status") != "ok" else None
+            job.error = envelope.get("error") if status != "ok" else None
             if isinstance(job.error, dict):     # structured error message
                 job.error = job.error.get("message", str(job.error))
             job.finished_at = time.time()
-            job.state = "done" if envelope.get("status") == "ok" else "error"
+            job.state = "done" if status == "ok" \
+                else "cancelled" if status == "cancelled" else "error"
             self._gc_jobs_locked()
+        if job.state == "cancelled":
+            with self._streams_lock:    # += races worker/request threads
+                self.jobs_cancelled += 1
+        # stream events outside the lock (JobStream has its own cv); the
+        # state flip above makes any later cancel_job return False, so
+        # this ordering cannot race a cancel
+        if token_event is not None and job.state == "done":
+            job.stream.push("token", token_event)
+        event, data = self._terminal_event_data(envelope, usage)
+        job.stream.push(event, data)
 
     @abc.abstractmethod
     def submit_job(self, inp: Any,
@@ -200,11 +359,25 @@ class InferenceService(abc.ABC):
                 raise KeyError(f"unknown job {job_id!r}") from None
 
     def delete_job(self, job_id: str) -> bool:
-        """Drop a job record (``DELETE /v2/jobs/{id}``). Deleting a
-        queued/running job removes the *record* only — in-flight work is
-        not cancelled, its late result just has nowhere to land."""
+        """Drop a *finished* job's record (``DELETE /v2/jobs/{id}`` falls
+        through to this after :meth:`cancel_job` declines — queued/running
+        jobs are cancelled, not silently unrecorded)."""
         with self._jobs_lock:
             return self._jobs.pop(job_id, None) is not None
+
+    @abc.abstractmethod
+    def cancel_job(self, job_id: str) -> bool:
+        """Cancel a queued or running job: the job finishes with state
+        ``cancelled`` and envelope ``{"status": "cancelled", ...}``, and
+        any decode slot it held is freed at the next chunk boundary.
+        Returns False when the job is unknown or already finished."""
+
+    def job_events(self, job_id: str, from_seq: int = 0,
+                   *, timeout_s: float = 300.0) -> Iterator[StreamEvent]:
+        """Attach to a job's event stream (replay + live); raises KeyError
+        for unknown jobs like :meth:`get_job`."""
+        return self.get_job(job_id).stream.subscribe(
+            from_seq, timeout_s=timeout_s)
 
     # -- lifecycle / introspection ----------------------------------------
 
@@ -212,8 +385,20 @@ class InferenceService(abc.ABC):
         with self._jobs_lock:
             self._gc_jobs_locked()
             jobs = len(self._jobs)
+        with self._streams_lock:
+            streams = {"active": self._active_streams,
+                       "started": self.streams_started,
+                       "cancelled": self.streams_cancelled}
         return {"kind": self.kind, "jobs": jobs,
                 "job_ttl_s": self.job_ttl_s,
+                "cancelled": self.jobs_cancelled,
+                "streams": streams,
+                "ttft": self.metrics.histogram(
+                    "max_ttft_seconds", model=self.model_id).snapshot(),
+                "inter_token": self.metrics.histogram(
+                    "max_inter_token_seconds",
+                    buckets=TOKEN_LATENCY_BUCKETS,
+                    model=self.model_id).snapshot(),
                 "qos": self.admission.stats()}
 
     def close(self):
@@ -257,6 +442,42 @@ class SyncService(InferenceService):
             return {"status": "error", "error": str(e), "code": e.code,
                     "model_id": self.model_id}
 
+    @staticmethod
+    def _first_prediction(env: Dict[str, Any]) -> Dict[str, Any]:
+        preds = env.get("predictions")
+        return preds[0] if isinstance(preds, list) and preds \
+            and isinstance(preds[0], dict) else {}
+
+    def _sync_usage(self, env: Dict[str, Any],
+                    latency_ms: float) -> Dict[str, Any]:
+        """Usage for the whole-result fallback: token counts when the
+        wrapper reports them, TTFT = engine-measured first token (sync
+        generation) or the whole-call latency (classifiers)."""
+        first = self._first_prediction(env)
+        return {"prompt_tokens": first.get("prompt_tokens"),
+                "completion_tokens": first.get("generated_tokens"),
+                "ttft_ms": first.get("ttft_ms", latency_ms),
+                "latency_ms": latency_ms}
+
+    def _sync_token_event(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        """The whole-result-as-one-event token payload (one grammar for
+        /stream and /jobs/{id}/events alike)."""
+        return {"text": self._first_prediction(env).get("generated_text"),
+                "predictions": env.get("predictions"),
+                "model_id": self.model_id}
+
+    def _observe_ttft(self, env: Dict[str, Any]):
+        """Sync TTFT: the engine's measured first-token time when the
+        wrapper reports one (generation assets), else the whole-call
+        latency (classifiers emit their one result all at once)."""
+        if env.get("status") != "ok":
+            return
+        ttft_ms = self._first_prediction(env).get("ttft_ms",
+                                                  env.get("latency_ms"))
+        if ttft_ms is not None:
+            self.metrics.observe("max_ttft_seconds", float(ttft_ms) / 1e3,
+                                 model=self.model_id)
+
     def predict(self, inp: Any,
                 qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         rejected = self._admit_or_envelope(qos, cost=self._request_cost(inp))
@@ -267,8 +488,36 @@ class SyncService(InferenceService):
                 env = self.wrapper.predict_envelope(inp)
         else:
             env = self.wrapper.predict_envelope(inp)
+        self._observe_ttft(env)
         self._count_request(_qos_field(qos, "priority"), env)
         return env
+
+    def predict_stream(self, inp: Any,
+                       qos: Optional[Dict[str, Any]] = None
+                       ) -> Iterator[StreamEvent]:
+        """Whole-result-as-one-event fallback: sync execution has no chunk
+        boundaries to stream from, so the stream is ``token`` (full
+        payload) then ``done`` — the same event grammar as the batched
+        service, so clients need not care which service kind answered."""
+        def gen():
+            self._stream_opened()
+            try:
+                t0 = time.perf_counter()
+                env = self.predict(inp, qos)
+                latency_ms = round((time.perf_counter() - t0) * 1e3, 3)
+                if env.get("status") != "ok":
+                    code = env.get("code") or "INVALID_INPUT"
+                    yield StreamEvent("error", {
+                        "code": code, "message": str(env.get("error")),
+                        "model_id": self.model_id}, 0)
+                    return
+                yield StreamEvent("token", self._sync_token_event(env), 0)
+                yield StreamEvent("done", {
+                    "envelope": env,
+                    "usage": self._sync_usage(env, latency_ms)}, 1)
+            finally:
+                self._stream_closed()
+        return gen()
 
     def predict_batch(self, inputs: List[Any],
                       qos: Optional[Dict[str, Any]] = None
@@ -307,6 +556,29 @@ class SyncService(InferenceService):
             self._job_cv.notify()
         return job
 
+    def _cancelled_envelope(self, detail: str) -> Dict[str, Any]:
+        return {"status": "cancelled", "code": "CANCELLED",
+                "error": f"cancelled {detail}", "model_id": self.model_id}
+
+    def cancel_job(self, job_id: str) -> bool:
+        """Queued jobs cancel immediately (dropped from the worker queue);
+        a *running* sync job cannot be preempted mid-wrapper-call — the
+        mark makes it finish as ``cancelled`` with its result discarded
+        (there is no decode slot to reclaim in the sync service)."""
+        with self._job_cv:
+            for i, (job, _inp, _qos) in enumerate(self._job_queue):
+                if job.id == job_id:
+                    del self._job_queue[i]
+                    self._finish_job(job,
+                                     self._cancelled_envelope("while queued"))
+                    return True
+        with self._jobs_lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.state not in ("queued", "running"):
+                return False
+            job.cancel_requested = True
+        return True
+
     def _job_worker(self):
         while True:
             with self._job_cv:
@@ -315,19 +587,34 @@ class SyncService(InferenceService):
                 if self._closed:
                     return
                 job, inp, qos = self._job_queue.popleft()
+            if job.cancel_requested:             # cancelled between queue
+                self._finish_job(job,            # scan and pickup
+                                 self._cancelled_envelope("while queued"))
+                continue
             job.state = "running"
             try:
                 # rate limit was paid at submit; run the wrapper directly
+                t0 = time.perf_counter()
                 if self._serialize:
                     with self._predict_lock:
                         env = self.wrapper.predict_envelope(inp)
                 else:
                     env = self.wrapper.predict_envelope(inp)
+                self._observe_ttft(env)
                 self._count_request(_qos_field(qos, "priority"), env)
             except Exception as e:              # fault isolation per job
                 env = {"status": "error", "error": str(e),
                        "model_id": self.model_id}
-            self._finish_job(job, env)
+            usage = token_event = None
+            if env.get("status") == "ok":
+                latency_ms = round((time.perf_counter() - t0) * 1e3, 3)
+                usage = self._sync_usage(env, latency_ms)
+                token_event = self._sync_token_event(env)
+            # a cancel that races this completion is resolved inside
+            # _finish_job under the jobs lock: the record can never flip
+            # to 'done' after cancel_job answered "cancelled", and the
+            # whole-result token event is only pushed if the result stands
+            self._finish_job(job, env, usage=usage, token_event=token_event)
 
     def close(self):
         with self._job_cv:
@@ -360,6 +647,12 @@ class _Work:
     job: Optional[Job] = None
     request: Optional[Any] = None     # scheduler Request once admitted
     envelope: Optional[Dict[str, Any]] = None
+    # streaming plumbing: ``push(token_ids, text)`` forwards a chunk's
+    # tokens, ``notify(envelope, usage)`` delivers the terminal result —
+    # both run on the scheduler worker thread and must not block it
+    push: Optional[Callable] = None
+    notify: Optional[Callable] = None
+    last_tok_t: Optional[float] = None   # previous sync-point timestamp
 
 
 @dataclass
@@ -369,6 +662,7 @@ class BatchStats:
     submitted: int = 0
     completed: int = 0
     rejected: int = 0                 # queue-full + rate-limited at submit
+    cancelled: int = 0                # user cancel / disconnect / abandon
 
 
 class BatchedService(InferenceService):
@@ -399,7 +693,8 @@ class BatchedService(InferenceService):
     def __init__(self, wrapper: MAXModelWrapper, *,
                  batch_window_s: float = 0.01, max_queue: int = 64,
                  request_timeout_s: float = 300.0,
-                 decode_chunk: Optional[int] = None, **kw):
+                 decode_chunk: Optional[int] = None,
+                 stream_queue_depth: int = 256, **kw):
         if not wrapper.supports_generation():
             raise ValueError(
                 f"{wrapper.metadata.id!r} does not implement the generation "
@@ -416,6 +711,10 @@ class BatchedService(InferenceService):
         self.batch_window_s = batch_window_s
         self.max_queue = self.qos_cfg.max_queue
         self.request_timeout_s = request_timeout_s
+        # bounded bridge between the scheduler worker and a stream's HTTP
+        # thread: at ~1 event per decode chunk this holds minutes of
+        # backlog, so hitting the bound means the consumer is gone
+        self.stream_queue_depth = stream_queue_depth
         self.batch_stats = BatchStats()
         self._inflight: Dict[int, _Work] = {}
         self._cv = threading.Condition()
@@ -431,7 +730,9 @@ class BatchedService(InferenceService):
     # -- request path ------------------------------------------------------
 
     def _enqueue(self, inp: Any, job: Optional[Job] = None,
-                 qos: Optional[Dict[str, Any]] = None) -> _Work:
+                 qos: Optional[Dict[str, Any]] = None,
+                 push: Optional[Callable] = None,
+                 notify: Optional[Callable] = None) -> _Work:
         prompt, gen_kw, extra = self.wrapper.prepare_generation(inp)
         # reject here, on the request thread: a raise inside the worker's
         # tick would fail every request sharing the decode batch
@@ -440,7 +741,30 @@ class BatchedService(InferenceService):
                 f"prompt of {len(prompt)} tokens does not fit max_seq "
                 f"{self.engine.max_seq}")
         work = _Work(inp=inp, prompt=prompt, gen_kw=gen_kw, extra=extra,
-                     t0=time.perf_counter(), job=job)
+                     t0=time.perf_counter(), job=job,
+                     push=push, notify=notify)
+
+        def sink(toks: List[int]):
+            # runs at the scheduler's per-chunk sync point (worker thread,
+            # scheduler lock held): record per-token pacing, then forward.
+            # TTFT rides Request.first_token_s (stamped by the scheduler)
+            # so queue wait is included; the gap/len(toks) sample is the
+            # chunk's mean inter-token interval.
+            now = time.perf_counter()
+            if work.last_tok_t is None:
+                self.metrics.observe("max_ttft_seconds", now - work.t0,
+                                     model=self.model_id)
+            else:
+                self.metrics.histogram(
+                    "max_inter_token_seconds",
+                    buckets=TOKEN_LATENCY_BUCKETS,
+                    model=self.model_id,
+                ).observe((now - work.last_tok_t) / len(toks))
+            work.last_tok_t = now
+            if work.push is not None:
+                work.push(list(toks),
+                          self.wrapper.format_stream_delta(toks))
+
         with self._cv:
             if self._closed:
                 raise MAXError(f"service for {self.model_id!r} is closed")
@@ -450,6 +774,7 @@ class BatchedService(InferenceService):
                     priority=_qos_field(qos, "priority"),
                     client=_qos_field(qos, "client"),
                     deadline_s=_qos_field(qos, "deadline_s"),
+                    token_sink=sink,
                     **gen_kw)
             except QueueFull as e:
                 self.batch_stats.rejected += 1
@@ -504,8 +829,15 @@ class BatchedService(InferenceService):
     def submit_job(self, inp: Any,
                    qos: Optional[Dict[str, Any]] = None) -> Job:
         job = self._new_job()
+
+        def push(toks: List[int], text: Optional[str]):
+            # feeds the job's replay buffer at each chunk boundary, so any
+            # number of /v2/jobs/{id}/events subscribers can attach/resume
+            job.stream.push("token", {"token_ids": toks, "text": text,
+                                      "model_id": self.model_id})
+
         try:
-            self._enqueue(inp, job=job, qos=qos)
+            self._enqueue(inp, job=job, qos=qos, push=push)
         except (MAXError, AdmissionError):
             # bad input / full queue / rate limit is a submit-time failure:
             # surface it as the HTTP error (429/400), not a 202 with a
@@ -516,11 +848,138 @@ class BatchedService(InferenceService):
             raise
         return job
 
+    def cancel_job(self, job_id: str) -> bool:
+        """Cancel via the scheduler: queued work is dropped from admission,
+        a running slot is freed at the next chunk boundary (and backfilled
+        from the queue in the same tick). The worker reaps the retired
+        request and flips the job to ``cancelled``."""
+        with self._cv:
+            work = next((w for w in self._inflight.values()
+                         if w.job is not None and w.job.id == job_id), None)
+        if work is None or work.request is None:
+            return False
+        return self.scheduler.cancel(work.request.id)
+
+    def predict_stream(self, inp: Any,
+                       qos: Optional[Dict[str, Any]] = None
+                       ) -> Iterator[StreamEvent]:
+        """Live token stream for one input.
+
+        The scheduler worker feeds a *bounded* queue at each chunk
+        boundary; this generator (the HTTP thread) drains it. End-to-end
+        cancellation:
+
+        - closing the generator mid-stream (client disconnect) cancels the
+          scheduler request — the decode slot frees at the next chunk
+          boundary and backfills;
+        - a consumer that stops draining (``stream_queue_depth`` events of
+          backlog) is treated as abandoned and cancelled the same way;
+        - admission rejection (rate limit / queue full / bad input)
+          arrives as a pre-stream ``error`` event with its structured code.
+        """
+        def gen():
+            bridge: _queue.Queue = _queue.Queue(
+                maxsize=self.stream_queue_depth)
+            box: Dict[str, Any] = {}
+
+            def push(toks: List[int], text: Optional[str]):
+                try:
+                    bridge.put_nowait(
+                        ("token", {"token_ids": toks, "text": text,
+                                   "model_id": self.model_id}))
+                except _queue.Full:
+                    # abandoned consumer: free the slot instead of
+                    # decoding into a queue nobody drains
+                    req = box.get("request")
+                    if req is not None:
+                        self.scheduler.cancel(req.id)
+
+            def notify(env, usage):
+                event, data = self._terminal_event_data(env, usage)
+                try:
+                    bridge.put_nowait((event, data))
+                except _queue.Full:     # guarantee the terminal lands
+                    try:
+                        bridge.get_nowait()
+                    except _queue.Empty:
+                        pass
+                    bridge.put_nowait((event, data))
+
+            self._stream_opened()
+            cancelled = False
+            seq = 0
+            try:
+                try:
+                    work = self._enqueue(inp, qos=qos,
+                                         push=push, notify=notify)
+                except ServiceOverloaded as e:
+                    yield StreamEvent("error", {
+                        "code": "QUEUE_FULL", "message": str(e),
+                        "model_id": self.model_id}, seq)
+                    return
+                except AdmissionError as e:
+                    yield StreamEvent("error", {
+                        "code": e.code, "message": str(e),
+                        "model_id": self.model_id}, seq)
+                    return
+                except MAXError as e:
+                    yield StreamEvent("error", {
+                        "code": "INVALID_INPUT", "message": str(e),
+                        "model_id": self.model_id}, seq)
+                    return
+                box["request"] = work.request
+                try:
+                    while True:
+                        try:
+                            event, data = bridge.get(
+                                timeout=self.request_timeout_s)
+                        except _queue.Empty:
+                            self.scheduler.cancel(work.request.id)
+                            cancelled = True
+                            yield StreamEvent("error", {
+                                "code": "TIMEOUT",
+                                "message": "no tokens for "
+                                           f"{self.request_timeout_s}s",
+                                "model_id": self.model_id}, seq)
+                            return
+                        ev = StreamEvent(event, data, seq)
+                        seq += 1
+                        yield ev
+                        if event != "token":     # done | error: terminal
+                            cancelled = data.get("code") == "CANCELLED" \
+                                if event == "error" else False
+                            return
+                except GeneratorExit:
+                    # consumer went away mid-stream: never pin the slot
+                    if not work.event.is_set():
+                        self.scheduler.cancel(work.request.id)
+                    cancelled = True
+                    raise
+            finally:
+                self._stream_closed(cancelled=cancelled)
+        return gen()
+
     # -- worker ------------------------------------------------------------
+
+    def _usage(self, work: _Work) -> Dict[str, Any]:
+        req = work.request
+        ttft_ms = None
+        if req is not None and req.first_token_s is not None:
+            ttft_ms = round((req.first_token_s - work.t0) * 1e3, 3)
+        return {"prompt_tokens": len(work.prompt),
+                "completion_tokens": len(req.output) if req else 0,
+                "ttft_ms": ttft_ms,
+                "latency_ms": round(
+                    (time.perf_counter() - work.t0) * 1e3, 3)}
 
     def _finalize(self, work: _Work):
         req = work.request
-        if req.error_code is not None:          # shed by the controller
+        if req.error_code == "CANCELLED":
+            # user cancel / client disconnect: a first-class outcome, not
+            # an error — partial output is dropped, the slot already freed
+            env = {"status": "cancelled", "code": "CANCELLED",
+                   "error": req.error, "model_id": self.model_id}
+        elif req.error_code is not None:        # shed by the controller
             env = self._error_envelope(req.error, req.error_code)
         else:
             try:
@@ -535,14 +994,22 @@ class BatchedService(InferenceService):
             except MAXError as e:
                 env = self._error_envelope(str(e))
         work.envelope = env
-        if req.error_code != "DEADLINE_EXCEEDED":
+        if req.error_code == "CANCELLED":
+            self.batch_stats.cancelled += 1
+        elif req.error_code != "DEADLINE_EXCEEDED":
             # shed work never ran — it shows up under 'shed', not
             # 'completed' (keeps service and scheduler counts reconciled)
             self.batch_stats.completed += 1
         self._count_request(req.priority, env)
+        usage = self._usage(work)
         if work.job is not None:
-            self._finish_job(work.job, env)
+            self._finish_job(work.job, env, usage=usage)
         work.event.set()
+        if work.notify is not None:
+            try:
+                work.notify(env, usage)
+            except Exception:
+                pass
 
     def _reap(self):
         """Finalize done requests; flip jobs of admitted work to running."""
@@ -566,6 +1033,11 @@ class BatchedService(InferenceService):
             if work.job is not None:
                 self._finish_job(work.job, work.envelope)
             work.event.set()
+            if work.notify is not None:          # release stream consumers
+                try:
+                    work.notify(work.envelope, None)
+                except Exception:
+                    pass
 
     def _worker(self):
         while True:
@@ -611,6 +1083,9 @@ class BatchedService(InferenceService):
             "submitted": bs.submitted,
             "completed": bs.completed,
             "rejected": bs.rejected,
+            # every CANCELLED retire (jobs, streams, disconnects) — a
+            # superset of the base class's job-only count
+            "cancelled": bs.cancelled,
             "shed": ss.shed,
             "decode_steps": ss.decode_steps,
             "decode_chunks": ss.chunks,

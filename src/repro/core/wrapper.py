@@ -137,6 +137,14 @@ class MAXModelWrapper(abc.ABC):
         """Generated token ids -> the wrapper's JSON predictions."""
         raise NotImplementedError
 
+    def format_stream_delta(self, token_ids: List[int]) -> Optional[str]:
+        """Best-effort text rendering of a *partial* token chunk for
+        streaming ``token`` events (``None`` when the wrapper has no
+        incremental text form — clients always get the raw ids). Called
+        at the decode loop's sync point: must be cheap and side-effect
+        free."""
+        return None
+
     # -- optional endpoints -----------------------------------------------------
 
     def labels(self) -> List[str]:

@@ -54,6 +54,10 @@ class GenerationResult:
     steps: int
     finished: bool
     latency_s: float = 0.0
+    # time-to-first-token, measured at the first host sync that revealed a
+    # token (None on paths that don't time it, e.g. format_generation's
+    # synthetic results) — lets the sync service report real TTFT
+    first_token_s: Optional[float] = None
 
 
 class GenerationEngine:
@@ -319,6 +323,7 @@ class GenerationEngine:
             first = int(f)
             outs[i].append(first)
             last_tok[i] = first
+        t_first = time.perf_counter() - t0        # all prefills + first toks
         done = [False] * len(prompts)
         capped = [False] * len(prompts)
         for step in range(max_new_tokens - 1):
@@ -350,6 +355,6 @@ class GenerationEngine:
             results.append(GenerationResult(
                 tokens=outs[i], prompt_len=len(p), steps=len(outs[i]),
                 finished=finished and not capped[i],   # capacity-truncated
-                latency_s=dt))
+                latency_s=dt, first_token_s=t_first))
             self.release_slot(i)
         return results

@@ -30,6 +30,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
                    0.5, 1.0, 2.5, 5.0, 10.0, 30.0)
 
+# sub-millisecond resolution for per-token pacing (inter-token gaps sit
+# well under the latency buckets on a real accelerator)
+TOKEN_LATENCY_BUCKETS = (0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005,
+                         0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 5.0)
+
 LabelKey = Tuple[Tuple[str, str], ...]
 
 
@@ -141,12 +146,16 @@ class MetricsRegistry:
     def inc(self, name: str, n: float = 1.0, **labels):
         self.counter(name, **labels).inc(n)
 
-    def histogram(self, name: str, **labels) -> Histogram:
+    def histogram(self, name: str,
+                  buckets: Optional[Tuple[float, ...]] = None,
+                  **labels) -> Histogram:
+        """``buckets`` only applies on first creation of the series
+        (identity is name+labels; bounds cannot change under live data)."""
         key = (name, _label_key(labels))
         with self._lock:
             h = self._hists.get(key)
             if h is None:
-                h = self._hists[key] = Histogram()
+                h = self._hists[key] = Histogram(buckets or DEFAULT_BUCKETS)
         return h
 
     def observe(self, name: str, value: float, **labels):

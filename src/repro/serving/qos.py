@@ -303,17 +303,22 @@ class AdmissionController:
     # -- dequeue path (scheduler worker) ----------------------------------
 
     def _sweep_expired(self, now: float) -> List[Ticket]:
-        """Drop every expired ticket (lock held)."""
+        """Drop every expired or cancelled ticket (lock held). Cancellation
+        is duck-typed off ``item.cancelled`` so this module stays importable
+        without the scheduler — only the deadline-expired tickets count
+        toward ``shed_total`` (the caller tells them apart the same way)."""
+
+        def dead(t: Ticket) -> bool:
+            return (getattr(t.item, "cancelled", False)
+                    or (t.deadline is not None and t.deadline <= now))
+
         shed: List[Ticket] = []
         for cls, by_client in self._queues.items():
             for client in list(by_client):
                 q = by_client[client]
-                kept = deque(t for t in q
-                             if t.deadline is None or t.deadline > now)
+                kept = deque(t for t in q if not dead(t))
                 if len(kept) != len(q):
-                    shed.extend(t for t in q
-                                if t.deadline is not None
-                                and t.deadline <= now)
+                    shed.extend(t for t in q if dead(t))
                     self._depth_by_class[cls] -= len(q) - len(kept)
                     by_client[client] = kept
                     if not kept:
@@ -323,7 +328,8 @@ class AdmissionController:
                         except ValueError:
                             pass
                         self._deficit.pop((cls, client), None)
-        self.shed_total += len(shed)
+        self.shed_total += sum(
+            1 for t in shed if not getattr(t.item, "cancelled", False))
         return shed
 
     def _pick_class(self) -> str:
@@ -396,9 +402,10 @@ class AdmissionController:
         """Dequeue up to ``k`` tickets in QoS order.
 
         Returns ``(admitted, shed)`` — ``shed`` are deadline-expired
-        tickets the caller must fail with ``DEADLINE_EXCEEDED``. Expired
-        work is swept even when ``k == 0`` so a full decode batch cannot
-        make doomed work rot in queue.
+        tickets the caller must fail with ``DEADLINE_EXCEEDED``, plus
+        cancelled ones (``item.cancelled``) it must retire as
+        ``CANCELLED``. Expired/cancelled work is swept even when ``k == 0``
+        so a full decode batch cannot make doomed work rot in queue.
         """
         now = self._clock()
         admitted: List[Ticket] = []
@@ -411,7 +418,9 @@ class AdmissionController:
                                  max(0.0, now - t.enqueued_at),
                                  **self._labels(t.priority))
         for t in shed:
-            self.metrics.inc("max_shed_total", 1, **self._labels(t.priority))
+            if not getattr(t.item, "cancelled", False):
+                self.metrics.inc("max_shed_total", 1,
+                                 **self._labels(t.priority))
         return admitted, shed
 
     # -- introspection -----------------------------------------------------

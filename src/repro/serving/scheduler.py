@@ -24,6 +24,15 @@ admission cost is charged as ``max_new_tokens`` instead of a flat 1 —
 long generations are priced honestly by the token buckets and the DRR
 fairness quantum alike.
 
+Streaming and cancellation ride the same chunk boundaries: each
+:class:`Request` may carry a ``token_sink`` fed at the tick's single sync
+point with exactly the tokens that sync revealed (no extra host syncs),
+``first_token_s`` is stamped at the request's first sync, and
+``cancel(request_id)`` drops queued work from admission (never touching a
+slot) or frees a running slot at the next chunk boundary — freed slots
+backfill in the same tick, and cancelled requests retire with
+``error_code='CANCELLED'``.
+
 Invariants (property-tested):
 - a slot is never double-occupied;
 - admission never starves: FIFO is arrival order; under QoS every
@@ -68,11 +77,18 @@ class Request:
     # QoS identity (set when submitted through an AdmissionController)
     priority: str = "batch"
     client: str = "anon"
+    # per-chunk token sink: called at the tick's sync point with the tokens
+    # the chunk produced for this request (the streaming surface rides this
+    # — no extra host syncs). Runs under the scheduler lock on the worker
+    # thread, so it must be O(1) and non-blocking; exceptions are swallowed.
+    token_sink: Optional[Any] = None
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
     slot: int = -1
     admitted_at_tick: int = -1
     finished_at_tick: int = -1
+    first_token_s: Optional[float] = None  # perf_counter at first sync point
+    cancelled: bool = False                # set via Scheduler.cancel()
     error: Optional[str] = None
     error_code: Optional[str] = None      # e.g. DEADLINE_EXCEEDED when shed
 
@@ -90,6 +106,7 @@ class SchedulerStats:
     emitted_tokens: int = 0
     completed: int = 0
     shed: int = 0                     # deadline-expired, never ran
+    cancelled: int = 0                # cancelled while queued or running
     cache_overflows: int = 0          # retired with MAX_SEQ_EXCEEDED
     wall_s: float = 0.0               # accrued per tick (run() adds nothing)
     occupancy_sum: int = 0            # sum of active-batch sizes per decode
@@ -133,6 +150,11 @@ class ContinuousBatchingScheduler:
         # server lifetime
         self.retain_completed = retain_completed
         self._completed: Dict[int, Request] = {}
+        # id -> every not-yet-retired request (queued OR active), so
+        # cancel() can find work wherever it currently lives. Inserted by
+        # submit (lock-free: dict setitem is atomic under the GIL, same
+        # contract as the FIFO deque), removed at retire under the lock.
+        self._pending: Dict[int, Request] = {}
         self.stats = SchedulerStats()
 
     @property
@@ -145,11 +167,15 @@ class ContinuousBatchingScheduler:
                extra: Optional[Dict[str, Any]] = None,
                priority: Optional[str] = None,
                client: Optional[str] = None,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               token_sink: Optional[Any] = None) -> Request:
         """Enqueue a request. With an admission controller attached this
         may raise a :class:`~repro.serving.qos.AdmissionError`
         (rate-limited / queue-full) on the *submitting* thread — rejection
         must never reach the decode loop.
+
+        ``token_sink`` is installed before the request becomes visible to
+        the decode loop, so a streaming caller never misses tokens.
 
         Deliberately does NOT take the scheduler lock: ``tick`` holds it
         across a whole engine decode chunk, and request threads must not
@@ -157,16 +183,37 @@ class ContinuousBatchingScheduler:
         atomic ``itertools.count``; the controller and the FIFO deque have
         their own synchronization."""
         req = Request(next(self._ids), list(prompt), max_new_tokens,
-                      temperature, extra)
+                      temperature, extra, token_sink=token_sink)
+        self._pending[req.id] = req
         if self.admission is not None:
-            ticket = self.admission.submit(
-                req, priority=priority, client=client,
-                cost=self.admission.cfg.request_cost(max_new_tokens),
-                deadline_s=deadline_s)
+            try:
+                ticket = self.admission.submit(
+                    req, priority=priority, client=client,
+                    cost=self.admission.cfg.request_cost(max_new_tokens),
+                    deadline_s=deadline_s)
+            except Exception:
+                self._pending.pop(req.id, None)   # rejected: nothing to cancel
+                raise
             req.priority, req.client = ticket.priority, ticket.client
         else:
             self.queue.append(req)      # deque.append is atomic
         return req
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a queued or running request.
+
+        Marks the request; the decode loop honors the mark at its next
+        boundary — a queued request is dropped from admission without ever
+        touching a slot, a running one frees its slot at the next chunk
+        boundary (and its partial output stays on the request). Both retire
+        with ``error_code='CANCELLED'``. Returns False when the request is
+        unknown or already finished (cancellation raced completion)."""
+        with self._lock:
+            req = self._pending.get(request_id)
+            if req is None or req.done:
+                return False
+            req.cancelled = True
+        return True
 
     def poll(self, request_id: int) -> Optional[Request]:
         """Completed request by id, else None (still queued/active)."""
@@ -190,16 +237,46 @@ class ContinuousBatchingScheduler:
     def _retire(self, req: Request):
         req.finished_at_tick = self.stats.ticks
         req.extra = None              # may pin large arrays (image embeds…)
+        self._pending.pop(req.id, None)
         self._completed[req.id] = req
         while len(self._completed) > self.retain_completed:
             self._completed.pop(next(iter(self._completed)))
 
     def _shed(self, req: Request):
+        if req.cancelled:             # cancelled while queued: its own code
+            self._cancel_retire(req)
+            return
         req.error = ("deadline exceeded while queued "
                      f"(waited for a decode slot, class {req.priority!r})")
         req.error_code = "DEADLINE_EXCEEDED"
         self._retire(req)
         self.stats.shed += 1
+
+    def _cancel_retire(self, req: Request):
+        """Retire a cancelled request (queued: never ran; active: caller
+        releases the slot first). Partial output stays on the request."""
+        req.error = (f"cancelled after {len(req.output)} generated tokens"
+                     if req.output else "cancelled before starting")
+        req.error_code = "CANCELLED"
+        self._retire(req)
+        self.stats.cancelled += 1
+
+    def _sweep_cancelled(self):
+        """Honor cancellation marks — runs at the top of the tick, BEFORE
+        admission, so a slot freed by a running cancel backfills this very
+        tick. Queued FIFO work is swept in place (the admission-controller
+        path sweeps inside ``take``)."""
+        for req in [r for r in self.active.values() if r.cancelled]:
+            self.engine.release_slot(req.slot)
+            del self.active[req.slot]
+            self._cancel_retire(req)
+        if self.admission is None and any(r.cancelled for r in self.queue):
+            for _ in range(len(self.queue)):      # one stable rotation
+                req = self.queue.popleft()
+                if req.cancelled:
+                    self._cancel_retire(req)
+                else:
+                    self.queue.append(req)
 
     def _place(self, req: Request, slot: int):
         """Dispatch prefill + on-device first token; no host sync here —
@@ -216,18 +293,24 @@ class ContinuousBatchingScheduler:
         free = self.engine.free_slots()
         if self.admission is not None:
             # controller decides order; it also sweeps deadline-expired
-            # work even when no slot is free (k == 0) so doomed requests
-            # fail promptly instead of rotting behind a full batch
+            # and cancelled work even when no slot is free (k == 0) so
+            # doomed requests fail promptly instead of rotting behind a
+            # full batch
             tickets, shed = self.admission.take(len(free))
             for t in shed:
                 self._shed(t.item)
             for t in tickets:
+                if t.item.cancelled:              # raced the sweep
+                    self._cancel_retire(t.item)
+                    continue
                 self._place(t.item, free.pop(0))
             return
         while free and self.queue:
-            slot = free.pop(0)
             req = self.queue.popleft()            # FIFO: no starvation
-            self._place(req, slot)
+            if req.cancelled:                     # dropped without a slot
+                self._cancel_retire(req)
+                continue
+            self._place(req, free.pop(0))
 
     def _maybe_finish(self, req: Request):
         eos = self.engine.eos_id
@@ -257,12 +340,24 @@ class ContinuousBatchingScheduler:
         self.stats.completed += 1
         self.stats.cache_overflows += 1
 
+    def _feed_sink(self, req: Request, tokens: List[int]):
+        """Per-chunk token delivery + first-token timestamp, at the sync
+        point. A sink fault must never poison the co-batch's tick."""
+        if req.first_token_s is None:
+            req.first_token_s = time.perf_counter()
+        if req.token_sink is not None:
+            try:
+                req.token_sink(tokens)
+            except Exception:
+                pass
+
     def _resolve_pending_first(self):
         """The deferred host reads for this tick's admissions (the decode
         chunk for previously-active slots is already in flight)."""
         for req, first in self._pending_first:
             req.output.append(int(first))
             self.stats.emitted_tokens += 1
+            self._feed_sink(req, [int(first)])
         self._pending_first.clear()
 
     def tick(self):
@@ -272,6 +367,7 @@ class ContinuousBatchingScheduler:
         however many tokens the chunk produced."""
         t0 = time.perf_counter()
         with self._lock:
+            self._sweep_cancelled()
             self._admit()
             toks = emitted = None
             if self.active:
@@ -310,8 +406,11 @@ class ContinuousBatchingScheduler:
                                                int(per_step.max(initial=0)))
                 for slot, req in list(self.active.items()):
                     n = int(counts[slot])
-                    req.output.extend(int(t) for t in toks[slot, :n])
-                    self.stats.emitted_tokens += n
+                    if n:
+                        chunk_toks = [int(t) for t in toks[slot, :n]]
+                        req.output.extend(chunk_toks)
+                        self.stats.emitted_tokens += n
+                        self._feed_sink(req, chunk_toks)
                     self._maybe_finish(req)
                     if not req.done and self.engine.capacity_left(slot) <= 0:
                         self._overflow(req)

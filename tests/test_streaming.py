@@ -1,0 +1,394 @@
+"""Streaming v2 surface: SSE framing + token identity, job event replay
+and Last-Event-ID resume, and end-to-end cancellation (DELETE on running
+jobs, client disconnect, abandoned-consumer backpressure) — each cancel
+must free its decode slot at a chunk boundary and let queued work backfill.
+"""
+
+import json
+import socket
+import struct
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.core import BatchedService, EXCHANGE, MAXServer, QoSConfig
+
+BUILD_KW = {"max_seq": 256, "max_batch": 2}
+SERVICE_KW = {"batch_window_s": 0.01}
+MODEL = "qwen3-4b"
+
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw=BUILD_KW, service_kw=SERVICE_KW) as s:
+        yield s
+
+
+def _post(server, path, payload):
+    req = urllib.request.Request(server.url + path,
+                                 json.dumps(payload).encode(),
+                                 {"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _open_sse(server, method, path, payload=None, headers=None):
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(headers or {})
+    data = json.dumps(payload).encode() if payload is not None else None
+    req = urllib.request.Request(server.url + path, data, hdrs,
+                                 method=method)
+    return urllib.request.urlopen(req)
+
+
+def _read_sse(resp):
+    """Parse a complete SSE response into [{'id', 'event', 'data'}, ...]."""
+    events, cur = [], {}
+    for raw in resp:
+        line = raw.decode().rstrip("\n")
+        if not line:
+            if cur:
+                events.append(cur)
+                cur = {}
+            continue
+        key, _, val = line.partition(": ")
+        cur[key] = json.loads(val) if key == "data" else val
+    if cur:
+        events.append(cur)
+    return events
+
+
+def _wait(predicate, timeout_s=20.0, every=0.02):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(every)
+    return False
+
+
+# -- SSE framing + token identity --------------------------------------------
+
+def test_stream_framing_and_token_identity(server):
+    """Acceptance: the stream's concatenated token ids are token-identical
+    to the non-streaming predict output (greedy, same prompt), seq ids are
+    monotone from 0, and the terminal done envelope matches the poll-path
+    envelope."""
+    inp = {"input": {"text": "stream me", "max_new_tokens": 12}}
+    code, ref = _post(server, f"/v2/model/{MODEL}/predict", inp)
+    assert code == 200 and ref["status"] == "ok"
+
+    with _open_sse(server, "POST", f"/v2/model/{MODEL}/stream", inp) as r:
+        assert r.headers["Content-Type"] == "text/event-stream"
+        events = _read_sse(r)
+
+    assert [int(e["id"]) for e in events] == list(range(len(events)))
+    assert [e["event"] for e in events[:-1]] == \
+        ["token"] * (len(events) - 1)
+    assert events[-1]["event"] == "done"
+
+    from repro.data.tokenizer import TOKENIZER
+    ids = [t for e in events[:-1] for t in e["data"]["token_ids"]]
+    assert TOKENIZER.decode(ids) == ref["predictions"][0]["generated_text"]
+
+    done = events[-1]["data"]
+    assert done["envelope"]["predictions"] == ref["predictions"]
+    usage = done["usage"]
+    assert usage["completion_tokens"] == len(ids)
+    assert usage["ttft_ms"] is not None
+    assert usage["ttft_ms"] <= usage["latency_ms"]
+
+
+def test_stream_validation_errors_stay_json(server):
+    """Input/model validation fails before the stream opens — plain JSON
+    4xx, not a 200 SSE body."""
+    code, env = _post(server, f"/v2/model/{MODEL}/stream", {})
+    assert code == 400 and env["error"]["code"] == "MISSING_INPUT"
+    code, env = _post(server, "/v2/model/nope/stream", {"input": "x"})
+    assert code == 404 and env["error"]["code"] == "MODEL_NOT_FOUND"
+
+
+def test_qos_rejection_arrives_as_pre_stream_error_event():
+    """Admission rejection (rate limit) surfaces as `event: error` with its
+    structured code before any token event."""
+    svc = BatchedService(EXCHANGE.get(MODEL).build(max_seq=64, max_batch=2),
+                         qos=QoSConfig(rate=0.001, burst=1.0))
+    try:
+        ok = svc.predict({"text": "drain the bucket", "max_new_tokens": 2})
+        assert ok["status"] == "ok"
+        events = list(svc.predict_stream({"text": "rejected",
+                                          "max_new_tokens": 2}))
+        assert len(events) == 1
+        assert events[0].event == "error"
+        assert events[0].data["code"] == "RATE_LIMITED"
+    finally:
+        svc.close()
+
+
+# -- job event streams: replay + resume --------------------------------------
+
+def test_job_events_replay_and_last_event_id_resume(server):
+    code, sub = _post(server, f"/v2/model/{MODEL}/jobs",
+                      {"input": {"text": "job stream",
+                                 "max_new_tokens": 10}})
+    assert code == 202
+    job_id = sub["job"]["id"]
+    # wait for completion, then attach (full replay from the buffer)
+    def done():
+        with _open_sse(server, "GET", f"/v2/jobs/{job_id}") as r:
+            return json.loads(r.read())["job"]["state"] == "done"
+    assert _wait(done, 30)
+
+    with _open_sse(server, "GET", f"/v2/jobs/{job_id}/events") as r:
+        full = _read_sse(r)
+    assert [int(e["id"]) for e in full] == list(range(len(full)))
+    assert full[-1]["event"] == "done"
+    assert all(e["event"] == "token" for e in full[:-1])
+    ids = [t for e in full[:-1] for t in e["data"]["token_ids"]]
+    assert len(ids) == 10
+
+    # Last-Event-ID resume: exactly the events after the cursor
+    cursor = full[1]["id"]
+    with _open_sse(server, "GET", f"/v2/jobs/{job_id}/events",
+                   headers={"Last-Event-ID": cursor}) as r:
+        resumed = _read_sse(r)
+    assert resumed == full[2:]
+
+    # ?from_seq= resume is inclusive
+    with _open_sse(server, "GET",
+                   f"/v2/jobs/{job_id}/events?from_seq={cursor}") as r:
+        resumed = _read_sse(r)
+    assert resumed == full[1:]
+
+
+def test_job_events_unknown_job_404(server):
+    try:
+        with _open_sse(server, "GET", "/v2/jobs/deadbeef/events") as r:
+            raise AssertionError(f"expected 404, got {r.status}")
+    except urllib.error.HTTPError as e:
+        assert e.code == 404
+        assert json.loads(e.read())["error"]["code"] == "JOB_NOT_FOUND"
+
+
+# -- cancellation ------------------------------------------------------------
+
+def test_delete_cancels_running_job_and_frees_slot():
+    """Acceptance: cancelling a running job frees its decode slot at the
+    next chunk boundary — a waiting request backfills into the freed slot
+    and completes; the job record reports state 'cancelled'."""
+    svc = BatchedService(EXCHANGE.get(MODEL).build(max_seq=512, max_batch=1),
+                         batch_window_s=0.0)
+    try:
+        svc.predict({"text": "warm", "max_new_tokens": 2})
+        job = svc.submit_job({"text": "long", "max_new_tokens": 400})
+        assert _wait(lambda: job.stream.closed
+                     or len(job.stream._buf) > 0, 20), "job never started"
+        # the only slot is held; this predict queues behind it
+        waiter = {}
+        th = threading.Thread(target=lambda: waiter.update(
+            env=svc.predict({"text": "backfill", "max_new_tokens": 3})))
+        th.start()
+        time.sleep(0.1)
+        assert svc.cancel_job(job.id) is True
+        th.join(timeout=30)
+        assert waiter["env"]["status"] == "ok", waiter
+        assert _wait(lambda: job.state == "cancelled", 10), job.state
+        assert job.result["status"] == "cancelled"
+        assert job.result["code"] == "CANCELLED"
+        assert svc.scheduler.stats.cancelled == 1
+        assert svc.stats()["cancelled"] == 1
+        # terminal stream event carries the structured code
+        tail = list(job.stream.subscribe(0, timeout_s=2))[-1]
+        assert tail.event == "error" and tail.data["code"] == "CANCELLED"
+        # slot actually freed
+        assert len(svc.engine.free_slots()) == svc.engine.max_batch
+    finally:
+        svc.close()
+
+
+def test_delete_cancels_queued_job_without_touching_a_slot():
+    svc = BatchedService(EXCHANGE.get(MODEL).build(max_seq=256, max_batch=1),
+                         batch_window_s=0.0)
+    try:
+        svc.predict({"text": "warm", "max_new_tokens": 2})
+        running = svc.submit_job({"text": "holds the slot",
+                                  "max_new_tokens": 120})
+        queued = svc.submit_job({"text": "never runs",
+                                 "max_new_tokens": 120})
+        assert svc.cancel_job(queued.id) is True
+        assert _wait(lambda: queued.state == "cancelled", 10)
+        assert queued.result["status"] == "cancelled"
+        # the queued job generated nothing before the cancel
+        assert not any(e.event == "token"
+                       for e in queued.stream.subscribe(0, timeout_s=1))
+        assert _wait(lambda: running.state in ("done", "error"), 30)
+        assert running.state == "done"
+    finally:
+        svc.close()
+
+
+def test_http_delete_on_running_job_reports_cancelled(server):
+    code, sub = _post(server, f"/v2/model/{MODEL}/jobs",
+                      {"input": {"text": "cancel me",
+                                 "max_new_tokens": 200}})
+    assert code == 202
+    job_id = sub["job"]["id"]
+
+    def state():
+        with _open_sse(server, "GET", f"/v2/jobs/{job_id}") as r:
+            return json.loads(r.read())["job"]
+    assert _wait(lambda: state()["state"] in ("running", "done"), 20)
+
+    req = urllib.request.Request(server.url + f"/v2/jobs/{job_id}",
+                                 method="DELETE")
+    with urllib.request.urlopen(req) as r:
+        out = json.loads(r.read())
+    if "cancelled" in out:                       # beat the generation
+        assert out["cancelled"] == job_id
+        assert _wait(lambda: state()["state"] == "cancelled", 10)
+        assert state()["result"]["status"] == "cancelled"
+    else:                                        # raced completion: deleted
+        assert out["deleted"] == job_id
+
+
+def test_generator_close_cancels_mid_stream():
+    """Closing the stream iterator (what the HTTP layer does on client
+    disconnect) cancels the request at the next chunk boundary."""
+    svc = BatchedService(EXCHANGE.get(MODEL).build(max_seq=512, max_batch=1),
+                         batch_window_s=0.0)
+    try:
+        svc.predict({"text": "warm", "max_new_tokens": 2})
+        gen = svc.predict_stream({"text": "abandoned",
+                                  "max_new_tokens": 400})
+        first = next(gen)
+        assert first.event == "token"
+        gen.close()
+        assert _wait(lambda: svc.scheduler.stats.cancelled == 1, 20)
+        assert _wait(lambda: len(svc.engine.free_slots())
+                     == svc.engine.max_batch, 10)
+        st = svc.stats()
+        assert st["streams"]["cancelled"] == 1
+        assert st["streams"]["active"] == 0
+    finally:
+        svc.close()
+
+
+def test_http_client_disconnect_cancels(server):
+    """Real-socket disconnect: the server's next SSE write fails, the
+    event iterator is closed, and the scheduler request is cancelled."""
+    svc = server.manager.get(MODEL).service
+    cancelled_before = svc.scheduler.stats.cancelled
+    body = json.dumps({"input": {"text": "walk away",
+                                 "max_new_tokens": 200}}).encode()
+    host, port = server._server.server_address[:2]
+    sock = socket.create_connection((host, port))
+    try:
+        sock.sendall(
+            f"POST /v2/model/{MODEL}/stream HTTP/1.1\r\n"
+            f"Host: {host}\r\nContent-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        buf = b""
+        while b"event: token" not in buf:        # stream is live
+            chunk = sock.recv(4096)
+            assert chunk, f"connection closed early: {buf!r}"
+            buf += chunk
+    finally:
+        # hard close: RST instead of FIN, so the server's next SSE write
+        # fails instead of buffering into a half-closed socket
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                        struct.pack("ii", 1, 0))
+        sock.close()
+    assert _wait(lambda: svc.scheduler.stats.cancelled > cancelled_before,
+                 30), "disconnect did not cancel the request"
+
+
+def test_abandoned_consumer_backpressure_cancels():
+    """A consumer that stops draining its bounded bridge queue is treated
+    as abandoned: the sink cancels the request instead of decoding into a
+    queue nobody reads."""
+    svc = BatchedService(EXCHANGE.get(MODEL).build(max_seq=512, max_batch=1),
+                         batch_window_s=0.0, stream_queue_depth=2)
+    try:
+        svc.predict({"text": "warm", "max_new_tokens": 2})
+        gen = svc.predict_stream({"text": "stalled",
+                                  "max_new_tokens": 400})
+        next(gen)                    # start the request, then stop draining
+        assert _wait(lambda: svc.scheduler.stats.cancelled == 1, 20), \
+            "backpressure never cancelled the abandoned stream"
+        gen.close()
+    finally:
+        svc.close()
+
+
+def test_sync_cancel_job_never_finishes_done():
+    """If cancel_job answered True, the record must end 'cancelled' even
+    when the cancel races the worker finishing the job — the authoritative
+    check runs under the jobs lock at finish time."""
+    from repro.core import SyncService
+    svc = SyncService(EXCHANGE.get("max-sentiment").build(max_seq=64,
+                                                          max_batch=2))
+    try:
+        for _ in range(5):               # a few spins at the race window
+            job = svc.submit_job(["cancel race"])
+            cancelled = svc.cancel_job(job.id)
+            assert _wait(lambda: job.state in ("done", "error", "cancelled"),
+                         10)
+            if cancelled:
+                assert job.state == "cancelled", job.state
+                assert job.result["status"] == "cancelled"
+            else:                        # raced completion: stayed done
+                assert job.state == "done"
+    finally:
+        svc.close()
+
+
+# -- sync-service fallback ---------------------------------------------------
+
+def test_sync_service_stream_is_whole_result_fallback(server):
+    """SyncService streams the whole result as one token event + done —
+    same event grammar, so clients don't care about the service kind."""
+    code, _ = _post(server, "/v2/model/max-sentiment/deploy",
+                    {"service": "sync"})
+    assert code == 200
+    with _open_sse(server, "POST", "/v2/model/max-sentiment/stream",
+                   {"input": ["lovely day"]}) as r:
+        events = _read_sse(r)
+    assert [e["event"] for e in events] == ["token", "done"]
+    preds = events[0]["data"]["predictions"]
+    assert set(preds[0][0]) == {"positive", "negative"}
+    done = events[1]["data"]
+    assert done["envelope"]["predictions"] == preds
+    assert done["usage"]["ttft_ms"] is not None
+
+    # errors arrive as structured error events
+    with _open_sse(server, "POST", "/v2/model/max-sentiment/stream",
+                   {"input": {"bad": 1}}) as r:
+        events = _read_sse(r)
+    assert len(events) == 1 and events[0]["event"] == "error"
+    assert events[0]["data"]["code"] == "INVALID_INPUT"
+
+
+def test_stats_surface_streaming_metrics(server):
+    code, stats = _post(server, f"/v2/model/{MODEL}/predict",
+                        {"input": {"text": "tick", "max_new_tokens": 2}})
+    assert code == 200
+    with _open_sse(server, "GET", f"/v2/model/{MODEL}/stats") as r:
+        svc = json.loads(r.read())["service"]
+    assert svc["streams"]["started"] >= 1
+    assert svc["ttft"]["count"] >= 1
+    assert "inter_token" in svc and "cancelled" in svc
+    # the registry renders the same series at /v2/metrics
+    with _open_sse(server, "GET", "/v2/metrics") as r:
+        metrics = json.loads(r.read())["metrics"]
+    assert any("max_ttft_seconds" in k for k in metrics["histograms"])
+    assert any("max_active_streams" in k for k in metrics["gauges"])
+    with _open_sse(server, "GET", "/v2/metrics?format=prometheus") as r:
+        text = r.read().decode()
+    assert "max_ttft_seconds" in text and "max_active_streams" in text
