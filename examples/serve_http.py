@@ -254,16 +254,65 @@ def stream_demo():
               f"ttft p50: {stats['ttft']['p50'] * 1e3:.1f}ms")
 
 
+def paged_demo():
+    """Paged KV cache: deploy with block-table memory, watch pool
+    occupancy track actual context instead of slot capacity, and see the
+    structured rejections (PROMPT_TOO_LONG / KV_POOL_EXHAUSTED)."""
+    with MAXServer(build_kw={"max_seq": 128, "max_batch": 4},
+                   auto_deploy=False) as server:
+        out = post(server.url, "/v2/model/deepseek-67b/deploy",
+                   {"service": "batched", "paged": True, "page_size": 16,
+                    "kv_pool_blocks": 32})
+        print("deployed with paged KV:", json.dumps(out["kv_cache"]))
+
+        # mixed-length co-batch: contiguous layout would charge every slot
+        # the full max_seq; the pool charges pages actually allocated
+        threads = []
+        for i in range(4):
+            text = ("long context " * 7) if i == 0 else f"short {i}"
+            th = threading.Thread(
+                target=post, args=(server.url,
+                                   "/v2/model/deepseek-67b/predict",
+                                   {"input": {"text": text,
+                                              "max_new_tokens": 24}}))
+            th.start()
+            threads.append(th)
+        kv = {"blocks_in_use": 0}                 # mid-flight snapshot
+        deadline = time.time() + 60               # (first call compiles)
+        while kv["blocks_in_use"] == 0 and time.time() < deadline:
+            time.sleep(0.05)
+            kv = get(server.url,
+                     "/v2/model/deepseek-67b/stats")["service"]["kv_cache"]
+        print(f"mid-batch: {kv['blocks_in_use']}/{kv['pool_blocks']} pages "
+              f"in use, {kv['active_tokens']} active tokens, "
+              f"{kv['kv_bytes_per_active_token']} KV bytes/token "
+              f"(contiguous would charge "
+              f"{128 * kv['kv_bytes_per_token']} per slot)")
+        for th in threads:
+            th.join()
+        kv = get(server.url,
+                 "/v2/model/deepseek-67b/stats")["service"]["kv_cache"]
+        print(f"drained:   {kv['blocks_in_use']}/{kv['pool_blocks']} pages "
+              f"in use (free-on-retire)")
+        gauges = get(server.url, "/v2/metrics")["metrics"]["gauges"]
+        pool = {k: v for k, v in gauges.items() if "kv_pool" in k}
+        print("metrics gauges:", json.dumps(pool))
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--qos", action="store_true",
                     help="run the QoS two-priority demo instead")
     ap.add_argument("--stream", action="store_true",
                     help="run the SSE streaming + cancellation demo")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged KV cache occupancy demo")
     args = ap.parse_args()
     if args.qos:
         qos_demo()
     elif args.stream:
         stream_demo()
+    elif args.paged:
+        paged_demo()
     else:
         main()

@@ -62,7 +62,7 @@ from repro.core.deployment import DeploymentManager
 from repro.core.registry import EXCHANGE, ModelRegistry
 from repro.core.router import RequestCtx, Response, Router, StreamEvent
 from repro.core.service import ServiceOverloaded
-from repro.core.wrapper import MAXError
+from repro.core.wrapper import MAXError, PromptTooLong
 from repro.serving.qos import PRIORITIES, AdmissionError
 
 API_VERSION = "v1"          # of the back-compat surface
@@ -84,6 +84,12 @@ ERROR_STATUS = {
     # tokens reached max_seq) — the request asked for more than the
     # deployment can hold, so it is a client-side 400, not a 5xx
     "MAX_SEQ_EXCEEDED": 400,
+    # the prompt alone leaves no generation headroom: rejected at
+    # validation, before admission ever sees it
+    "PROMPT_TOO_LONG": 400,
+    # the shared KV page pool ran dry mid-generation — a capacity
+    # condition of the deployment, not a malformed request
+    "KV_POOL_EXHAUSTED": 503,
     # the client (or its DELETE) abandoned the work: nginx's 499
     "CANCELLED": 499,
     "INTERNAL": 500,
@@ -205,7 +211,9 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
                   "chunk boundary); on a finished job, delete the record")
     r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
           summary="Deploy an asset (optional {'service': sync|batched|auto,"
-                  " 'qos': {...}})")
+                  " 'qos': {...}, 'paged': bool, 'page_size': int,"
+                  " 'kv_pool_blocks': int} — the kv knobs select the paged"
+                  " KV cache layout)")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
@@ -631,6 +639,8 @@ class MAXServer:
             raise ApiError("QUEUE_FULL", str(e)) from None
         except AdmissionError as e:
             raise ApiError(e.code, str(e)) from None
+        except PromptTooLong as e:
+            raise ApiError("PROMPT_TOO_LONG", str(e)) from None
         except MAXError as e:
             raise ApiError("INVALID_INPUT", str(e)) from None
         with self._job_lock:
@@ -693,21 +703,54 @@ class MAXServer:
         qos = body.get("qos")
         if qos is not None and not isinstance(qos, dict):
             raise ApiError("INVALID_INPUT", "'qos' must be an object")
+        # KV cache layout knobs: paged (vLLM-style block tables) plus its
+        # page size / pool size; an explicit request redeploys like an
+        # explicit qos does
+        engine_kw: Dict[str, Any] = {}
+        if body.get("paged") is not None:
+            if not isinstance(body["paged"], bool):
+                raise ApiError("INVALID_INPUT", "'paged' must be a boolean")
+            engine_kw["paged"] = body["paged"]
+        for key in ("page_size", "kv_pool_blocks"):
+            if body.get(key) is not None:
+                v = body[key]
+                if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                    raise ApiError("INVALID_INPUT",
+                                   f"{key!r} must be a positive integer")
+                engine_kw.setdefault("paged", True)
+                engine_kw[key] = v
+        if engine_kw.get("paged"):
+            # mirror the engine's page_size/max_seq constraint HERE, before
+            # deploy: a force-redeploy tears down the healthy deployment
+            # first, and an invalid knob must not leave the model
+            # undeployed (same validate-before-teardown rule as qos)
+            max_seq = self.build_kw.get("max_seq", 128)
+            page = engine_kw.get("page_size", 16)
+            if max_seq % page:
+                raise ApiError(
+                    "INVALID_INPUT",
+                    f"page_size {page} must divide the deployment's "
+                    f"max_seq {max_seq}")
         try:
             dep = self.manager.deploy(ctx.params["model_id"],
                                       service_mode=mode, qos=qos,
-                                      **self.build_kw)
+                                      force=bool(engine_kw),
+                                      **{**self.build_kw, **engine_kw})
         except KeyError as e:
             raise ApiError("MODEL_NOT_FOUND", str(e)) from None
         except ValueError as e:     # mode/qos infeasible for this wrapper
             raise ApiError("INVALID_INPUT", str(e)) from None
         cfg = dep.service.qos_cfg
-        return 200, {"status": "ok", "model_id": dep.asset_id,
-                     "service": dep.service.kind,
-                     "qos": {"policy": cfg.policy, "rate": cfg.rate,
-                             "max_queue_per_class": cfg.max_queue,
-                             "class_weights": dict(cfg.class_weights)},
-                     "deployed": self.manager.deployed()}
+        out = {"status": "ok", "model_id": dep.asset_id,
+               "service": dep.service.kind,
+               "qos": {"policy": cfg.policy, "rate": cfg.rate,
+                       "max_queue_per_class": cfg.max_queue,
+                       "class_weights": dict(cfg.class_weights)},
+               "deployed": self.manager.deployed()}
+        engine = getattr(dep.wrapper, "engine", None)
+        if engine is not None:
+            out["kv_cache"] = engine.kv_stats()
+        return 200, out
 
     def _h_undeploy(self, ctx) -> Tuple[int, Dict[str, Any]]:
         model_id = ctx.params["model_id"]

@@ -58,7 +58,8 @@ class _EngineWrapper(MAXModelWrapper):
 
     def __init__(self, asset: ModelAsset, *, smoke: bool = True,
                  max_batch: int = 4, max_seq: int = 128, seed: int = 0,
-                 decode_chunk: int = 8):
+                 decode_chunk: int = 8, paged: bool = False,
+                 page_size: int = 16, kv_pool_blocks: Optional[int] = None):
         cfg = asset.config
         if smoke and cfg.name in ASSIGNED:
             cfg = reduce_for_smoke(cfg)
@@ -68,7 +69,9 @@ class _EngineWrapper(MAXModelWrapper):
         self.engine = GenerationEngine(self.model, self.params,
                                        max_batch=max_batch, max_seq=max_seq,
                                        eos_id=TOKENIZER.eos_id,
-                                       decode_chunk=decode_chunk)
+                                       decode_chunk=decode_chunk,
+                                       paged=paged, page_size=page_size,
+                                       kv_pool_blocks=kv_pool_blocks)
         self.MODEL_META_DATA = asset.metadata
 
     def _result(self, tokens: List[int], prompt_len: int) -> GenerationResult:
@@ -89,7 +92,11 @@ class TextGenerationWrapper(_EngineWrapper):
         if not isinstance(inp, dict) or "text" not in inp:
             raise MAXError("input must be a string or {'text': ...}")
         toks = TOKENIZER.encode(str(inp["text"]))
-        max_len = self.engine.max_seq - 1
+        # longest ADMISSIBLE prompt, not max_seq-1: ring-cache families
+        # (ssm/hybrid/sliding-window) pad prompts to their bucket and treat
+        # the padding as context, so a max_seq-1 truncation could still
+        # bucket to max_seq and leave zero generation headroom
+        max_len = self.engine.max_prompt_len()
         return {
             "tokens": toks[:max_len],
             "max_new_tokens": int(inp.get("max_new_tokens", 16)),

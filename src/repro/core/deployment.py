@@ -129,7 +129,7 @@ class DeploymentManager:
 
     def deploy(self, asset_id: str, *, mesh_slice: Optional[str] = None,
                service_mode: Optional[str] = None,
-               qos: Optional[Any] = None,
+               qos: Optional[Any] = None, force: bool = False,
                **build_kw) -> Deployment:
         if qos is not None and not isinstance(qos, QoSConfig):
             qos = QoSConfig.from_json(qos)    # validate before any teardown
@@ -139,11 +139,13 @@ class DeploymentManager:
             if dep is not None:
                 # an explicitly requested concrete mode replaces a
                 # deployment of a different kind, and an explicit QoS
-                # config always redeploys ("auto"/None accept whatever is
-                # running) — silently returning the old service would
-                # drop the operator's request
-                if (qos is None and (service_mode in (None, "auto")
-                                     or dep.service.kind == service_mode)):
+                # config — or ``force`` (explicit engine knobs like the
+                # paged-KV layout) — always redeploys ("auto"/None accept
+                # whatever is running) — silently returning the old
+                # service would drop the operator's request
+                if (qos is None and not force
+                        and (service_mode in (None, "auto")
+                             or dep.service.kind == service_mode)):
                     return dep
                 if (service_mode == "batched"
                         and not dep.wrapper.supports_generation()):

@@ -54,7 +54,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.core.router import StreamEvent
-from repro.core.wrapper import MAXError, MAXModelWrapper
+from repro.core.wrapper import MAXError, MAXModelWrapper, PromptTooLong
 from repro.serving.metrics import TOKEN_LATENCY_BUCKETS, MetricsRegistry
 from repro.serving.qos import (
     AdmissionController, AdmissionError, QoSConfig, QueueFull,
@@ -722,6 +722,16 @@ class BatchedService(InferenceService):
         self._worker_error: Optional[str] = None
         self.metrics.register_gauge(
             "max_queue_depth", self.admission.depth, model=self.model_id)
+        if getattr(self.engine, "paged", False):
+            # pool occupancy: the number every capacity dashboard needs —
+            # a paged deployment's device memory scales with pages in use,
+            # not with max_batch * max_seq
+            self.metrics.register_gauge(
+                "max_kv_pool_blocks_in_use", self.engine.blocks_in_use,
+                model=self.model_id)
+            self.metrics.register_gauge(
+                "max_kv_pool_blocks_total",
+                lambda: self.engine.kv_pool_blocks, model=self.model_id)
         self._thread = threading.Thread(
             target=self._worker, daemon=True,
             name=f"batched-{self.model_id}")
@@ -734,12 +744,15 @@ class BatchedService(InferenceService):
                  push: Optional[Callable] = None,
                  notify: Optional[Callable] = None) -> _Work:
         prompt, gen_kw, extra = self.wrapper.prepare_generation(inp)
-        # reject here, on the request thread: a raise inside the worker's
-        # tick would fail every request sharing the decode batch
+        # reject here, on the request thread, BEFORE admission: a raise
+        # inside the worker's tick would fail every request sharing the
+        # decode batch, and a zero-headroom prompt would burn a prefill +
+        # slot only to retire with nothing generated
         if not self.engine.fits_prompt(len(prompt)):
-            raise MAXError(
+            raise PromptTooLong(
                 f"prompt of {len(prompt)} tokens does not fit max_seq "
-                f"{self.engine.max_seq}")
+                f"{self.engine.max_seq} with generation headroom (longest "
+                f"admissible prompt: {self.engine.max_prompt_len()} tokens)")
         work = _Work(inp=inp, prompt=prompt, gen_kw=gen_kw, extra=extra,
                      t0=time.perf_counter(), job=job,
                      push=push, notify=notify)
@@ -800,6 +813,8 @@ class BatchedService(InferenceService):
             return self._enqueue(inp, job, qos)
         except ServiceOverloaded as e:
             env = self._error_envelope(str(e), "QUEUE_FULL")
+        except PromptTooLong as e:
+            env = self._error_envelope(str(e), "PROMPT_TOO_LONG")
         except AdmissionError as e:
             env = self._error_envelope(str(e), e.code)
         except MAXError as e:
@@ -920,6 +935,11 @@ class BatchedService(InferenceService):
                 except AdmissionError as e:
                     yield StreamEvent("error", {
                         "code": e.code, "message": str(e),
+                        "model_id": self.model_id}, seq)
+                    return
+                except PromptTooLong as e:
+                    yield StreamEvent("error", {
+                        "code": "PROMPT_TOO_LONG", "message": str(e),
                         "model_id": self.model_id}, seq)
                     return
                 except MAXError as e:
@@ -1091,6 +1111,8 @@ class BatchedService(InferenceService):
             "decode_chunks": ss.chunks,
             "decode_chunk": self.scheduler.decode_chunk,
             "cache_overflows": ss.cache_overflows,
+            "pool_exhausted": ss.pool_exhausted,
+            "kv_cache": self.engine.kv_stats(),
             "emitted_tokens": ss.emitted_tokens,
             # wall time accrues per tick, so this is real whichever loop
             # drives the scheduler (run() or the service worker)

@@ -43,6 +43,13 @@ class MAXError(Exception):
     """Raised by wrappers for client-visible failures (400-class)."""
 
 
+class PromptTooLong(MAXError):
+    """The tokenized prompt leaves no KV generation headroom — rejected at
+    validation time (structured ``PROMPT_TOO_LONG``, HTTP 400) instead of
+    burning a prefill + decode slot just to retire with nothing
+    generated."""
+
+
 class MAXModelWrapper(abc.ABC):
     """Base wrapper. Subclasses set MODEL_META_DATA and implement hooks.
 

@@ -19,6 +19,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.gmm import gmm as _gmm_pallas
 from repro.kernels.rglru import rglru_scan as _rglru_pallas
@@ -72,6 +75,17 @@ def decode_attention(q, k, v, lengths, *, bs=256):
     # padded slots have position >= S >= lengths -> masked by lengths
     return _decode_pallas(q, kp, vp, lengths, bs=min(bs, kp.shape[1]),
                           interpret=(_BACKEND == "interpret"))
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, lengths):
+    """q [B, H, hd]; k_pool, v_pool [N, P, KV, hd]; block_table [B, nb];
+    lengths [B] -> [B, H, hd]. Pages are already kernel-block-sized, so no
+    padding is needed — the page size IS the block size."""
+    if _BACKEND == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pool, v_pool,
+                                               block_table, lengths)
+    return _paged_decode_pallas(q, k_pool, v_pool, block_table, lengths,
+                                interpret=(_BACKEND == "interpret"))
 
 
 def rglru_scan(a, b, h0=None, *, bt=128, bw=512):

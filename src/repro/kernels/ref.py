@@ -49,6 +49,23 @@ def decode_attention_ref(q, k, v, lengths):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_table, lengths):
+    """Paged-cache decode oracle: gather each sequence's pages into a
+    contiguous cache, then run the linear oracle.
+
+    q [B, H, hd]; k_pool, v_pool [N, P, KV, hd]; block_table [B, nb] with
+    entries >= N marking unallocated pages (their positions are >= the
+    sequence length, so the length mask hides whatever the clamped gather
+    returns); lengths [B] -> [B, H, hd].
+    """
+    N, P, KV, hd = k_pool.shape
+    B, nb = block_table.shape
+    bt = jnp.clip(block_table, 0, N - 1)
+    k = k_pool[bt].reshape(B, nb * P, KV, hd)
+    v = v_pool[bt].reshape(B, nb * P, KV, hd)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def rglru_ref(a, b, h0=None):
     """Sequential RG-LRU recurrence. a, b [B, S, W] f32 -> h [B, S, W].
 

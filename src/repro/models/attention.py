@@ -148,6 +148,34 @@ def decode_attention(
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q, k_pool, v_pool, block_table, lengths, *,
+    logit_cap: Optional[float] = None,
+):
+    """One-token attention against a paged (block-table) cache.
+
+    q [B, H, hd]; k_pool, v_pool [N, P, KV, hd] — a shared pool of N pages
+    of P tokens; block_table [B, nb] maps each sequence's page index to a
+    pool page (entries >= N mark pages not yet allocated; their positions
+    are always >= the sequence length, so the length mask hides them);
+    lengths [B] = valid cache entries. Returns [B, H, hd].
+
+    On the Pallas backend this dispatches to the block-table kernel (the
+    pool is never materialised per sequence); the reference path gathers
+    the pages into a contiguous view and reuses :func:`decode_attention`.
+    """
+    from repro.kernels import ops as _kops
+    if _kops.get_backend() != "ref" and logit_cap is None:
+        return _kops.paged_decode_attention(q, k_pool, v_pool,
+                                            block_table, lengths)
+    N, P, KV, hd = k_pool.shape
+    B, nb = block_table.shape
+    bt = jnp.clip(block_table, 0, N - 1)
+    kc = k_pool[bt].reshape(B, nb * P, KV, hd)
+    vc = v_pool[bt].reshape(B, nb * P, KV, hd)
+    return decode_attention(q, kc, vc, lengths=lengths, logit_cap=logit_cap)
+
+
 # ---------------------------------------------------------------------------
 # cache write helpers
 # ---------------------------------------------------------------------------
@@ -179,6 +207,29 @@ def cache_write(k_cache, v_cache, k_new, v_new, lengths, *, ring: bool = False):
     k_cache = k_cache.at[b, idx].set(k_new.astype(k_cache.dtype))
     v_cache = v_cache.at[b, idx].set(v_new.astype(v_cache.dtype))
     return k_cache, v_cache
+
+
+def paged_cache_write(k_pool, v_pool, k_new, v_new, block_table, lengths):
+    """Write one token per sequence into its block-table page.
+
+    k_new/v_new [B, KV, hd]; the write for sequence b lands in pool page
+    ``block_table[b, lengths[b] // P]`` at offset ``lengths[b] % P``.
+    Writes whose position is past the table (slot at max_seq) or whose
+    table entry is the unallocated sentinel (>= N) scatter out of bounds
+    and are dropped — the paged counterpart of the linear cache's
+    write-past-length invisibility.
+    Returns updated (k_pool, v_pool).
+    """
+    N, P = k_pool.shape[0], k_pool.shape[1]
+    nb = block_table.shape[1]
+    pi = lengths // P
+    off = lengths % P
+    blk = jnp.take_along_axis(block_table,
+                              jnp.minimum(pi, nb - 1)[:, None], axis=1)[:, 0]
+    blk = jnp.where(pi < nb, blk, N)               # past the table: drop
+    k_pool = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype), mode="drop")
+    return k_pool, v_pool
 
 
 def ring_positions(lengths, window: int):

@@ -10,7 +10,9 @@ functions (safe to ``jax.jit`` / ``pjit``):
 - ``decode_step(params, cache, tokens, active=None) -> (logits, cache)``
   (``active`` [B] bool is the fused-decode termination state: inactive
   slots do not advance their cache length)
-- ``init_cache(batch, seq_len) -> cache``
+- ``init_cache(batch, seq_len, paged=None) -> cache``
+  (``paged=(num_blocks, page_size)`` selects the shared-block-pool KV
+  layout for linear attention caches — vLLM-style block tables)
 """
 
 from __future__ import annotations
@@ -86,9 +88,15 @@ def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
     def decode_step(params, cache, tokens, active=None):
         return mod.decode_step(params, cache, tokens, cfg, active=active)
 
-    def init_cache(batch_size, seq_len):
+    def init_cache(batch_size, seq_len, paged=None):
+        """``paged=(num_blocks, page_size)`` selects the block-pool layout
+        (linear attention caches only — see transformer.init_cache)."""
         if is_encdec:
+            if paged is not None:
+                raise ValueError("paged KV cache is not supported for "
+                                 "encoder-decoder models")
             return encdec.init_cache(cfg, batch_size, seq_len, cache_dtype)
-        return transformer.init_cache(cfg, batch_size, seq_len, cache_dtype)
+        return transformer.init_cache(cfg, batch_size, seq_len, cache_dtype,
+                                      paged=paged)
 
     return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import rglru, rwkv6
 from repro.models.attention import (
-    blockwise_attention, decode_attention, cache_write, ring_positions,
+    blockwise_attention, cache_write, decode_attention, paged_cache_write,
+    paged_decode_attention, ring_positions,
 )
 from repro.models.layers import (
     attn_init, dense_init, embed_init, mlp_apply, mlp_init, project_out,
@@ -312,12 +313,45 @@ def attn_cache_len(cfg: ModelConfig, seq_len: int, *, local: bool = False) -> in
     return seq_len
 
 
-def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
-    """Decode cache sized for ``seq_len`` context."""
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16,
+               *, paged: Optional[Tuple[int, int]] = None):
+    """Decode cache sized for ``seq_len`` context.
+
+    ``paged=(num_blocks, page_size)`` selects the paged layout for linear
+    attention caches: instead of a per-slot contiguous ``[B, S, ...]``
+    buffer, KV lives in a shared pool of ``num_blocks`` pages of
+    ``page_size`` tokens (each page spanning every layer) addressed
+    through a per-slot ``block_table``. Device memory then scales with the
+    pages actually allocated, not ``batch * seq_len``. Ring-cache families
+    (ssm / hybrid / sliding-window) keep the linear layout — their caches
+    are position-wrapped or constant-size already.
+    """
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     cache: Dict[str, Any] = {
         "lengths": jnp.zeros((batch,), jnp.int32),
     }
+    if paged is not None:
+        # a sliding window >= seq_len never wraps — the cache is linear
+        if (cfg.family in ("ssm", "hybrid")
+                or (cfg.sliding_window is not None
+                    and cfg.sliding_window < seq_len)):
+            raise ValueError(
+                "paged KV cache requires a linear attention cache "
+                f"(family {cfg.family!r}, sliding_window "
+                f"{cfg.sliding_window!r})")
+        num_blocks, page = paged
+        if seq_len % page:
+            raise ValueError(f"page_size {page} must divide seq_len {seq_len}")
+        L = cfg.num_layers
+        cache.update(
+            k_pool=jnp.zeros((L, num_blocks, page, KV, hd), dtype),
+            v_pool=jnp.zeros((L, num_blocks, page, KV, hd), dtype),
+            # sentinel num_blocks == "unallocated": scatters drop, gathers
+            # clamp to data that the length mask hides
+            block_table=jnp.full((batch, seq_len // page), num_blocks,
+                                 jnp.int32),
+        )
+        return cache
     if cfg.family == "ssm":
         st = rwkv6.rwkv_state_init(cfg, batch)
         L = cfg.num_layers
@@ -516,6 +550,24 @@ def _attn_decode(lp, x_t, k_cache, v_cache, lengths, cfg, *, ring_window):
     return x_t + y, k_cache, v_cache
 
 
+def _paged_attn_decode(lp, x_t, k_pool, v_pool, block_table, lengths, cfg):
+    """x_t [B, d]; k/v_pool [N, P, KV, hd] (this layer's pages);
+    block_table [B, nb]. Returns (y, k_pool, v_pool)."""
+    h = rms_norm(x_t[:, None], lp["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(lp["attn"], h, qk_norm=cfg.qk_norm,
+                          norm_eps=cfg.norm_eps)
+    pos = lengths[:, None]
+    q = apply_rope_wrap(q, pos, cfg)
+    k = apply_rope_wrap(k, pos, cfg)
+    k_pool, v_pool = paged_cache_write(k_pool, v_pool, k[:, 0], v[:, 0],
+                                       block_table, lengths)
+    o = paged_decode_attention(q[:, 0], k_pool, v_pool, block_table,
+                               lengths + 1,
+                               logit_cap=cfg.attn_logit_softcap)
+    y = project_out(lp["attn"], o[:, None])[:, 0]
+    return x_t + y, k_pool, v_pool
+
+
 def _mlp_decode(lp, x_t, cfg):
     h = rms_norm(x_t[:, None], lp["ln2"], cfg.norm_eps)
     return x_t + mlp_apply(lp["mlp"], h)[:, 0]
@@ -600,6 +652,46 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, active=None):
                 tail_body, x, (params["tail"], cache["tail_h"], cache["tail_conv"]))
             cache = dict(cache, tail_h=th, tail_conv=tc)
         cache["lengths"] = lengths + adv
+        return _lm_logits(params, cfg, x), cache
+
+    if "k_pool" in cache:
+        # paged layout; the block table and lengths are loop-invariant
+        table = cache["block_table"]
+        from repro import flags
+        if flags.enabled("carry_cache"):
+            # pools ride the scan CARRY (updated in place through the XLA
+            # while loop) rather than as xs/ys streams — streaming would
+            # copy the WHOLE pool in and out every layer of every step,
+            # which is exactly the memory traffic paging exists to avoid
+            def paged_body(carry, xs):
+                x, kp_all, vp_all = carry
+                lp, i = xs
+                kp = jax.lax.dynamic_index_in_dim(kp_all, i, 0, False)
+                vp = jax.lax.dynamic_index_in_dim(vp_all, i, 0, False)
+                x, kp, vp = _paged_attn_decode(lp, x, kp, vp, table,
+                                               lengths, cfg)
+                kp_all = jax.lax.dynamic_update_index_in_dim(kp_all, kp, i, 0)
+                vp_all = jax.lax.dynamic_update_index_in_dim(vp_all, vp, i, 0)
+                x = _moe_decode(lp, x, cfg) if cfg.is_moe \
+                    else _mlp_decode(lp, x, cfg)
+                return (x, kp_all, vp_all), None
+
+            (x, kp, vp), _ = jax.lax.scan(
+                paged_body, (x, cache["k_pool"], cache["v_pool"]),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+        else:
+            def paged_body(x, xs):
+                lp, kp, vp = xs
+                x, kp, vp = _paged_attn_decode(lp, x, kp, vp, table,
+                                               lengths, cfg)
+                x = _moe_decode(lp, x, cfg) if cfg.is_moe \
+                    else _mlp_decode(lp, x, cfg)
+                return x, (kp, vp)
+
+            x, (kp, vp) = jax.lax.scan(
+                paged_body, x,
+                (params["layers"], cache["k_pool"], cache["v_pool"]))
+        cache = dict(cache, k_pool=kp, v_pool=vp, lengths=lengths + adv)
         return _lm_logits(params, cfg, x), cache
 
     ring_window = cfg.sliding_window if (

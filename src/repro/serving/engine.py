@@ -21,6 +21,22 @@ generated token with an on-device argmax and returns it as an unforced
 device scalar, so admitting a request never blocks the host on a
 device->host read — the prefill dispatch overlaps the in-flight decode
 chunk and the scheduler reads tokens at its single per-chunk sync point.
+
+KV memory is either *contiguous* (each slot owns a ``max_seq`` cache —
+memory scales with capacity) or *paged* (``paged=True``: a shared pool of
+``kv_pool_blocks`` pages of ``page_size`` tokens, addressed through
+per-slot block tables — memory scales with actual context). The engine
+owns the page allocator host-side (free list + table mirror; device rows
+are pushed asynchronously, never a sync): prefill allocates the prompt's
+pages plus the first decode write's page, ``ensure_capacity`` secures one
+page per upcoming KV write, and retire/cancel returns every page. Paging
+applies to linear attention caches only; ring families (ssm / hybrid /
+sliding-window) silently keep the linear layout.
+
+Prompt accounting is two-track: ``_lengths`` / ``context_len`` are the
+PHYSICAL cache lengths (ring families pad prompts to their bucket and
+treat pads as context), while ``logical_len`` / ``kv_stats`` report what
+the client actually sent — padding is never billed as usage.
 """
 
 from __future__ import annotations
@@ -65,7 +81,8 @@ class GenerationEngine:
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, eos_id: Optional[int] = None,
-                 decode_chunk: int = 8,
+                 decode_chunk: int = 8, paged: bool = False,
+                 page_size: int = 16, kv_pool_blocks: Optional[int] = None,
                  extra_inputs: Optional[Dict[str, Any]] = None):
         self.model = model
         self.params = params
@@ -81,22 +98,81 @@ class GenerationEngine:
         # static per-request extra inputs (e.g. image embeds builder)
         self.extra_inputs = extra_inputs or {}
 
-        self._cache = model.init_cache(max_batch, max_seq)
+        # Ring-cache families (sliding-window / hybrid local attention / SSM
+        # state) left-pad prompts and wrap or accumulate their caches —
+        # they keep the linear layout. A sliding window >= max_seq never
+        # wraps, so such engines are plain linear caches (no bucket
+        # padding charged, pageable). Paged KV applies to linear attention
+        # caches only; asking for it elsewhere falls back silently (linear
+        # stays the default for ring families).
+        self._ring = (self.cfg.family in ("hybrid", "ssm")
+                      or (self.cfg.sliding_window is not None
+                          and self.cfg.sliding_window < max_seq))
+        pageable = not self._ring and self.cfg.family != "audio"
+        self.paged = bool(paged) and pageable
+        if self.paged:
+            if max_seq % page_size:
+                raise ValueError(
+                    f"page_size {page_size} must divide max_seq {max_seq}")
+            self.page_size = page_size
+            self._pages_per_slot = max_seq // page_size
+            # default pool = same capacity as the contiguous layout; the
+            # win is that admission and occupancy are charged per page in
+            # use, and a smaller pool (oversubscription) is a valid config
+            self.kv_pool_blocks = int(kv_pool_blocks) if kv_pool_blocks \
+                else max_batch * self._pages_per_slot
+            self._free_pool: List[int] = list(range(self.kv_pool_blocks))
+            self._slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+            # host mirror of the device block table (sentinel = pool size)
+            self._table = np.full((max_batch, self._pages_per_slot),
+                                  self.kv_pool_blocks, np.int32)
+            self._cache = model.init_cache(
+                max_batch, max_seq, paged=(self.kv_pool_blocks, page_size))
+            self._insert = jax.jit(self._insert_paged_impl,
+                                   donate_argnums=(0,))
+        else:
+            self.page_size = 0
+            self.kv_pool_blocks = 0
+            self._free_pool = []
+            self._slot_blocks = [[] for _ in range(max_batch)]
+            self._cache = model.init_cache(max_batch, max_seq)
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._lengths = np.zeros((max_batch,), np.int32)
         self._active = np.zeros((max_batch,), bool)
+        # logical vs physical prompt accounting: ring families pad prompts
+        # to their bucket and treat pads as context, so _lengths (physical,
+        # cache bookkeeping) may exceed the user's prompt. Usage and stats
+        # report the logical numbers.
+        self._prompt_lens = np.zeros((max_batch,), np.int32)   # logical
+        self._prefill_lens = np.zeros((max_batch,), np.int32)  # physical
         # device-resident next input token per slot (sync-free admission:
         # insert_request writes it with an on-device argmax, step_chunk
         # carries it forward — the host never has to know it)
         self._next_tok = jnp.zeros((max_batch,), jnp.int32)
 
+        self._kv_bytes_per_token = self._bytes_per_token(self._cache)
         self._prefill_jit: Dict[int, Any] = {}
         self._decode = jax.jit(self._decode_impl)
         # one compiled scan per chunk length actually used (lazy, bounded
         # by decode_chunk): the scheduler aligns chunks to the earliest
         # completion, so short lengths recur and long ones amortize
         self._chunk_jit: Dict[int, Any] = {}
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._first_tok = jax.jit(self._first_tok_impl)
+
+    @staticmethod
+    def _bytes_per_token(cache) -> int:
+        """Device bytes one token of context costs across all layers (the
+        unit for KV-memory accounting; 0 for constant-state SSM caches)."""
+        if "k_pool" in cache:
+            kp = cache["k_pool"]                   # [L, N, P, KV, hd]
+            per_entry = int(np.prod(kp.shape[3:])) * kp.dtype.itemsize
+            return 2 * kp.shape[0] * per_entry
+        for key in ("k", "attn_k"):                # [L|nb, B, S, KV, hd]
+            if key in cache:
+                k = cache[key]
+                per_entry = int(np.prod(k.shape[3:])) * k.dtype.itemsize
+                return 2 * k.shape[0] * per_entry
+        return 0
 
     # -- jitted internals ---------------------------------------------------
 
@@ -119,6 +195,96 @@ class GenerationEngine:
                     return dst.at[idx].set(jnp.squeeze(src, ax))
             return dst
         return jax.tree.map(put, batch_cache, one_cache)
+
+    def _insert_paged_impl(self, batch_cache, one_cache, table_row, slot):
+        """Scatter a B=1 linear prefill cache into the slot's pool pages.
+
+        ``table_row`` [pages_per_slot] holds the slot's pool page ids
+        (sentinel ``kv_pool_blocks`` for pages past the prompt — their
+        scatters drop). The prefill cache is always ``max_seq`` long, so it
+        reshapes exactly into pages_per_slot pages.
+        """
+        nb, P = self._pages_per_slot, self.page_size
+
+        def put_pool(pool, src):
+            pages = jnp.squeeze(src, 1).reshape(
+                src.shape[0], nb, P, *src.shape[3:])
+            return pool.at[:, table_row].set(pages.astype(pool.dtype),
+                                             mode="drop")
+
+        cache = dict(batch_cache)
+        cache["k_pool"] = put_pool(batch_cache["k_pool"], one_cache["k"])
+        cache["v_pool"] = put_pool(batch_cache["v_pool"], one_cache["v"])
+        cache["lengths"] = batch_cache["lengths"].at[slot].set(
+            one_cache["lengths"][0])
+        cache["block_table"] = batch_cache["block_table"].at[slot].set(
+            table_row)
+        return cache
+
+    # -- paged pool management (host side; device work stays sync-free) -----
+
+    def _alloc_blocks(self, slot: int, n: int) -> bool:
+        """Move ``n`` pool pages to ``slot`` (all-or-nothing)."""
+        if len(self._free_pool) < n:
+            return False
+        start = len(self._slot_blocks[slot])
+        for i in range(n):
+            blk = self._free_pool.pop()
+            self._slot_blocks[slot].append(blk)
+            self._table[slot, start + i] = blk
+        return True
+
+    def _push_table_row(self, slot: int):
+        """Mirror the slot's host table row to the device cache (a tiny
+        async host->device transfer — never a sync)."""
+        self._cache["block_table"] = self._cache["block_table"].at[slot].set(
+            jnp.asarray(self._table[slot]))
+
+    def free_blocks(self) -> int:
+        """Unallocated pool pages (0 for contiguous engines)."""
+        return len(self._free_pool)
+
+    def blocks_in_use(self) -> int:
+        return self.kv_pool_blocks - len(self._free_pool)
+
+    def blocks_for_prompt(self, n: int) -> int:
+        """Pool pages admission must see free before taking an ``n``-token
+        prompt: its prefill pages plus room for the first decode write."""
+        true_len = _bucket(n) if self._ring else n
+        return -(-(true_len + 1) // self.page_size)
+
+    def can_admit(self, n: int) -> bool:
+        """Block-aware admission gate: beyond :meth:`fits_prompt`, a paged
+        engine also needs enough free pool pages for the prompt."""
+        if not self.fits_prompt(n):
+            return False
+        if not self.paged:
+            return True
+        return len(self._free_pool) >= self.blocks_for_prompt(n)
+
+    def ensure_capacity(self, slot: int, want: int) -> int:
+        """Secure write headroom for up to ``want`` more KV entries on
+        ``slot``, allocating pool pages as needed and available. Returns
+        the writes actually available — may be < ``want`` when the pool is
+        tight, 0 when the slot cannot take a single further write (the
+        caller retires it). Contiguous engines just report the remaining
+        ``max_seq`` headroom. Idempotent and allocation-only (pages free on
+        retire, never mid-flight)."""
+        length = int(self._lengths[slot])
+        phys = self.max_seq - length
+        if not self.paged:
+            return max(0, min(want, phys))
+        want = min(want, phys)
+        have = len(self._slot_blocks[slot]) * self.page_size - length
+        dirty = False
+        while have < want and self._free_pool \
+                and len(self._slot_blocks[slot]) < self._pages_per_slot:
+            self._alloc_blocks(slot, 1)
+            have += self.page_size
+            dirty = True
+        if dirty:
+            self._push_table_row(slot)
+        return max(0, min(want, have))
 
     def _first_tok_impl(self, logits, next_tok, slot):
         """First generated token from prefill logits (greedy over the
@@ -158,6 +324,37 @@ class GenerationEngine:
             run = run & (tok != self.eos_id)
         return run
 
+    def _unpage(self, cache):
+        """Gather the block-table view into a contiguous linear cache
+        (``[L, B, S, KV, hd]``). Sentinel table entries clamp to an
+        arbitrary page whose data sits past the owner's length — masked."""
+        bt = jnp.clip(cache["block_table"], 0, self.kv_pool_blocks - 1)
+
+        def gather(pool):
+            g = pool[:, bt]                       # [L, B, nb, P, KV, hd]
+            return g.reshape(g.shape[0], g.shape[1], -1, *g.shape[4:])
+
+        return {"lengths": cache["lengths"],
+                "k": gather(cache["k_pool"]), "v": gather(cache["v_pool"])}
+
+    def _repage(self, cache, work):
+        """Scatter a chunk's updated contiguous view back into the pool.
+        Unallocated (sentinel) pages scatter out of bounds and drop, so
+        writes past a slot's allocation never touch foreign pages."""
+        table = cache["block_table"]
+        nb = table.shape[1]
+
+        def scatter(pool, kc):
+            pages = kc.reshape(kc.shape[0], kc.shape[1], nb, self.page_size,
+                               *kc.shape[3:])
+            return pool.at[:, table].set(pages.astype(pool.dtype),
+                                         mode="drop")
+
+        return dict(cache,
+                    k_pool=scatter(cache["k_pool"], work["k"]),
+                    v_pool=scatter(cache["v_pool"], work["v"]),
+                    lengths=work["lengths"])
+
     def _chunk_impl(self, k, params, cache, next_tok, rng, temperature,
                     budgets, active):
         """Fused multi-step decode: ``lax.scan`` over ``k`` steps with
@@ -170,45 +367,143 @@ class GenerationEngine:
         where ``emitted[b]`` is a contiguous prefix mask — once a slot
         terminates it never resumes within the chunk.
 
+        Paged caches on the ORACLE backend are translated at the CHUNK
+        boundary: the block table is fixed across a chunk (the scheduler
+        secures every page before dispatch), so the pages gather into a
+        contiguous working view once, the whole chunk runs on the linear
+        fast path, and the touched pages scatter back once —
+        layout-translation cost amortizes over the chunk exactly like the
+        host sync does. On the Pallas backends no translation happens at
+        all: each step runs the block-table decode kernel against the pool
+        in place. (The backend is baked in at trace time like every other
+        kernel dispatch; engines are built per backend.)
+
         RNG parity contract (property-tested): step ``i`` uses ``sub_i``
         from the chain ``rng_i, sub_i = split(rng_{i-1})`` — identical to
         driving ``decode_chunk`` single ``step()`` calls with the same
         chain, so fused and stepwise decode are token-identical.
         """
+        from repro.kernels import ops as _kops
+        translate = "k_pool" in cache and _kops.get_backend() == "ref"
+        work = self._unpage(cache) if translate else cache
+
         def body(carry, _):
-            cache, tok, rng, run, left = carry
+            work, tok, rng, run, left = carry
             rng, sub = jax.random.split(rng)
-            logits, cache = self.model.decode_step(params, cache, tok,
-                                                   active=run)
+            logits, work = self.model.decode_step(params, work, tok,
+                                                  active=run)
             nxt = self._sample(logits, sub, temperature)
             # dead slots hold their token: keeps the carry stable and the
             # (batch-coupled, e.g. MoE-capacity) compute deterministic
             nxt = jnp.where(run, nxt, tok)
             left = left - run.astype(jnp.int32)
-            run_next = self._runnable(nxt, left, cache["lengths"], run)
-            return (cache, nxt, rng, run_next, left), (nxt, run)
+            run_next = self._runnable(nxt, left, work["lengths"], run)
+            return (work, nxt, rng, run_next, left), (nxt, run)
 
-        run0 = self._runnable(next_tok, budgets, cache["lengths"], active)
-        (cache, tok, _, _, _), (toks, emitted) = jax.lax.scan(
-            body, (cache, next_tok, rng, run0, budgets), None, length=k)
+        run0 = self._runnable(next_tok, budgets, work["lengths"], active)
+        (work, tok, _, _, _), (toks, emitted) = jax.lax.scan(
+            body, (work, next_tok, rng, run0, budgets), None, length=k)
+        cache = self._repage(cache, work) if translate else work
         return (cache, tok,
                 jnp.swapaxes(toks, 0, 1), jnp.swapaxes(emitted, 0, 1))
 
     # -- public API ------------------------------------------------------------
 
     def fits_prompt(self, n: int) -> bool:
-        """Whether an ``n``-token prompt fits a slot (its padding bucket must
-        not exceed ``max_seq``) — lets callers reject before occupying the
-        admission path."""
-        return _bucket(n) <= self.max_seq
+        """Whether an ``n``-token prompt is admissible: its padding bucket
+        must not exceed ``max_seq`` AND its *physical* prefill length
+        (the bucket itself for ring families, which treat pads as context)
+        must leave at least one KV write of generation headroom. A prompt
+        that fills the cache would burn a prefill + slot only to retire
+        with nothing generated beyond the prefill token — callers reject
+        it at validation time (``PROMPT_TOO_LONG``) instead."""
+        bucket = _bucket(n)
+        if bucket > self.max_seq:
+            return False
+        true_len = bucket if self._ring else n
+        return true_len < self.max_seq
+
+    def max_prompt_len(self) -> int:
+        """Longest admissible prompt in tokens — consistent with
+        :meth:`fits_prompt` by construction, so a caller that truncates to
+        this length is never rejected. Ring families are bounded by the
+        padding bucket (largest bucket strictly below ``max_seq``); linear
+        engines by ``max_seq - 1`` — unless ``max_seq`` is not a bucket
+        size itself, where the bound drops to the largest bucket that
+        still fits (e.g. max_seq=100 admits at most 64: a 99-token prompt
+        would pad to a 128 bucket)."""
+        if not self._ring:
+            n = self.max_seq - 1
+            if n > 0 and _bucket(n) <= self.max_seq:
+                return n
+        b = 16                       # _bucket's minimum
+        if b > self.max_seq or (self._ring and b >= self.max_seq):
+            return 0
+        limit = self.max_seq - 1 if self._ring else self.max_seq
+        while b * 2 <= limit:
+            b *= 2
+        return b
 
     def free_slots(self) -> List[int]:
         return [i for i in range(self.max_batch) if not self._active[i]]
 
+    def context_len(self, slot: int) -> int:
+        """Physical cache length of ``slot`` (cache bookkeeping: includes
+        ring-family padding)."""
+        return int(self._lengths[slot])
+
+    def logical_len(self, slot: int) -> int:
+        """User-visible context of ``slot``: prompt tokens as submitted
+        plus generated tokens — ring-family padding is not billed."""
+        return int(self._prompt_lens[slot]
+                   + (self._lengths[slot] - self._prefill_lens[slot]))
+
+    def active_logical_tokens(self) -> int:
+        gen = self._lengths - self._prefill_lens
+        return int(((self._prompt_lens + gen) * self._active).sum())
+
     def capacity_left(self, slot: int) -> int:
-        """KV writes remaining before ``slot``'s cache is full. 0 means the
-        slot cannot decode another token (retire with MAX_SEQ_EXCEEDED)."""
-        return int(self.max_seq - self._lengths[slot])
+        """KV writes remaining before ``slot`` cannot decode another token.
+        Pool-aware on paged engines: bounded by ``max_seq`` AND by the
+        slot's allocated pages plus what the shared pool could still
+        provide."""
+        left = int(self.max_seq - self._lengths[slot])
+        if self.paged:
+            have = (len(self._slot_blocks[slot]) * self.page_size
+                    - int(self._lengths[slot]))
+            left = min(left, have + len(self._free_pool) * self.page_size)
+        return max(0, left)
+
+    def kv_stats(self) -> Dict[str, Any]:
+        """KV memory accounting. A contiguous cache charges the full
+        ``max_seq`` per occupied slot (memory scales with *capacity*); a
+        paged cache charges the pool pages actually allocated (memory
+        scales with *actual context*). ``active_tokens`` is the logical
+        context — ring-family padding is not billed as context."""
+        bpt = self._kv_bytes_per_token
+        active = int(self._active.sum())
+        logical = self.active_logical_tokens()
+        if self.paged:
+            used = self.blocks_in_use()
+            in_use = used * self.page_size * bpt
+            out: Dict[str, Any] = {
+                "paged": True, "page_size": self.page_size,
+                "pool_blocks": self.kv_pool_blocks,
+                "blocks_in_use": used,
+                "free_blocks": len(self._free_pool),
+            }
+        else:
+            in_use = active * self.max_seq * bpt
+            out = {"paged": False}
+        out.update(
+            active_slots=active,
+            active_tokens=logical,
+            kv_bytes_per_token=bpt,
+            kv_bytes_in_use=int(in_use),
+            kv_bytes_per_active_token=(round(in_use / logical, 1)
+                                       if logical else 0.0),
+        )
+        return out
 
     def insert_request(self, prompt: List[int], slot: int,
                        extra: Optional[Dict[str, Any]] = None) -> jax.Array:
@@ -227,8 +522,7 @@ class GenerationEngine:
         # treated as context. Linear caches RIGHT-pad; causal masking keeps
         # pads out of real-token attention and decode masks by true length.
         # (SSM states are cumulative too, so stateful families all left-pad.)
-        ring = (self.cfg.family in ("hybrid", "ssm")
-                or self.cfg.sliding_window is not None)
+        ring = self._ring
         padded = np.zeros((1, bucket), np.int32)
         if ring:
             padded[0, bucket - len(prompt):] = prompt
@@ -240,31 +534,73 @@ class GenerationEngine:
                  "prompt_lengths": jnp.asarray([true_len], np.int32)}
         for k, v in (extra or self.extra_inputs).items():
             batch[k] = v
-        logits, one_cache = self._prefill_jit[bucket](self.params, batch)
-        self._cache = self._insert(self._cache, one_cache,
-                                   jnp.asarray(slot, jnp.int32))
-        first, self._next_tok = self._first_tok(
-            logits, self._next_tok, jnp.asarray(slot, jnp.int32))
+        if self.paged:
+            # allocate the prefill's pages — plus the page the FIRST decode
+            # write lands in, so a fresh admission can never be starved by
+            # co-tenants before its first chunk — BEFORE dispatching
+            # compute; the scheduler gates admission on can_admit so this
+            # only trips for direct callers outrunning the pool.
+            # blocks_for_prompt is the ONE statement of this reservation
+            # rule: the admission gate and the allocator must never diverge
+            need = self.blocks_for_prompt(len(prompt))
+            if not self._alloc_blocks(slot, need):
+                raise RuntimeError(
+                    f"KV pool exhausted: prompt needs {need} pages, "
+                    f"{len(self._free_pool)} of {self.kv_pool_blocks} free")
+        # host mirrors flip BEFORE the (possibly compiling) prefill
+        # dispatch: stats readers on other threads must never observe
+        # allocated pages without an owner
         self._lengths[slot] = true_len
+        self._prompt_lens[slot] = len(prompt)
+        self._prefill_lens[slot] = true_len
         self._active[slot] = True
+        try:
+            logits, one_cache = self._prefill_jit[bucket](self.params, batch)
+            if self.paged:
+                self._cache = self._insert(
+                    self._cache, one_cache, jnp.asarray(self._table[slot]),
+                    jnp.asarray(slot, jnp.int32))
+            else:
+                self._cache = self._insert(self._cache, one_cache,
+                                           jnp.asarray(slot, jnp.int32))
+            first, self._next_tok = self._first_tok(
+                logits, self._next_tok, jnp.asarray(slot, jnp.int32))
+        except Exception:
+            self.release_slot(slot)   # no orphaned slot or leaked pages
+            raise
         return first
 
     def release_slot(self, slot: int):
         self._active[slot] = False
+        if self.paged and self._slot_blocks[slot]:
+            # free-on-retire: every page returns to the shared pool. The
+            # sentinel row must reach the DEVICE table too: an inactive
+            # slot still executes (masked) decode writes, and a stale row
+            # would alias pages that now belong to another slot.
+            self._free_pool.extend(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._table[slot, :] = self.kv_pool_blocks
+            self._push_table_row(slot)
 
     def step(self, tokens: np.ndarray, rng, temperature=0.0):
         """One decode step for the whole batch. tokens [max_batch] int32;
         ``temperature`` is a scalar (applied to every slot) or a per-slot
-        [max_batch] vector. Slots whose cache is full (length == max_seq)
-        are masked: they emit 0 and do not advance — lengths never grow
-        past the cache."""
-        active = jnp.asarray(self._active & (self._lengths < self.max_seq))
+        [max_batch] vector. Slots whose cache is full (length == max_seq,
+        or — paged — no page obtainable for the next write) are masked:
+        they emit 0 and do not advance — lengths never grow past the
+        writable cache."""
+        writable = self._active & (self._lengths < self.max_seq)
+        if self.paged:
+            for i in np.flatnonzero(writable):
+                if self.ensure_capacity(int(i), 1) < 1:
+                    writable[i] = False
+        active = jnp.asarray(writable)
         temps = np.broadcast_to(np.asarray(temperature, np.float32),
                                 (self.max_batch,))
         nxt, self._cache = self._decode(
             self.params, self._cache, jnp.asarray(tokens, jnp.int32), rng,
             jnp.asarray(temps, F32), active)
-        self._lengths[self._active & (self._lengths < self.max_seq)] += 1
+        self._lengths[writable] += 1
         return np.asarray(nxt)
 
     def step_chunk(self, rng, temperature, budgets, k: Optional[int] = None
@@ -290,6 +626,17 @@ class GenerationEngine:
         k = self.decode_chunk if k is None else max(1, int(k))
         if k not in self._chunk_jit:
             self._chunk_jit[k] = jax.jit(partial(self._chunk_impl, k))
+        if self.paged:
+            # every budgeted write this chunk needs an allocated page
+            # BEFORE dispatch (the device cannot allocate); clamping the
+            # budget to the secured headroom freezes a starved slot at a
+            # page boundary exactly like a max_seq-full one. The scheduler
+            # pre-ensures and retires starved requests — this second call
+            # is an idempotent no-op there and a guard for direct callers.
+            budgets = np.asarray(budgets, np.int32).copy()
+            for i in np.flatnonzero(self._active & (budgets > 0)):
+                budgets[i] = self.ensure_capacity(int(i),
+                                                  min(k, int(budgets[i])))
         temps = np.broadcast_to(np.asarray(temperature, np.float32),
                                 (self.max_batch,))
         self._cache, self._next_tok, toks, emitted = self._chunk_jit[k](
@@ -316,9 +663,17 @@ class GenerationEngine:
         rng = jax.random.PRNGKey(seed)
         last_tok = np.zeros((self.max_batch,), np.int32)
         outs: List[List[int]] = [[] for _ in prompts]
-        firsts = [self.insert_request(p, i,
-                                      extra=extras[i] if extras else None)
-                  for i, p in enumerate(prompts)]
+        try:
+            firsts = [self.insert_request(p, i,
+                                          extra=extras[i] if extras else None)
+                      for i, p in enumerate(prompts)]
+        except Exception:
+            # a failed insert (e.g. pool exhausted mid-batch) must not
+            # strand the prompts already inserted: their slots would stay
+            # active with their pages allocated forever
+            for i in range(len(prompts)):
+                self.release_slot(i)
+            raise
         for i, f in enumerate(firsts):            # one deferred sync point
             first = int(f)
             outs[i].append(first)
@@ -334,6 +689,7 @@ class GenerationEngine:
             for i in range(len(prompts)):
                 if not done[i] and self.capacity_left(i) <= 0:
                     done[i] = capped[i] = True
+                    self.release_slot(i)
             if all(done):
                 break
             rng, sub = jax.random.split(rng)
@@ -345,7 +701,12 @@ class GenerationEngine:
                 outs[i].append(tok)
                 last_tok[i] = tok
                 if self.eos_id is not None and tok == self.eos_id:
+                    # release NOW, not at the end of the batch: a done slot
+                    # left active keeps decoding (wasted compute) and keeps
+                    # advancing its cache length — drifting vs the
+                    # scheduler path's chunk-boundary retire
                     done[i] = True
+                    self.release_slot(i)
             if all(done):
                 break
         dt = time.perf_counter() - t0

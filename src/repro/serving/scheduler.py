@@ -33,6 +33,17 @@ slot) or frees a running slot at the next chunk boundary — freed slots
 backfill in the same tick, and cancelled requests retire with
 ``error_code='CANCELLED'``.
 
+Admission is additionally *block-gated* on paged engines: a request is
+placed only when the shared KV page pool can hold its prefill
+(``engine.can_admit``). The FIFO path holds its head in line; the QoS
+path parks already-granted tickets in a deferred queue with first claim
+on freed pages. Before each chunk the scheduler secures a page per
+upcoming KV write (``ensure_capacity``) — a slot that cannot take a
+single further write retires cleanly with ``KV_POOL_EXHAUSTED`` instead
+of stalling the co-batch, and prompts that could never be satisfied
+(no generation headroom -> ``PROMPT_TOO_LONG``; more pages than the pool
+holds) retire without touching a slot.
+
 Invariants (property-tested):
 - a slot is never double-occupied;
 - admission never starves: FIFO is arrival order; under QoS every
@@ -67,7 +78,12 @@ import numpy as np
 from repro.serving.engine import GenerationEngine
 
 
-@dataclass
+# eq=False: requests compare by IDENTITY. Beyond being semantically right
+# (two requests are never "the same work" by field value), it keeps
+# deque.remove() a pure C-level scan with no Python-level __eq__ thread-
+# switch points — submit() appends lock-free, and a generated __eq__ would
+# let an append land mid-remove and blow up the cancel sweep.
+@dataclass(eq=False)
 class Request:
     id: int
     prompt: List[int]
@@ -82,6 +98,10 @@ class Request:
     # — no extra host syncs). Runs under the scheduler lock on the worker
     # thread, so it must be O(1) and non-blocking; exceptions are swallowed.
     token_sink: Optional[Any] = None
+    # absolute monotonic start-by deadline (the controller enforces it
+    # while queued; this copy covers the block-deferred wait, where the
+    # ticket is already granted)
+    deadline_at: Optional[float] = None
     # filled by the scheduler
     output: List[int] = field(default_factory=list)
     slot: int = -1
@@ -108,6 +128,8 @@ class SchedulerStats:
     shed: int = 0                     # deadline-expired, never ran
     cancelled: int = 0                # cancelled while queued or running
     cache_overflows: int = 0          # retired with MAX_SEQ_EXCEEDED
+    pool_exhausted: int = 0           # retired with KV_POOL_EXHAUSTED
+    rejected: int = 0                 # retired with PROMPT_TOO_LONG
     wall_s: float = 0.0               # accrued per tick (run() adds nothing)
     occupancy_sum: int = 0            # sum of active-batch sizes per decode
     max_occupancy: int = 0
@@ -135,6 +157,10 @@ class ContinuousBatchingScheduler:
             if decode_chunk is not None else None
         self.admission = admission        # Optional[AdmissionController]
         self.queue: deque[Request] = deque()      # FIFO path (admission=None)
+        # QoS-admitted work waiting for KV pool blocks (paged engines): the
+        # controller already dequeued it, so it holds first claim — in its
+        # dequeue order — on blocks freed by retiring slots
+        self._deferred: deque[Request] = deque()
         self.active: Dict[int, Request] = {}      # slot -> request
         # per-slot temperature: mixed-temperature batches must not
         # interfere (fixed [max_batch] shape keeps the decode compile-stable)
@@ -183,7 +209,9 @@ class ContinuousBatchingScheduler:
         atomic ``itertools.count``; the controller and the FIFO deque have
         their own synchronization."""
         req = Request(next(self._ids), list(prompt), max_new_tokens,
-                      temperature, extra, token_sink=token_sink)
+                      temperature, extra, token_sink=token_sink,
+                      deadline_at=(time.monotonic() + deadline_s
+                                   if deadline_s is not None else None))
         self._pending[req.id] = req
         if self.admission is not None:
             try:
@@ -224,12 +252,13 @@ class ContinuousBatchingScheduler:
         # lock-free: depth()/len() are point-in-time reads used for window
         # heuristics and stats — they must not stall behind a decode step
         if self.admission is not None:
-            return self.admission.depth()
+            return self.admission.depth() + len(self._deferred)
         return len(self.queue)
 
     def has_work(self) -> bool:
         if self.admission is not None:
-            return bool(self.admission.depth() or self.active)
+            return bool(self.admission.depth() or self._deferred
+                        or self.active)
         return bool(self.queue or self.active)
 
     # -- scheduling ----------------------------------------------------------
@@ -261,22 +290,77 @@ class ContinuousBatchingScheduler:
         self._retire(req)
         self.stats.cancelled += 1
 
+    def _too_long(self, req: Request):
+        """Defense-in-depth for direct submitters: the service layer
+        rejects these at validation time (PROMPT_TOO_LONG, HTTP 400), but
+        a raw ``submit`` must still retire instead of queueing forever."""
+        req.error = (f"prompt of {len(req.prompt)} tokens leaves no "
+                     f"generation headroom (max_seq {self.engine.max_seq}, "
+                     f"max admissible {self.engine.max_prompt_len()})")
+        req.error_code = "PROMPT_TOO_LONG"
+        self._retire(req)
+        self.stats.rejected += 1
+
+    def _pool_exhausted(self, req: Request):
+        """The shared KV pool cannot give the slot its next page: retire
+        cleanly (partial output stays on the request) rather than stall
+        the whole co-batch behind an unpageable slot. Preemption could
+        instead swap the slot out here — same boundary, future work."""
+        req.error = (f"KV pool exhausted after {len(req.output)} generated "
+                     f"tokens (requested {req.max_new_tokens}; pool = "
+                     f"{self.engine.kv_pool_blocks} pages of "
+                     f"{self.engine.page_size} tokens)")
+        req.error_code = "KV_POOL_EXHAUSTED"
+        self._release(req)
+        # ran and retired -> counted completed (same reconciliation rule
+        # as MAX_SEQ_EXCEEDED) plus the specific exhaustion counter
+        self.stats.completed += 1
+        self.stats.pool_exhausted += 1
+
+    @staticmethod
+    def _sweep_queue(q: "deque[Request]") -> List[Request]:
+        """Remove cancelled entries from ``q`` in place and return them.
+
+        Single filtered pass over a snapshot + per-item ``remove`` — never
+        the popleft/append rotation the previous version used: ``submit``
+        appends lock-free, and an arrival landing mid-rotation was spliced
+        between rotated items, losing its FIFO position. ``remove`` leaves
+        every other element (including concurrent tail appends) exactly
+        where it was.
+        """
+        swept = []
+        for req in [r for r in list(q) if r.cancelled]:
+            try:
+                q.remove(req)
+            except (ValueError, IndexError, RuntimeError):
+                continue              # raced another sweep / a concurrent
+            swept.append(req)         # append (retry next tick)
+        return swept
+
     def _sweep_cancelled(self):
         """Honor cancellation marks — runs at the top of the tick, BEFORE
         admission, so a slot freed by a running cancel backfills this very
-        tick. Queued FIFO work is swept in place (the admission-controller
-        path sweeps inside ``take``)."""
+        tick. Queued FIFO work and block-deferred work are swept in place
+        (the admission-controller path sweeps inside ``take``)."""
         for req in [r for r in self.active.values() if r.cancelled]:
             self.engine.release_slot(req.slot)
             del self.active[req.slot]
             self._cancel_retire(req)
-        if self.admission is None and any(r.cancelled for r in self.queue):
-            for _ in range(len(self.queue)):      # one stable rotation
-                req = self.queue.popleft()
-                if req.cancelled:
-                    self._cancel_retire(req)
-                else:
-                    self.queue.append(req)
+        if self.admission is None:
+            for req in self._sweep_queue(self.queue):
+                self._cancel_retire(req)
+        for req in self._sweep_queue(self._deferred):
+            self._cancel_retire(req)
+        # deadlines keep ticking while a granted ticket waits for pool
+        # blocks — the controller only enforces them up to the grant
+        now = time.monotonic()
+        for req in [r for r in list(self._deferred)
+                    if r.deadline_at is not None and r.deadline_at < now]:
+            try:
+                self._deferred.remove(req)
+            except (ValueError, IndexError, RuntimeError):
+                continue
+            self._shed(req)
 
     def _place(self, req: Request, slot: int):
         """Dispatch prefill + on-device first token; no host sync here —
@@ -289,27 +373,83 @@ class ContinuousBatchingScheduler:
         self._pending_first.append((req, first))
         self.stats.prefills += 1
 
+    def _never_admissible(self, req: Request) -> bool:
+        """True for requests no amount of waiting can place: prompts with
+        no generation headroom and prompts whose prefill needs more pages
+        than the whole pool holds."""
+        if not self.engine.fits_prompt(len(req.prompt)):
+            return True
+        return (self.engine.paged
+                and self.engine.blocks_for_prompt(len(req.prompt))
+                > self.engine.kv_pool_blocks)
+
+    def _retire_inadmissible(self, req: Request):
+        if not self.engine.fits_prompt(len(req.prompt)):
+            self._too_long(req)
+            return
+        req.error = (f"prompt of {len(req.prompt)} tokens needs more "
+                     f"KV pool pages than the pool holds "
+                     f"({self.engine.kv_pool_blocks} pages of "
+                     f"{self.engine.page_size} tokens)")
+        req.error_code = "KV_POOL_EXHAUSTED"
+        self._retire(req)
+        self.stats.pool_exhausted += 1
+
     def _admit(self):
+        """Admission is gated on free *slots* AND (paged engines) free
+        pool *blocks*: a prompt whose prefill pages cannot be allocated
+        holds its place in line instead of being placed just to starve."""
         free = self.engine.free_slots()
+        blocked = False
+        # block-deferred work first: the controller already granted it
+        while free and self._deferred:
+            req = self._deferred[0]
+            if req.cancelled:
+                self._deferred.popleft()
+                self._cancel_retire(req)
+                continue
+            if not self.engine.can_admit(len(req.prompt)):
+                blocked = True                    # pool still tight: hold
+                break                             # order, retry next tick
+            self._deferred.popleft()
+            self._place(req, free.pop(0))
         if self.admission is not None:
             # controller decides order; it also sweeps deadline-expired
             # and cancelled work even when no slot is free (k == 0) so
             # doomed requests fail promptly instead of rotting behind a
             # full batch
-            tickets, shed = self.admission.take(len(free))
+            tickets, shed = self.admission.take(
+                0 if blocked else len(free))
             for t in shed:
                 self._shed(t.item)
             for t in tickets:
                 if t.item.cancelled:              # raced the sweep
                     self._cancel_retire(t.item)
                     continue
+                if self._never_admissible(t.item):
+                    self._retire_inadmissible(t.item)
+                    continue
+                if not free or not self.engine.can_admit(
+                        len(t.item.prompt)):
+                    # no slot left (an earlier ticket took the last) or no
+                    # pool blocks: hold in grant order until capacity frees
+                    self._deferred.append(t.item)
+                    continue
                 self._place(t.item, free.pop(0))
             return
-        while free and self.queue:
-            req = self.queue.popleft()            # FIFO: no starvation
-            if req.cancelled:                     # dropped without a slot
+        while free and self.queue and not blocked:
+            req = self.queue[0]                   # peek: FIFO holds even
+            if req.cancelled:                     # when blocks are tight
+                self.queue.popleft()
                 self._cancel_retire(req)
                 continue
+            if self._never_admissible(req):
+                self.queue.popleft()
+                self._retire_inadmissible(req)
+                continue
+            if not self.engine.can_admit(len(req.prompt)):
+                break                             # blocks exhausted: wait
+            self.queue.popleft()                  # FIFO: no starvation
             self._place(req, free.pop(0))
 
     def _maybe_finish(self, req: Request):
@@ -376,6 +516,27 @@ class ContinuousBatchingScheduler:
                 for slot, req in self.active.items():
                     have = len(req.output) + (1 if id(req) in pending else 0)
                     budgets[slot] = max(0, req.max_new_tokens - have)
+                if self.engine.paged:
+                    # every KV write this chunk needs a pool page secured
+                    # BEFORE dispatch. A slot that cannot take one more
+                    # write retires NOW (its pages may unblock the slots
+                    # ensured after it); a partially-secured slot decodes
+                    # up to its headroom and retries next tick.
+                    for slot, req in list(self.active.items()):
+                        if budgets[slot] <= 0:
+                            continue
+                        got = self.engine.ensure_capacity(
+                            slot, min(self.decode_chunk, int(budgets[slot])))
+                        if got == 0:
+                            if (self.engine.context_len(slot)
+                                    >= self.engine.max_seq):
+                                self._overflow(req)
+                            else:
+                                self._pool_exhausted(req)
+                            budgets[slot] = 0
+                            continue
+                        budgets[slot] = min(int(budgets[slot]), got)
+            if self.active:
                 # budget-aligned chunk: never decode past the earliest
                 # completion, so a finishing request's result is visible at
                 # the very next sync instead of idling masked behind
@@ -412,7 +573,11 @@ class ContinuousBatchingScheduler:
                         self.stats.emitted_tokens += n
                         self._feed_sink(req, chunk_toks)
                     self._maybe_finish(req)
-                    if not req.done and self.engine.capacity_left(slot) <= 0:
+                    # physical capacity only: a pool-starved (but not
+                    # max_seq-full) slot is retired by the pre-chunk ensure
+                    # pass with KV_POOL_EXHAUSTED, not mislabelled here
+                    if not req.done and (self.engine.context_len(slot)
+                                         >= self.engine.max_seq):
                         self._overflow(req)
             self.stats.ticks += 1
             self.stats.wall_s += time.perf_counter() - t0

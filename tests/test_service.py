@@ -129,18 +129,33 @@ def test_batched_service_invalid_input_does_not_kill_worker():
 def test_batched_service_oversized_prompt_fails_alone():
     """A prompt that cannot fit a slot is rejected at enqueue (on the
     request thread) — it must never reach the worker and poison the
-    co-batch. max_seq=48 is deliberately non-power-of-two so a 40-token
-    prompt buckets to 64 > 48 despite being under max_seq."""
-    svc = BatchedService(
-        EXCHANGE.get("qwen3-4b").build(max_seq=48, max_batch=2))
+    co-batch. The wrapper's own truncation now clamps text to
+    ``engine.max_prompt_len()`` (a 40-token prompt at max_seq=48 truncates
+    to the 32-token bucket and SUCCEEDS), so an unfittable prompt must be
+    injected below the truncation to exercise the enqueue guard."""
+    wrapper = EXCHANGE.get("qwen3-4b").build(max_seq=48, max_batch=2)
+    svc = BatchedService(wrapper)
     try:
+        # truncation keeps honestly-long text admissible (regression for
+        # the old max_seq-1 clamp, which left prompts that bucketed past
+        # max_seq and were doomed at enqueue)
         results = svc.predict_batch([
-            {"text": "x" * 40, "max_new_tokens": 2},   # buckets to 64 > 48
+            {"text": "x" * 40, "max_new_tokens": 2},
             {"text": "ok", "max_new_tokens": 2},
         ])
-        assert results[0]["status"] == "error"
-        assert "fit" in results[0]["error"]
-        assert results[1]["status"] == "ok"            # co-batch unharmed
+        assert [r["status"] for r in results] == ["ok", "ok"]
+
+        orig = wrapper.prepare_generation
+        wrapper.prepare_generation = lambda inp: (
+            list(range(1, 65)), {"max_new_tokens": 2, "temperature": 0.0},
+            None)                                  # 64 tokens > max_seq 48
+        bad = svc.predict({"text": "oversized"})
+        wrapper.prepare_generation = orig
+        assert bad["status"] == "error"
+        assert bad["code"] == "PROMPT_TOO_LONG"
+        assert "fit" in bad["error"]
+        good = svc.predict({"text": "ok", "max_new_tokens": 2})
+        assert good["status"] == "ok"              # co-batch unharmed
         assert svc._worker_error is None
     finally:
         svc.close()
