@@ -212,8 +212,10 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
     r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
           summary="Deploy an asset (optional {'service': sync|batched|auto,"
                   " 'qos': {...}, 'paged': bool, 'page_size': int,"
-                  " 'kv_pool_blocks': int} — the kv knobs select the paged"
-                  " KV cache layout)")
+                  " 'kv_pool_blocks': int, 'prefix_cache': bool,"
+                  " 'prefix_cache_pages': int} — the kv knobs select the"
+                  " paged KV cache layout; the prefix knobs enable"
+                  " content-addressed KV page sharing on top of it)")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
@@ -719,6 +721,27 @@ class MAXServer:
                                    f"{key!r} must be a positive integer")
                 engine_kw.setdefault("paged", True)
                 engine_kw[key] = v
+        # prefix caching rides the paged layout; asking for it implies it
+        if body.get("prefix_cache") is not None:
+            if not isinstance(body["prefix_cache"], bool):
+                raise ApiError("INVALID_INPUT",
+                               "'prefix_cache' must be a boolean")
+            engine_kw["prefix_cache"] = body["prefix_cache"]
+            if body["prefix_cache"]:
+                engine_kw.setdefault("paged", True)
+        if body.get("prefix_cache_pages") is not None:
+            v = body["prefix_cache_pages"]
+            if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                raise ApiError("INVALID_INPUT",
+                               "'prefix_cache_pages' must be a positive "
+                               "integer")
+            if engine_kw.get("prefix_cache") is False:
+                raise ApiError("INVALID_INPUT",
+                               "'prefix_cache_pages' conflicts with "
+                               "'prefix_cache': false")
+            engine_kw["prefix_cache_pages"] = v
+            engine_kw.setdefault("prefix_cache", True)
+            engine_kw.setdefault("paged", True)
         if engine_kw.get("paged"):
             # mirror the engine's page_size/max_seq constraint HERE, before
             # deploy: a force-redeploy tears down the healthy deployment

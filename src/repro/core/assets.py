@@ -59,7 +59,9 @@ class _EngineWrapper(MAXModelWrapper):
     def __init__(self, asset: ModelAsset, *, smoke: bool = True,
                  max_batch: int = 4, max_seq: int = 128, seed: int = 0,
                  decode_chunk: int = 8, paged: bool = False,
-                 page_size: int = 16, kv_pool_blocks: Optional[int] = None):
+                 page_size: int = 16, kv_pool_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         cfg = asset.config
         if smoke and cfg.name in ASSIGNED:
             cfg = reduce_for_smoke(cfg)
@@ -71,7 +73,9 @@ class _EngineWrapper(MAXModelWrapper):
                                        eos_id=TOKENIZER.eos_id,
                                        decode_chunk=decode_chunk,
                                        paged=paged, page_size=page_size,
-                                       kv_pool_blocks=kv_pool_blocks)
+                                       kv_pool_blocks=kv_pool_blocks,
+                                       prefix_cache=prefix_cache,
+                                       prefix_cache_pages=prefix_cache_pages)
         self.MODEL_META_DATA = asset.metadata
 
     def _result(self, tokens: List[int], prompt_len: int) -> GenerationResult:

@@ -732,6 +732,22 @@ class BatchedService(InferenceService):
             self.metrics.register_gauge(
                 "max_kv_pool_blocks_total",
                 lambda: self.engine.kv_pool_blocks, model=self.model_id)
+        if getattr(self.engine, "prefix_cache", None) is not None:
+            # prefix-cache effectiveness: hit/miss/eviction rates (counters
+            # rendered as gauges — monotonic reads off engine state, no
+            # write per event on the hot path) plus instantaneous sharing
+            def _pstat(key):
+                return lambda: self.engine.prefix_stats()[key]
+            for key in ("hits", "misses", "hit_tokens", "evictions",
+                        "cow_copies"):
+                self.metrics.register_gauge(
+                    f"max_prefix_cache_{key}_total", _pstat(key),
+                    model=self.model_id)
+            for key in ("shared_pages", "cached_pages",
+                        "unreferenced_pages"):
+                self.metrics.register_gauge(
+                    f"max_prefix_cache_{key}", _pstat(key),
+                    model=self.model_id)
         self._thread = threading.Thread(
             target=self._worker, daemon=True,
             name=f"batched-{self.model_id}")
@@ -1123,6 +1139,10 @@ class BatchedService(InferenceService):
             "queue_depth": self.scheduler.queued_count(),
             "engine_max_batch": self.engine.max_batch,
         })
+        if getattr(self.engine, "prefix_cache", None) is not None:
+            # also nested under kv_cache; surfaced top-level so dashboards
+            # need not know the KV layout to find hit rates
+            out["prefix_cache"] = self.engine.prefix_stats()
         if self._worker_error:
             out["last_worker_error"] = self._worker_error
         return out

@@ -218,6 +218,15 @@ def paged_cache_write(k_pool, v_pool, k_new, v_new, block_table, lengths):
     table entry is the unallocated sentinel (>= N) scatter out of bounds
     and are dropped — the paged counterpart of the linear cache's
     write-past-length invisibility.
+
+    Read-only page invariant (prefix caching): a pool page referenced by
+    more than one block table, or registered in the prefix cache, must
+    never take a write. This kernel cannot tell such pages apart — the
+    HOST enforces it structurally: shared/registered pages always end at
+    or below every referencing slot's length, writes land AT ``lengths``
+    (i.e. past them), and the one exception (replaying the last prompt
+    token of a fully-cached prompt) is copy-on-written by the engine
+    before the dispatch.
     Returns updated (k_pool, v_pool).
     """
     N, P = k_pool.shape[0], k_pool.shape[1]

@@ -1,4 +1,5 @@
 from repro.serving.engine import GenerationEngine, GenerationResult
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SchedulerStats
 from repro.serving.sampling import sample, mask_padded_vocab
 from repro.serving.metrics import Counter, Histogram, MetricsRegistry

@@ -37,6 +37,21 @@ Prompt accounting is two-track: ``_lengths`` / ``context_len`` are the
 PHYSICAL cache lengths (ring families pad prompts to their bucket and
 treat pads as context), while ``logical_len`` / ``kv_stats`` report what
 the client actually sent — padding is never billed as usage.
+
+``prefix_cache=True`` (paged engines only) layers a content-addressed
+prefix cache (serving/prefix_cache.py) on the page allocator. Admission
+then splits a prompt at the largest page boundary below its length:
+the aligned *prefix* comes from cached pages when its chained hash
+matches (refcount bumped, no prefill compute) or is prefilled and
+registered, and the *tail* is force-fed through the fused decode path
+(``_fill``) — one scan dispatch that writes the tail's KV and yields the
+first-token logits. Cold and warm admissions thus share the exact same
+numeric path for everything past the prefix boundary, which is what makes
+a warm replay token-identical to its cold run. Shared and cache-
+registered pages are READ-ONLY: the one write that can target one (the
+full-hit replay of the last prompt token) copy-on-writes the page first,
+and retire/cancel parks unreferenced cached pages in an LRU the allocator
+evicts from before declaring the pool exhausted.
 """
 
 from __future__ import annotations
@@ -51,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import mask_padded_vocab
 
 F32 = jnp.float32
@@ -83,6 +99,8 @@ class GenerationEngine:
                  max_seq: int = 512, eos_id: Optional[int] = None,
                  decode_chunk: int = 8, paged: bool = False,
                  page_size: int = 16, kv_pool_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None,
                  extra_inputs: Optional[Dict[str, Any]] = None):
         self.model = model
         self.params = params
@@ -137,6 +155,22 @@ class GenerationEngine:
             self._slot_blocks = [[] for _ in range(max_batch)]
             self._cache = model.init_cache(max_batch, max_seq)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        # prefix caching rides the paged layout (block tables are what make
+        # cross-slot page sharing possible); asking for it elsewhere falls
+        # back silently, like paged itself on ring families
+        self.prefix_cache: Optional[PrefixCache] = None
+        if self.paged and prefix_cache:
+            self.prefix_cache = PrefixCache(
+                self.page_size, max_unreferenced=prefix_cache_pages)
+            # block-table references per pool page (1 = uniquely owned,
+            # >1 = shared; shared or cache-registered pages are read-only)
+            self._page_refs = np.zeros((self.kv_pool_blocks,), np.int32)
+            # slots whose KV is keyed purely by token-ids — requests with
+            # extra inputs (image embeds…) bypass the cache entirely
+            self._slot_cacheable = [False] * max_batch
+            self._fill_jit: Dict[int, Any] = {}
+            self._copy_page = jax.jit(self._copy_page_impl,
+                                      donate_argnums=(0,))
         self._lengths = np.zeros((max_batch,), np.int32)
         self._active = np.zeros((max_batch,), bool)
         # logical vs physical prompt accounting: ring families pad prompts
@@ -224,7 +258,16 @@ class GenerationEngine:
     # -- paged pool management (host side; device work stays sync-free) -----
 
     def _alloc_blocks(self, slot: int, n: int) -> bool:
-        """Move ``n`` pool pages to ``slot`` (all-or-nothing)."""
+        """Move ``n`` pool pages to ``slot`` (all-or-nothing). With a
+        prefix cache attached, unreferenced cached pages are LRU-evicted
+        into the free list first — retained cache never shrinks the pool
+        capacity admission can claim."""
+        if self.prefix_cache is not None:
+            while len(self._free_pool) < n:
+                page = self.prefix_cache.pop_evictable()
+                if page is None:
+                    break
+                self._free_pool.append(page)
         if len(self._free_pool) < n:
             return False
         start = len(self._slot_blocks[slot])
@@ -232,7 +275,78 @@ class GenerationEngine:
             blk = self._free_pool.pop()
             self._slot_blocks[slot].append(blk)
             self._table[slot, start + i] = blk
+            if self.prefix_cache is not None:
+                self._page_refs[blk] = 1
         return True
+
+    def _take_free_page(self) -> Optional[int]:
+        """One pool page for a copy-on-write target (evicting from the
+        prefix cache if the free list is dry); None when truly exhausted."""
+        if not self._free_pool and self.prefix_cache is not None:
+            page = self.prefix_cache.pop_evictable()
+            if page is not None:
+                self._free_pool.append(page)
+        if not self._free_pool:
+            return None
+        blk = self._free_pool.pop()
+        self._page_refs[blk] = 1
+        return blk
+
+    def _decref(self, blk: int):
+        """Drop one block-table reference to ``blk``. The last reference
+        frees the page — unless it is cache-registered, where it parks as
+        an LRU eviction candidate instead (cap overflow evicts to free)."""
+        self._page_refs[blk] -= 1
+        assert self._page_refs[blk] >= 0, f"page {blk} refcount underflow"
+        if self._page_refs[blk] == 0:
+            if self.prefix_cache.contains_page(blk):
+                self._free_pool.extend(
+                    self.prefix_cache.release_page(blk))
+            else:
+                self._free_pool.append(blk)
+
+    def _page_writable(self, blk: int) -> bool:
+        """A page may take KV writes only while it is uniquely owned and
+        not content-addressed: a shared page backs other slots' context,
+        and a registered page backs the cache's hash -> content promise."""
+        return (self._page_refs[blk] == 1
+                and not self.prefix_cache.contains_page(blk))
+
+    def _make_writable(self, slot: int, pos: int) -> bool:
+        """Copy-on-write guard for the page holding position ``pos`` of
+        ``slot``: shared / cache-registered pages are read-only, so the
+        first write into one copies its content into a fresh page, repoints
+        the slot's table entry, and drops the shared reference. Returns
+        False when no page can be obtained for the copy (pool exhausted —
+        the caller retires the slot cleanly)."""
+        pi = pos // self.page_size
+        if pi >= len(self._slot_blocks[slot]):
+            return True                     # next write page not allocated yet
+        blk = self._slot_blocks[slot][pi]
+        if self._page_writable(blk):
+            return True
+        fresh = self._take_free_page()
+        if fresh is None:
+            return False
+        self._cache = self._copy_page(
+            self._cache, jnp.asarray(blk, jnp.int32),
+            jnp.asarray(fresh, jnp.int32))
+        self._slot_blocks[slot][pi] = fresh
+        self._table[slot, pi] = fresh
+        self._push_table_row(slot)
+        self._decref(blk)
+        self.prefix_cache.cow_copies += 1
+        return True
+
+    def _copy_page_impl(self, cache, src, dst):
+        """Device-side pool page copy (all layers, k and v) — an async
+        dispatch like every other cache op, never a host sync."""
+        cache = dict(cache)
+        cache["k_pool"] = cache["k_pool"].at[:, dst].set(
+            cache["k_pool"][:, src])
+        cache["v_pool"] = cache["v_pool"].at[:, dst].set(
+            cache["v_pool"][:, src])
+        return cache
 
     def _push_table_row(self, slot: int):
         """Mirror the slot's host table row to the device cache (a tiny
@@ -244,23 +358,76 @@ class GenerationEngine:
         """Unallocated pool pages (0 for contiguous engines)."""
         return len(self._free_pool)
 
+    def available_blocks(self) -> int:
+        """Pool pages admission may claim: the free list plus every
+        unreferenced cached page the allocator could evict."""
+        avail = len(self._free_pool)
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable()
+        return avail
+
     def blocks_in_use(self) -> int:
-        return self.kv_pool_blocks - len(self._free_pool)
+        """Pages referenced by live slots — shared pages count ONCE, and
+        cache-retained (unreferenced) pages are not live context."""
+        used = self.kv_pool_blocks - len(self._free_pool)
+        if self.prefix_cache is not None:
+            used -= self.prefix_cache.evictable()
+        return used
 
-    def blocks_for_prompt(self, n: int) -> int:
-        """Pool pages admission must see free before taking an ``n``-token
-        prompt: its prefill pages plus room for the first decode write."""
+    def _prompt_page_plan(self, prompt: List[int]
+                          ) -> Tuple[int, List[int], int]:
+        """(total pages the seated prompt references, cached pages backing
+        its longest hashed prefix, extra pages copy-on-write will draw).
+        The COW page appears exactly when the *whole* prompt is cached:
+        the last prompt token must be replayed for its logits, and its KV
+        write targets the final shared page."""
+        n = len(prompt)
+        total = -(-(n + 1) // self.page_size)
+        hits = self.prefix_cache.match(prompt, peek=True)
+        cow = 1 if len(hits) * self.page_size >= n else 0
+        return total, hits, cow
+
+    def blocks_for_prompt(self, prompt) -> int:
+        """Pool pages admission must see claimable before taking this
+        prompt: its prefill pages plus room for the first decode write.
+        Accepts a token list (a prefix-cached engine then charges only the
+        pages the cache cannot seat) or a bare length (full charge — used
+        for worst-case bounds and requests with extra inputs, which bypass
+        the cache)."""
+        if isinstance(prompt, (int, np.integer)):
+            n, toks = int(prompt), None
+        else:
+            toks = list(prompt)
+            n = len(toks)
         true_len = _bucket(n) if self._ring else n
-        return -(-(true_len + 1) // self.page_size)
+        total = -(-(true_len + 1) // self.page_size)
+        if toks is None or self.prefix_cache is None:
+            return total
+        _, hits, cow = self._prompt_page_plan(toks)
+        return total - len(hits) + cow
 
-    def can_admit(self, n: int) -> bool:
+    def can_admit(self, prompt) -> bool:
         """Block-aware admission gate: beyond :meth:`fits_prompt`, a paged
-        engine also needs enough free pool pages for the prompt."""
+        engine also needs enough claimable pool pages for the prompt.
+        Like :meth:`blocks_for_prompt`, accepts a token list or a length;
+        with a token list a prefix-cached engine charges only non-cached
+        pages — but never counts the prompt's own prospective hits as
+        evictable headroom."""
+        if isinstance(prompt, (int, np.integer)):
+            n, toks = int(prompt), None
+        else:
+            toks = list(prompt)
+            n = len(toks)
         if not self.fits_prompt(n):
             return False
         if not self.paged:
             return True
-        return len(self._free_pool) >= self.blocks_for_prompt(n)
+        if toks is None or self.prefix_cache is None:
+            return self.available_blocks() >= self.blocks_for_prompt(n)
+        total, hits, cow = self._prompt_page_plan(toks)
+        avail = (len(self._free_pool)
+                 + self.prefix_cache.evictable_excluding(hits))
+        return avail >= total - len(hits) + cow
 
     def ensure_capacity(self, slot: int, want: int) -> int:
         """Secure write headroom for up to ``want`` more KV entries on
@@ -277,13 +444,22 @@ class GenerationEngine:
         want = min(want, phys)
         have = len(self._slot_blocks[slot]) * self.page_size - length
         dirty = False
-        while have < want and self._free_pool \
+        while have < want and self.available_blocks() \
                 and len(self._slot_blocks[slot]) < self._pages_per_slot:
             self._alloc_blocks(slot, 1)
             have += self.page_size
             dirty = True
         if dirty:
             self._push_table_row(slot)
+        if self.prefix_cache is not None and want > 0 and have > 0:
+            # read-only page invariant: the next KV write lands at
+            # ``length`` — if that position sits in a shared or cache-
+            # registered page, copy-on-write it now (steady-state this
+            # never fires: insert COWs the one replay write, and decode
+            # writes land past every shared page — but direct step()
+            # drivers and the property harness exercise it)
+            if not self._make_writable(slot, length):
+                return 0
         return max(0, min(want, have))
 
     def _first_tok_impl(self, logits, next_tok, slot):
@@ -407,6 +583,63 @@ class GenerationEngine:
         return (cache, tok,
                 jnp.swapaxes(toks, 0, 1), jnp.swapaxes(emitted, 0, 1))
 
+    def _fill_impl(self, k, params, cache, tokens, count, start, slot,
+                   next_tok):
+        """Force-feed ``count`` prompt tokens into ``slot`` as one fused
+        scan of ``k`` (>= count, compile-stable pow2) decode steps starting
+        at position ``start`` — the prefix-cache tail path. Each step
+        writes one KV entry exactly like regular decode (so the tail's
+        pages end up byte-identical to decode-produced ones), and the
+        final fed token's logits yield the first generated token, written
+        into the device next-token buffer (sync-free admission, same
+        contract as ``_first_tok``).
+
+        Other slots run masked (inactive): their lengths hold and their
+        KV writes land past their valid length, the same invisible-write
+        convention the chunk path uses. On the ORACLE backend the paged
+        cache translates at the fill boundary exactly like ``_chunk_impl``
+        — the block table is fixed across the fill (every page was secured
+        before dispatch), and shared read-only pages scatter back the very
+        bytes they gathered (the linear steps only write at this slot's
+        positions), so the round-trip never mutates them.
+        """
+        from repro.kernels import ops as _kops
+        translate = "k_pool" in cache and _kops.get_backend() == "ref"
+        cache = dict(cache)
+        cache["lengths"] = cache["lengths"].at[slot].set(start)
+        work = self._unpage(cache) if translate else cache
+        mine = jnp.arange(self.max_batch) == slot
+
+        def body(carry, tok):
+            work, i = carry
+            active = mine & (i < count)
+            tok_vec = jnp.where(mine, tok, 0).astype(jnp.int32)
+            logits, work = self.model.decode_step(params, work, tok_vec,
+                                                  active=active)
+            return (work, i + 1), logits[slot]
+
+        (work, _), logit_seq = jax.lax.scan(
+            body, (work, jnp.int32(0)), tokens, length=k)
+        cache = self._repage(cache, work) if translate else work
+        masked = mask_padded_vocab(logit_seq[count - 1], self.cfg.vocab_size)
+        first = jnp.argmax(masked).astype(jnp.int32)
+        return cache, next_tok.at[slot].set(first), first
+
+    def _fill(self, tail: List[int], start: int, slot: int) -> jax.Array:
+        """Dispatch the fused tail fill; returns the first-token scalar."""
+        k = _bucket(len(tail), minimum=1)
+        if k not in self._fill_jit:
+            self._fill_jit[k] = jax.jit(partial(self._fill_impl, k),
+                                        donate_argnums=(1,))
+        padded = np.zeros((k,), np.int32)
+        padded[:len(tail)] = tail
+        self._cache, self._next_tok, first = self._fill_jit[k](
+            self.params, self._cache, jnp.asarray(padded),
+            jnp.asarray(len(tail), jnp.int32),
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(slot, jnp.int32), self._next_tok)
+        return first
+
     # -- public API ------------------------------------------------------------
 
     def fits_prompt(self, n: int) -> bool:
@@ -471,7 +704,7 @@ class GenerationEngine:
         if self.paged:
             have = (len(self._slot_blocks[slot]) * self.page_size
                     - int(self._lengths[slot]))
-            left = min(left, have + len(self._free_pool) * self.page_size)
+            left = min(left, have + self.available_blocks() * self.page_size)
         return max(0, left)
 
     def kv_stats(self) -> Dict[str, Any]:
@@ -492,6 +725,10 @@ class GenerationEngine:
                 "blocks_in_use": used,
                 "free_blocks": len(self._free_pool),
             }
+            if self.prefix_cache is not None:
+                # cache-retained pages are claimable, not live context
+                out["cached_blocks"] = self.prefix_cache.evictable()
+                out["prefix_cache"] = self.prefix_stats()
         else:
             in_use = active * self.max_seq * bpt
             out = {"paged": False}
@@ -505,6 +742,66 @@ class GenerationEngine:
         )
         return out
 
+    def prefix_stats(self) -> Optional[Dict[str, int]]:
+        """Prefix-cache counters plus the instantaneous shared-page count
+        (pages referenced by more than one block table); None when prefix
+        caching is off."""
+        if self.prefix_cache is None:
+            return None
+        s = self.prefix_cache.stats()
+        s["shared_pages"] = int((self._page_refs > 1).sum())
+        return s
+
+    def check_pool_invariants(self, *, device: bool = True):
+        """Audit the page-allocator partition (test hook; ``device=True``
+        also syncs the device block table against the host mirror).
+
+        Every pool page must be exactly one of:
+        - free (on the free list, unreferenced, not cached),
+        - live (referenced by >= 1 block tables, refcount == the number of
+          table references; uniquely owned when 1, shared when > 1),
+        - cache-retained (registered, zero references, parked in the LRU).
+
+        In particular a freed page can never still be referenced from any
+        table — the no-use-after-free half of the COW/refcount contract.
+        """
+        assert self.paged, "invariant audit is for paged engines"
+        refs: Dict[int, int] = {}
+        for s in range(self.max_batch):
+            blocks = self._slot_blocks[s]
+            for i, pg in enumerate(blocks):
+                assert 0 <= pg < self.kv_pool_blocks, (s, i, pg)
+                assert self._table[s, i] == pg, \
+                    f"host table desync at slot {s} page {i}"
+                refs[pg] = refs.get(pg, 0) + 1
+            assert (self._table[s, len(blocks):]
+                    == self.kv_pool_blocks).all(), \
+                f"slot {s} table not sentinel past its allocation"
+        free = set(self._free_pool)
+        assert len(free) == len(self._free_pool), "double-freed page"
+        assert not free & set(refs), \
+            f"freed pages still referenced: {sorted(free & set(refs))}"
+        if self.prefix_cache is not None:
+            for pg in range(self.kv_pool_blocks):
+                assert int(self._page_refs[pg]) == refs.get(pg, 0), \
+                    (f"page {pg} refcount {int(self._page_refs[pg])} != "
+                     f"{refs.get(pg, 0)} table references")
+            lru = set(self.prefix_cache.unreferenced_pages())
+            cached = set(self.prefix_cache.cached_pages())
+            assert lru <= cached
+            assert not lru & free and not lru & set(refs)
+            # a registered page with no references must be evictable
+            assert cached - set(refs) == lru, \
+                "unreferenced cached page missing from the LRU"
+            covered = free | set(refs) | lru
+        else:
+            covered = free | set(refs)
+        assert covered == set(range(self.kv_pool_blocks)), \
+            f"leaked pages: {sorted(set(range(self.kv_pool_blocks)) - covered)}"
+        if device:
+            dev = np.asarray(self._cache["block_table"])
+            assert (dev == self._table).all(), "device table desync"
+
     def insert_request(self, prompt: List[int], slot: int,
                        extra: Optional[Dict[str, Any]] = None) -> jax.Array:
         """Prefill ``prompt`` into ``slot``; returns the first generated
@@ -515,6 +812,15 @@ class GenerationEngine:
         bucket = _bucket(len(prompt))
         if bucket > self.max_seq:
             raise ValueError(f"prompt {len(prompt)} exceeds max_seq {self.max_seq}")
+        # prefix-cached admission applies only to requests whose KV is a
+        # pure function of the token ids: anything carrying extra inputs
+        # (image embeds, audio frames) takes the plain paged path and its
+        # pages are never registered
+        if (self.prefix_cache is not None and not extra
+                and not self.extra_inputs):
+            return self._insert_cached(list(prompt), slot)
+        if self.prefix_cache is not None:
+            self._slot_cacheable[slot] = False
         if bucket not in self._prefill_jit:
             self._prefill_jit[bucket] = jax.jit(self._prefill_impl)
         # Ring-cache families (sliding-window / hybrid local attention) need
@@ -570,9 +876,99 @@ class GenerationEngine:
             raise
         return first
 
-    def release_slot(self, slot: int):
+    def _insert_cached(self, prompt: List[int], slot: int) -> jax.Array:
+        """Prefix-cached admission. The prompt splits at page boundaries:
+
+        - ``[0, hit_len)`` — the longest cached prefix: those pool pages
+          are installed into the slot's block table with a refcount bump
+          and NO compute (the prefill the cache absorbed);
+        - ``[hit_len, n)`` — the miss region: on a cold miss the aligned
+          part comes from the regular bucketed prefill, then the tail (a
+          partial-hit miss region decode-fills entirely — prefill cannot
+          start mid-sequence) is force-fed through the fused decode scan
+          (:meth:`_fill`), which also yields the first generated token.
+
+        Cold and warm admissions share the fill path for everything past
+        the prefix boundary, so a warm replay of a seen prompt is token-
+        identical to its cold run by construction (property-tested). When
+        the WHOLE prompt is cached (page-aligned), the last prompt token
+        is replayed for its logits; its KV write targets the final shared
+        page, which copy-on-writes first — cached bytes never mutate.
+        Freshly computed full prompt pages register immediately, so
+        co-batched duplicates admitted later the same tick already hit.
+        """
+        n = len(prompt)
+        P = self.page_size
+        cache = self.prefix_cache
+        total = -(-(n + 1) // P)          # prompt pages + first decode write
+        hits = cache.match(prompt)
+        hit_len = len(hits) * P
+        assert not self._slot_blocks[slot], f"slot {slot} holds pages"
+        for i, pg in enumerate(hits):
+            self._slot_blocks[slot].append(pg)
+            self._table[slot, i] = pg
+            self._page_refs[pg] += 1
+            cache.ref_page(pg)
+        if not self._alloc_blocks(slot, total - len(hits)):
+            self.release_slot(slot)       # drop the shared refs taken above
+            raise RuntimeError(
+                f"KV pool exhausted: prompt needs {total - len(hits)} new "
+                f"pages, {self.available_blocks()} of "
+                f"{self.kv_pool_blocks} claimable")
+        self._push_table_row(slot)
+        # host mirrors flip BEFORE the dispatches, same rule as the plain
+        # path (paged prompts are linear: logical == physical == n)
+        self._lengths[slot] = n
+        self._prompt_lens[slot] = n
+        self._prefill_lens[slot] = n
+        self._active[slot] = True
+        self._slot_cacheable[slot] = True
+        try:
+            if hit_len >= n:              # full hit: replay the last token
+                start = n - 1
+                if not self._make_writable(slot, start):
+                    raise RuntimeError(
+                        "KV pool exhausted: no page for the replay "
+                        "copy-on-write")
+            elif not hits and n - 1 >= P:
+                # cold miss: aligned prefix through the regular prefill
+                start = ((n - 1) // P) * P
+                pb = _bucket(start)
+                if pb not in self._prefill_jit:
+                    self._prefill_jit[pb] = jax.jit(self._prefill_impl)
+                padded = np.zeros((1, pb), np.int32)
+                padded[0, :start] = prompt[:start]
+                batch = {"tokens": jnp.asarray(padded),
+                         "prompt_lengths": jnp.asarray([start], np.int32)}
+                _, one_cache = self._prefill_jit[pb](self.params, batch)
+                self._cache = self._insert(
+                    self._cache, one_cache, jnp.asarray(self._table[slot]),
+                    jnp.asarray(slot, jnp.int32))
+            else:                         # partial hit (or tiny prompt)
+                start = hit_len
+            first = self._fill(prompt[start:], start, slot)
+            keys = cache.chain_keys(prompt)
+            for i in range(len(hits), n // P):
+                cache.register(keys[i], self._slot_blocks[slot][i])
+        except Exception:
+            self.release_slot(slot)   # no orphaned slot or leaked pages
+            raise
+        return first
+
+    def release_slot(self, slot: int, tokens: Optional[List[int]] = None):
+        """Retire ``slot`` and return its KV pages.
+
+        ``tokens`` (prompt + generated, as fed) lets a prefix-cached
+        engine register the slot's fully-decoded pages before the
+        references drop — multi-turn continuations then hit the whole
+        previous exchange, not just the original prompt. Pages whose
+        chain key is already cached (e.g. the shared prefix itself)
+        simply skip. On the last reference, cache-registered pages park
+        in the LRU free-candidate list; everything else frees."""
         self._active[slot] = False
-        if self.paged and self._slot_blocks[slot]:
+        if not (self.paged and self._slot_blocks[slot]):
+            return
+        if self.prefix_cache is None:
             # free-on-retire: every page returns to the shared pool. The
             # sentinel row must reach the DEVICE table too: an inactive
             # slot still executes (masked) decode writes, and a stale row
@@ -581,6 +977,22 @@ class GenerationEngine:
             self._slot_blocks[slot] = []
             self._table[slot, :] = self.kv_pool_blocks
             self._push_table_row(slot)
+            return
+        if tokens is not None and self._slot_cacheable[slot]:
+            # cache-eligible: pages fully covered by KV actually written
+            # (positions [0, length)), keyed by the tokens that fed them
+            full = min(int(self._lengths[slot]), len(tokens)) \
+                // self.page_size
+            keys = self.prefix_cache.chain_keys(
+                tokens[:full * self.page_size])
+            for i, key in enumerate(keys):
+                self.prefix_cache.register(key, self._slot_blocks[slot][i])
+        for pg in self._slot_blocks[slot]:
+            self._decref(pg)
+        self._slot_blocks[slot] = []
+        self._slot_cacheable[slot] = False
+        self._table[slot, :] = self.kv_pool_blocks
+        self._push_table_row(slot)
 
     def step(self, tokens: np.ndarray, rng, temperature=0.0):
         """One decode step for the whole batch. tokens [max_batch] int32;

@@ -343,7 +343,8 @@ class ContinuousBatchingScheduler:
         tick. Queued FIFO work and block-deferred work are swept in place
         (the admission-controller path sweeps inside ``take``)."""
         for req in [r for r in self.active.values() if r.cancelled]:
-            self.engine.release_slot(req.slot)
+            self.engine.release_slot(req.slot,
+                                     tokens=req.prompt + req.output)
             del self.active[req.slot]
             self._cancel_retire(req)
         if self.admission is None:
@@ -372,6 +373,16 @@ class ContinuousBatchingScheduler:
         self.active[slot] = req
         self._pending_first.append((req, first))
         self.stats.prefills += 1
+
+    def _admit_charge(self, req: Request):
+        """What the admission gate charges for ``req``: the token list —
+        a prefix-cached engine then charges only the pages the cache
+        cannot seat — unless the request carries extra inputs, which
+        bypass the cache (KV not a pure function of the token ids) and
+        pay the full page count."""
+        if req.extra or self.engine.extra_inputs:
+            return len(req.prompt)
+        return req.prompt
 
     def _never_admissible(self, req: Request) -> bool:
         """True for requests no amount of waiting can place: prompts with
@@ -408,7 +419,7 @@ class ContinuousBatchingScheduler:
                 self._deferred.popleft()
                 self._cancel_retire(req)
                 continue
-            if not self.engine.can_admit(len(req.prompt)):
+            if not self.engine.can_admit(self._admit_charge(req)):
                 blocked = True                    # pool still tight: hold
                 break                             # order, retry next tick
             self._deferred.popleft()
@@ -430,7 +441,7 @@ class ContinuousBatchingScheduler:
                     self._retire_inadmissible(t.item)
                     continue
                 if not free or not self.engine.can_admit(
-                        len(t.item.prompt)):
+                        self._admit_charge(t.item)):
                     # no slot left (an earlier ticket took the last) or no
                     # pool blocks: hold in grant order until capacity frees
                     self._deferred.append(t.item)
@@ -447,7 +458,7 @@ class ContinuousBatchingScheduler:
                 self.queue.popleft()
                 self._retire_inadmissible(req)
                 continue
-            if not self.engine.can_admit(len(req.prompt)):
+            if not self.engine.can_admit(self._admit_charge(req)):
                 break                             # blocks exhausted: wait
             self.queue.popleft()                  # FIFO: no starvation
             self._place(req, free.pop(0))
@@ -460,7 +471,10 @@ class ContinuousBatchingScheduler:
             self.stats.completed += 1
 
     def _release(self, req: Request):
-        self.engine.release_slot(req.slot)
+        # tokens as fed (prompt + generated) let a prefix-cached engine
+        # register the slot's fully-decoded pages before they free — a
+        # multi-turn continuation then hits the whole previous exchange
+        self.engine.release_slot(req.slot, tokens=req.prompt + req.output)
         del self.active[req.slot]
         self._retire(req)
 

@@ -1,0 +1,375 @@
+"""Prefix cache subsystem: chained content addressing, cross-slot page
+sharing with refcounts, copy-on-write, LRU eviction ahead of pool
+exhaustion, cache-aware admission accounting, and the allocator
+partition invariant under random op sequences (hypothesis).
+
+The load-bearing guarantee is token identity: a warm (cache-hit) run of a
+repeated prefix must emit exactly the tokens its cold run emits, greedy
+and sampled alike — caching changes memory and latency, never output.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CONFIGS
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingScheduler, GenerationEngine, PrefixCache,
+)
+
+P = 8           # small page so tests straddle boundaries cheaply
+
+PREFIX = list(range(1, 21))          # 20 tokens: 2 full pages + tail
+ALIGNED = PREFIX[:2 * P]             # exactly 2 pages
+
+
+@pytest.fixture(scope="module")
+def sentiment():
+    cfg = CONFIGS["max-sentiment"]
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(sentiment, *, prefix=True, max_batch=2, max_seq=64, pool=None,
+            cap=None, K=4):
+    model, params = sentiment
+    return GenerationEngine(model, params, max_batch=max_batch,
+                            max_seq=max_seq, decode_chunk=K, paged=True,
+                            page_size=P, kv_pool_blocks=pool,
+                            prefix_cache=prefix, prefix_cache_pages=cap)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit: chained keys, longest-prefix match, LRU
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_commit_to_full_prefix():
+    pc = PrefixCache(P)
+    a = pc.chain_keys(list(range(24)))           # 3 full pages
+    b = pc.chain_keys(list(range(24)) + [99])    # longer tail, same pages
+    assert len(a) == 3 and a == b
+    # divergence in page 2 changes key 2 AND key 3 (chaining), not key 1
+    c = list(range(24)); c[10] = 77
+    ck = pc.chain_keys(c)
+    assert ck[0] == a[0] and ck[1] != a[1] and ck[2] != a[2]
+    assert pc.chain_keys(list(range(P - 1))) == []   # no full page, no key
+
+
+def test_match_walks_longest_cached_prefix():
+    pc = PrefixCache(P)
+    toks = list(range(32))
+    keys = pc.chain_keys(toks)
+    assert pc.register(keys[0], 5) and pc.register(keys[1], 9)
+    assert not pc.register(keys[0], 7)       # key taken
+    assert not pc.register(keys[3], 9)       # page already registered
+    assert pc.match(toks, peek=True) == [5, 9]
+    # a hole in the chain stops the walk even if a later key is cached
+    assert pc.register(keys[3], 2)
+    assert pc.match(toks, peek=True) == [5, 9]
+    divergent = toks[:P] + [999] + toks[P + 1:]
+    assert pc.match(divergent, peek=True) == [5]
+
+
+def test_lru_caps_unreferenced_pages():
+    pc = PrefixCache(P, max_unreferenced=2)
+    for i, pg in enumerate((1, 2, 3)):
+        pc.register(bytes([i]), pg)
+        assert pc.release_page(pg) == ([] if i < 2 else [1])  # oldest out
+    assert pc.evictable() == 2 and pc.evictions == 1
+    pc.ref_page(2)                            # referenced: not evictable
+    assert pc.pop_evictable() == 3 and pc.pop_evictable() is None
+
+
+# ---------------------------------------------------------------------------
+# engine: warm == cold tokens, prefill skipped, sharing, COW
+# ---------------------------------------------------------------------------
+
+def _cold(sentiment, prompts, **kw):
+    return [r.tokens for r in
+            _engine(sentiment, prefix=False).generate(prompts, **kw)]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_warm_run_token_identical_to_cold(sentiment, temperature):
+    """One engine, same prompt family twice: the second (cache-hit) pass
+    emits exactly the cold-pass tokens — greedy and sampled."""
+    kw = dict(max_new_tokens=6, temperature=temperature, seed=11)
+    p1, p2 = PREFIX + [30, 31], PREFIX + [40, 41, 42]
+    ref = _cold(sentiment, [p1, p2], **kw)
+    eng = _engine(sentiment)
+    assert [r.tokens for r in eng.generate([p1, p2], **kw)] == ref
+    eng.check_pool_invariants()
+    # second pass hits the registered prefix pages
+    h0 = eng.prefix_cache.hit_tokens
+    assert [r.tokens for r in eng.generate([p1, p2], **kw)] == ref
+    eng.check_pool_invariants()
+    assert eng.prefix_cache.hit_tokens > h0
+
+
+def test_warm_hit_skips_prefill_tokens(sentiment):
+    eng = _engine(sentiment)
+    eng.generate([PREFIX + [30]], max_new_tokens=2)
+    assert eng.prefix_cache.hit_tokens == 0
+    eng.generate([PREFIX + [40]], max_new_tokens=2)
+    # the 2 full prefix pages (16 tokens) were served from cache
+    assert eng.prefix_cache.hit_tokens == 2 * P
+    assert eng.prefix_cache.stats()["cached_pages"] >= 2
+
+
+def test_cobatched_duplicates_share_pages(sentiment):
+    """Two co-seated prompts with a common prefix reference the SAME pool
+    pages: distinct pages in use drop vs the no-sharing engine."""
+    p1, p2 = PREFIX + [30, 31], PREFIX + [40, 41, 42]
+    plain = _engine(sentiment, prefix=False)
+    for i, p in enumerate((p1, p2)):
+        plain.insert_request(p, i)
+    eng = _engine(sentiment)
+    for i, p in enumerate((p1, p2)):
+        eng.insert_request(p, i)
+    eng.check_pool_invariants()
+    assert eng.prefix_stats()["shared_pages"] == 2
+    assert eng.blocks_in_use() == plain.blocks_in_use() - 2
+    kv = eng.kv_stats()
+    assert kv["prefix_cache"]["shared_pages"] == 2
+    assert kv["kv_bytes_per_active_token"] \
+        < plain.kv_stats()["kv_bytes_per_active_token"]
+    # sharing is real: both tables point at the same first two pages
+    assert eng._slot_blocks[0][:2] == eng._slot_blocks[1][:2]
+
+
+def test_full_hit_replay_copy_on_write(sentiment):
+    """A fully-cached (page-aligned) prompt replays its last token; the KV
+    write targets the final shared page, which must COW — and the output
+    still matches cold exactly."""
+    ref = _cold(sentiment, [ALIGNED], max_new_tokens=6)
+    eng = _engine(sentiment)
+    assert [r.tokens for r in eng.generate([ALIGNED], max_new_tokens=6)] \
+        == ref
+    assert eng.prefix_cache.cow_copies == 0
+    assert [r.tokens for r in eng.generate([ALIGNED], max_new_tokens=6)] \
+        == ref
+    eng.check_pool_invariants()
+    assert eng.prefix_cache.cow_copies == 1
+    # and a third pass still matches (the COW'd original stayed cached)
+    assert [r.tokens for r in eng.generate([ALIGNED], max_new_tokens=6)] \
+        == ref
+
+
+def test_cached_page_bytes_never_mutate(sentiment):
+    """Byte-level read-only check: a registered page's pool content is
+    bit-identical before and after warm admissions + decode on top of it."""
+    eng = _engine(sentiment)
+    eng.generate([ALIGNED], max_new_tokens=4)
+    pages = eng.prefix_cache.cached_pages()
+    before = np.asarray(eng._cache["k_pool"])[:, pages].copy()
+    eng.generate([ALIGNED + [50, 51]], max_new_tokens=6)
+    eng.generate([ALIGNED], max_new_tokens=6)
+    after = np.asarray(eng._cache["k_pool"])[:, pages]
+    np.testing.assert_array_equal(before, after)
+
+
+def test_retire_registers_decoded_pages(sentiment):
+    """Scheduler retire passes the full token stream, so a multi-turn
+    continuation hits the previous exchange's decoded pages too."""
+    eng = _engine(sentiment, max_seq=64)
+    sched = ContinuousBatchingScheduler(eng)
+    r1 = sched.submit(ALIGNED, max_new_tokens=12)
+    sched.run()
+    eng.check_pool_invariants()
+    # prompt pages (2) plus at least one fully-decoded output page
+    assert eng.prefix_cache.stats()["cached_pages"] >= 3
+    turn2 = ALIGNED + r1.output[:P]       # continuation re-sends the chat
+    hits = eng.prefix_cache.match(turn2, peek=True)
+    assert len(hits) == 3                 # 24 tokens -> 3 cached pages
+
+
+# ---------------------------------------------------------------------------
+# allocator: LRU eviction before exhaustion, admission accounting
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_rescues_admission(sentiment):
+    """Cache-retained pages are claimable: a pool fully parked in the LRU
+    still admits a disjoint prompt by evicting oldest-first."""
+    eng = _engine(sentiment, max_batch=1, pool=3)
+    eng.generate([list(range(1, 17))], max_new_tokens=4)   # fills + parks
+    assert eng.free_blocks() == 1 and eng.available_blocks() == 3
+    eng.generate([list(range(100, 116))], max_new_tokens=4)
+    eng.check_pool_invariants()
+    assert eng.prefix_cache.evictions == 2
+
+
+def test_admission_charges_only_noncached_pages(sentiment):
+    """can_admit/blocks_for_prompt with the token list charge only pages
+    the cache cannot seat — the satellite accounting fix."""
+    eng = _engine(sentiment, max_batch=2, pool=5)
+    # 22 toks: 3 pages cover prompt AND first decode write (position 22)
+    prompt = PREFIX + [30, 31]
+    assert eng.blocks_for_prompt(prompt) == 3 == eng.blocks_for_prompt(22)
+    eng.insert_request(prompt, 0)        # takes 3 of 5 pages
+    sibling = PREFIX + [40, 41]
+    # full charge (length) cannot fit; cache-aware shares the 2 registered
+    # prefix pages and charges only the sibling's private tail page
+    assert eng.blocks_for_prompt(sibling) == 1
+    assert not eng.can_admit(len(sibling)) and eng.can_admit(sibling)
+    eng.insert_request(sibling, 1)
+    eng.check_pool_invariants()
+    assert eng.prefix_stats()["shared_pages"] == 2
+
+
+def test_scheduler_seats_request_only_cache_makes_feasible(sentiment):
+    """End-to-end satellite check: with the pool too small for two full
+    prompts, the FIFO head waits until sharing makes it admissible and is
+    then seated (pre-fix it was held forever / pool-exhausted)."""
+    eng = _engine(sentiment, max_batch=2, pool=5)
+    sched = ContinuousBatchingScheduler(eng)
+    r1 = sched.submit(PREFIX + [30, 31], max_new_tokens=3)
+    r2 = sched.submit(PREFIX + [40, 41], max_new_tokens=3)
+    sched.run()
+    assert r1.error_code is None and r2.error_code is None
+    assert len(r1.output) == 3 and len(r2.output) == 3
+    eng.check_pool_invariants()
+
+
+def test_full_hit_charges_cow_page(sentiment):
+    """A fully-cached prompt still needs its COW page: admission must not
+    undercharge it to zero new pages when the pool is empty."""
+    eng = _engine(sentiment, max_batch=2, pool=4)
+    eng.generate([ALIGNED], max_new_tokens=2)    # pool now all cached/free
+    # full charge 3; warm charge = 1 decode-headroom page + 1 COW page
+    assert eng.blocks_for_prompt(len(ALIGNED)) == 3
+    assert eng.blocks_for_prompt(ALIGNED) == 2
+    assert eng.can_admit(ALIGNED)
+    eng.insert_request(ALIGNED, 0)
+    eng.check_pool_invariants()
+    assert eng.prefix_cache.cow_copies == 1
+
+
+def test_extra_input_requests_bypass_cache(sentiment):
+    eng = _engine(sentiment)
+    eng.insert_request(ALIGNED, 0, extra=None)
+    eng.insert_request(ALIGNED, 1,
+                       extra={"request_tag": np.zeros((1,), np.float32)})
+    eng.check_pool_invariants()
+    # the extra-bearing request shares nothing and registers nothing
+    assert eng.prefix_stats()["shared_pages"] == 0
+    assert not eng._slot_cacheable[1]
+    eng.release_slot(1, tokens=ALIGNED)          # retire must not register
+    assert eng.prefix_cache.stats()["cached_pages"] == 2  # slot 0's only
+
+
+# ---------------------------------------------------------------------------
+# property: allocator partition invariant under random op sequences
+# ---------------------------------------------------------------------------
+
+# prompt pool with deliberate prefix overlap (full / partial / disjoint)
+_PROMPTS = ([PREFIX + [30 + i] for i in range(3)]
+            + [PREFIX[:P] + [50 + i] * 3 for i in range(2)]
+            + [ALIGNED, [70 + i for i in range(5)]])
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(st.integers(min_value=0, max_value=9),
+                    min_size=1, max_size=25))
+def test_pool_partition_invariant_under_random_ops(sentiment, ops):
+    """Random admit/decode/retire/cancel sequences: after every op, every
+    pool page is exactly one of {free, uniquely owned, shared with
+    refcount == table references, LRU-parked cached}, and no freed page
+    is still referenced (check_pool_invariants audits all of it,
+    including the device block table)."""
+    eng = _engine(sentiment, max_batch=3, pool=10, cap=4)
+    fed = {}                                  # slot -> tokens fed so far
+    rng = jax.random.PRNGKey(0)
+    for op in ops:
+        if op <= 4:                           # admit into a free slot
+            free = eng.free_slots()
+            if free:
+                slot = free[0]
+                prompt = _PROMPTS[op % len(_PROMPTS)]
+                try:
+                    first = eng.insert_request(prompt, slot)
+                    fed[slot] = list(prompt) + [int(first)]
+                except RuntimeError:
+                    assert slot in eng.free_slots()   # clean unwind
+        elif op <= 6 and fed:                 # one decode step, all slots
+            last = np.zeros((eng.max_batch,), np.int32)
+            for s, toks in fed.items():
+                last[s] = toks[-1]
+            before = eng._lengths.copy()
+            rng, sub = jax.random.split(rng)
+            nxt = eng.step(last, sub, 0.7 if op == 6 else 0.0)
+            for s in list(fed):
+                if eng._lengths[s] > before[s]:
+                    fed[s].append(int(nxt[s]))
+        elif fed:                             # retire (7,8) / cancel (9)
+            slot = sorted(fed)[0]
+            eng.release_slot(
+                slot, tokens=fed.pop(slot) if op < 9 else None)
+        eng.check_pool_invariants()
+    for slot in list(fed):
+        eng.release_slot(slot, tokens=fed.pop(slot))
+        eng.check_pool_invariants()
+    # cap respected throughout teardown
+    assert eng.prefix_cache.evictable() <= 4
+
+
+# ---------------------------------------------------------------------------
+# service / API surface
+# ---------------------------------------------------------------------------
+
+def test_batched_service_prefix_stats_and_metrics():
+    import repro.core.assets  # noqa: F401
+    from repro.core import EXCHANGE
+    from repro.core.service import BatchedService
+    wrapper = EXCHANGE.get("deepseek-67b").build(
+        max_seq=64, max_batch=2, paged=True, page_size=P,
+        prefix_cache=True, prefix_cache_pages=8)
+    svc = BatchedService(wrapper)
+    try:
+        for _ in range(2):
+            env = svc.predict({"text": "the same system prompt each time",
+                               "max_new_tokens": 3})
+            assert env["status"] == "ok"
+        st_ = svc.stats()
+        assert st_["prefix_cache"]["hits"] > 0
+        assert st_["kv_cache"]["prefix_cache"] == st_["prefix_cache"]
+        snap = svc.metrics.to_json()
+        for name in ("max_prefix_cache_hits_total",
+                     "max_prefix_cache_cow_copies_total",
+                     "max_prefix_cache_shared_pages"):
+            assert any(k.startswith(name) for k in snap["gauges"]), name
+        prom = svc.metrics.to_prometheus()
+        assert "max_prefix_cache_misses_total" in prom
+        assert "max_prefix_cache_evictions_total" in prom
+    finally:
+        svc.close()
+
+
+def test_deploy_body_prefix_knobs():
+    import repro.core.assets  # noqa: F401
+    from repro.core.api import MAXServer
+    server = MAXServer(build_kw={"max_seq": 64, "max_batch": 2},
+                       auto_deploy=False)
+    try:
+        resp = server.dispatch(
+            "POST", "/v2/model/deepseek-67b/deploy",
+            {"service": "batched", "prefix_cache": True,
+             "prefix_cache_pages": 8, "page_size": P})
+        assert resp.status == 200, resp.body
+        kv = resp.body["kv_cache"]
+        assert kv["paged"] is True           # prefix_cache implies paged
+        assert kv["prefix_cache"]["cached_pages"] == 0
+        stats = server.dispatch("GET", "/v2/model/deepseek-67b/stats", None)
+        assert stats.body["service"]["prefix_cache"]["hits"] == 0
+        for bad in ({"prefix_cache": "yes"}, {"prefix_cache_pages": 0},
+                    {"prefix_cache": False, "prefix_cache_pages": 4}):
+            r = server.dispatch("POST", "/v2/model/deepseek-67b/deploy", bad)
+            assert r.status == 400, bad
+        routes = server.dispatch("GET", "/v2/routes", None)
+        deploy_row = next(r for r in routes.body["routes"]
+                          if r["path"] == "/v2/model/{model_id}/deploy")
+        assert "prefix_cache" in deploy_row["summary"]
+    finally:
+        for aid in server.manager.deployed():
+            server.manager.undeploy(aid)
