@@ -730,6 +730,75 @@ def bench_streaming(out_path: str = "BENCH_serving.json",
     return ok
 
 
+def bench_observability(out_path: str = "BENCH_serving.json",
+                        quick: bool = False) -> bool:
+    """Fused decode throughput with request-lifecycle tracing on vs off.
+
+    Tracing claims zero new host syncs: every span stamp lands at a point
+    the scheduler already touches host state (submit, admission, the
+    tick's single sync, retire), so its cost is a few list appends per
+    CHUNK tokens — not per token. This bench holds it to that claim on
+    the fused path, where one extra sync per chunk would be immediately
+    visible in tokens/s.
+
+    Gate (``--quick``): traced tokens/s >= 0.95x untraced, best PAIRED
+    ratio across trials (ratio, not absolutes, keeps the gate
+    machine-independent; pairing absorbs this container's timing swings).
+    """
+    import jax
+
+    from repro.configs import CONFIGS
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingScheduler, GenerationEngine
+    from repro.serving.tracing import Tracer
+
+    cfg = CONFIGS["max-sentiment"]     # dispatch-bound regime: the worst
+    model = build_model(cfg)           # case for any per-chunk overhead
+    params = model.init(jax.random.PRNGKey(0))
+    CHUNK = 16
+    n_req, new_toks, trials = (8, CHUNK + 1, 4) if quick \
+        else (16, 2 * CHUNK + 1, 5)
+
+    eng = GenerationEngine(model, params, max_batch=4, max_seq=64,
+                           decode_chunk=CHUNK)
+    warm = ContinuousBatchingScheduler(eng)     # compile prefill + chunks
+    warm.submit([1], max_new_tokens=2 * CHUNK)
+    warm.run()
+
+    def measure(tracer):
+        sched = ContinuousBatchingScheduler(eng, tracer=tracer)
+        for i in range(n_req):
+            sched.submit([1 + i % 30], max_new_tokens=new_toks)
+        stats = sched.run()
+        assert stats.completed == n_req
+        return stats.tokens_per_s
+
+    off_best = on_best = best_ratio = 0.0
+    for _ in range(trials):
+        off = measure(None)                     # paired: same heap/thermal
+        on = measure(Tracer(capacity=2 * n_req))
+        off_best, on_best = max(off_best, off), max(on_best, on)
+        best_ratio = max(best_ratio, on / max(off, 1e-9))
+
+    entry = {
+        "decode_chunk": CHUNK,
+        "requests": n_req,
+        "max_new_tokens": new_toks,
+        "untraced_tok_s": round(off_best, 1),
+        "traced_tok_s": round(on_best, 1),
+        "traced_ratio": round(best_ratio, 3),
+    }
+    ok = best_ratio >= 0.95
+    key = "observability_quick" if quick else "observability"
+    _merge_bench(out_path, {key: entry})
+    row("observability_untraced", 1e6 / max(off_best, 1e-9),
+        f"tok/s={entry['untraced_tok_s']}")
+    row("observability_traced", 1e6 / max(on_best, 1e-9),
+        f"tok/s={entry['traced_tok_s']} "
+        f"ratio={entry['traced_ratio']} -> {out_path}")
+    return ok
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -802,10 +871,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="run only the QoS overload + decode-throughput + "
-                         "streaming-TTFT + paged-KV + prefix-cache smokes "
-                         "(<30s each); exit nonzero if interactive p95, "
-                         "fused decode tokens/s, streamed TTFT, or a "
-                         "paging/prefix-cache ratio regresses")
+                         "streaming-TTFT + paged-KV + prefix-cache + "
+                         "tracing-overhead smokes (<30s each); exit "
+                         "nonzero if interactive p95, fused decode "
+                         "tokens/s, streamed TTFT, a paging/prefix-cache "
+                         "ratio, or traced decode throughput regresses")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.quick:
@@ -814,6 +884,7 @@ def main(argv=None) -> None:
         stream_ok = bench_streaming(quick=True)
         paged_ok = bench_paged_kv(quick=True)
         prefix_ok = bench_prefix_cache(quick=True)
+        obs_ok = bench_observability(quick=True)
         print(f"# quick qos smoke: "
               f"{'ok' if qos_ok else 'INTERACTIVE P95 REGRESSION'}",
               flush=True)
@@ -831,9 +902,12 @@ def main(argv=None) -> None:
             "PREFIX CACHE REGRESSION (warm prefill tok/s < 2x cold or " \
             "KV bytes/token reduction < 2x)"
         print(f"# quick prefix-cache smoke: {prefix_msg}", flush=True)
+        obs_msg = "ok" if obs_ok else \
+            "TRACING OVERHEAD REGRESSION (traced tok/s < 0.95x untraced)"
+        print(f"# quick observability smoke: {obs_msg}", flush=True)
         raise SystemExit(
             0 if (qos_ok and decode_ok and stream_ok and paged_ok
-                  and prefix_ok) else 1)
+                  and prefix_ok and obs_ok) else 1)
     # decode_fastpath first: it measures dispatch overhead, which later
     # benches inflate (heavy compiles + heap pressure skew its timings)
     bench_decode_fastpath()
@@ -847,6 +921,7 @@ def main(argv=None) -> None:
     bench_streaming()
     bench_paged_kv()
     bench_prefix_cache()
+    bench_observability()
     bench_kernels()
     bench_roofline_terms()
     print(f"# {len(ROWS)} benchmarks complete", flush=True)

@@ -13,12 +13,15 @@ health.
         # clients with different priorities against one deployment
     PYTHONPATH=src python examples/serve_http.py --stream  # SSE streaming:
         # live token events, job event streams, and mid-stream cancel
+    PYTHONPATH=src python examples/serve_http.py --trace   # tracing demo:
+        # span timelines, slow-request capture, Perfetto export
 """
 
 import argparse
 import json
 import threading
 import time
+import urllib.error
 import urllib.request
 
 import repro.core.assets  # noqa: F401
@@ -346,6 +349,77 @@ def prefix_demo():
         print("metrics gauges:", json.dumps(shared))
 
 
+def trace_demo():
+    """Request-lifecycle tracing: deploy with a small trace ring and a
+    slow-request threshold, run a few requests, then pull one request's
+    span timeline from ``/v2/jobs/{id}/trace`` and the whole server's
+    Perfetto-loadable export from ``/v2/trace/export``. The tiny ring
+    demonstrates slow-request capture: under pressure, fast requests are
+    compacted to their lifecycle skeleton while slow ones keep full
+    per-chunk detail."""
+    with MAXServer(build_kw={"max_seq": 128, "max_batch": 4},
+                   auto_deploy=False) as server:
+        out = post(server.url, "/v2/model/qwen3-4b/deploy",
+                   {"service": "batched", "trace": True, "trace_buffer": 4,
+                    "slow_trace_ms": 150})
+        print("deployed with tracing:", out["service"])
+
+        def run_job(text, max_new):
+            env = post(server.url, "/v2/model/qwen3-4b/jobs",
+                       {"input": {"text": text, "max_new_tokens": max_new}})
+            jid = env["job"]["id"]
+            while True:
+                job = get(server.url, f"/v2/jobs/{jid}")["job"]
+                if job["state"] in ("done", "error", "cancelled"):
+                    return jid
+                time.sleep(0.02)
+
+        # a burst of short requests, then one slow one (long generation):
+        # with the 4-deep ring the late short traces get compacted to
+        # their lifecycle skeleton, the oldest fall off entirely, and the
+        # slow request — exactly the one an operator pulls — keeps full
+        # per-chunk detail
+        fast = [run_job(f"hi {i}", 2) for i in range(6)]
+        slow = run_job("explain the serving stack in detail", 48)
+
+        tr = get(server.url, f"/v2/jobs/{slow}/trace")["trace"]
+        print(f"\nslow request {tr['trace_id']}: outcome={tr['outcome']} "
+              f"compacted={tr['compacted']}")
+        print("phases:", json.dumps(tr["phases"]))
+        for s in tr["spans"]:
+            attrs = f"  {json.dumps(s['attrs'])}" if "attrs" in s else ""
+            print(f"  {s['name']:>8} {s['start_ms']:8.1f}ms "
+                  f"+{s['dur_ms']:.1f}ms{attrs}")
+        chunk_evs = [e for e in tr["events"] if e["name"] == "chunk"]
+        print(f"  {len(chunk_evs)} decode chunks retained")
+
+        def try_trace(jid):
+            try:                       # oldest traces fall off the ring
+                return get(server.url, f"/v2/jobs/{jid}/trace")["trace"]
+            except urllib.error.HTTPError:
+                return None            # 404 TRACE_NOT_FOUND: evicted
+
+        fast_traces = [t for t in map(try_trace, fast) if t is not None]
+        print(f"{len(fast) - len(fast_traces)} fast traces evicted "
+              f"(ring holds 4)")
+        for t in fast_traces[-2:]:
+            print(f"fast request {t['trace_id']}: compacted={t['compacted']}"
+                  f" events={len(t['events'])} (chunk detail dropped)")
+
+        export = get(server.url, "/v2/trace/export")
+        kinds = {}
+        for ev in export["traceEvents"]:
+            kinds[ev["ph"]] = kinds.get(ev["ph"], 0) + 1
+        print(f"\n/v2/trace/export: {len(export['traceEvents'])} events "
+              f"{kinds} — save and load in https://ui.perfetto.dev")
+        with open("/tmp/max_trace.json", "w") as f:
+            json.dump(export, f)
+        print("wrote /tmp/max_trace.json")
+
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")
+        print("tracing stats:", json.dumps(stats["service"]["tracing"]))
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--qos", action="store_true",
@@ -356,6 +430,10 @@ if __name__ == "__main__":
                     help="run the paged KV cache occupancy demo")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="run the prefix-cache warm-vs-cold demo")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the request-lifecycle tracing demo "
+                         "(span timelines, slow-request capture, "
+                         "Perfetto export)")
     args = ap.parse_args()
     if args.qos:
         qos_demo()
@@ -365,5 +443,7 @@ if __name__ == "__main__":
         paged_demo()
     elif args.prefix_cache:
         prefix_demo()
+    elif args.trace:
+        trace_demo()
     else:
         main()

@@ -76,6 +76,7 @@ ERROR_STATUS = {
     "MODEL_NOT_FOUND": 404,
     "NOT_DEPLOYED": 404,
     "JOB_NOT_FOUND": 404,
+    "TRACE_NOT_FOUND": 404,
     "NOT_FOUND": 404,
     "METHOD_NOT_ALLOWED": 405,
     "QUEUE_FULL": 429,
@@ -209,13 +210,24 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
           summary="Cancel a queued/running job (it finishes with state "
                   "'cancelled' and its decode slot frees at the next "
                   "chunk boundary); on a finished job, delete the record")
+    r.add("GET", "/v2/jobs/{job_id}/trace", h("_h_job_trace"),
+          summary="Span timeline for a job's request: queue/prefill/decode "
+                  "phases, QoS decision, deferred park/unpark, prefix-cache "
+                  "hit tokens vs cold prefill, per-chunk emission, stalls")
+    r.add("GET", "/v2/trace/export", h("_h_trace_export"),
+          summary="Chrome-trace-event JSON across all deployments (load in "
+                  "Perfetto / chrome://tracing): per-slot lanes, scheduler "
+                  "ticks, KV-pool and prefix-cache occupancy counters")
     r.add("POST", "/v2/model/{model_id}/deploy", h("_h_deploy_v2"),
           summary="Deploy an asset (optional {'service': sync|batched|auto,"
                   " 'qos': {...}, 'paged': bool, 'page_size': int,"
                   " 'kv_pool_blocks': int, 'prefix_cache': bool,"
-                  " 'prefix_cache_pages': int} — the kv knobs select the"
-                  " paged KV cache layout; the prefix knobs enable"
-                  " content-addressed KV page sharing on top of it)")
+                  " 'prefix_cache_pages': int, 'trace': bool,"
+                  " 'trace_buffer': int, 'slow_trace_ms': number} — the kv"
+                  " knobs select the paged KV cache layout, the prefix knobs"
+                  " enable content-addressed KV page sharing on top of it,"
+                  " and the trace knobs size request-lifecycle tracing /"
+                  " slow-request capture)")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
@@ -696,6 +708,46 @@ class MAXServer:
                            f"job {job_id!r} no longer exists") from None
         return 200, {"status": "ok", "deleted": job_id}
 
+    def _h_job_trace(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        """The request's span timeline — the 'where did this request's
+        800 ms go' answer. Works for cancelled/shed/exhausted jobs too
+        (every retire path records a complete trace)."""
+        job_id = ctx.params["job_id"]
+        with self._job_lock:
+            model_id = self._job_index.get(job_id)
+        if model_id is None:
+            raise ApiError("JOB_NOT_FOUND", f"unknown job {job_id!r}")
+        try:
+            service = self.manager.get(model_id).service
+        except KeyError:
+            raise ApiError("JOB_NOT_FOUND",
+                           f"job {job_id!r} no longer exists "
+                           f"(model {model_id!r} undeployed?)") from None
+        try:
+            trace = service.get_trace(job_id)
+        except KeyError as e:
+            raise ApiError("TRACE_NOT_FOUND", str(e).strip("'\"")) from None
+        return 200, {"status": "ok", "job_id": job_id,
+                     "model_id": model_id, "trace": trace}
+
+    def _h_trace_export(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        """Chrome-trace-event JSON for every traced deployment, one
+        Perfetto process per model. Timestamps share one monotonic clock,
+        so multi-deployment lanes line up."""
+        events = []
+        for pid, asset_id in enumerate(self.manager.deployed(), start=1):
+            try:
+                service = self.manager.get(asset_id).service
+            except KeyError:
+                continue            # undeployed between list and get
+            tracer = getattr(service, "tracer", None)
+            if tracer is not None:
+                events.extend(tracer.to_chrome(pid=pid,
+                                               process_name=asset_id))
+        # the Chrome trace-event container format: an object with a
+        # traceEvents array loads directly in Perfetto / chrome://tracing
+        return 200, {"traceEvents": events, "displayTimeUnit": "ms"}
+
     def _h_deploy_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
         body = ctx.body if isinstance(ctx.body, dict) else {}
         mode = body.get("service")
@@ -754,10 +806,44 @@ class MAXServer:
                     "INVALID_INPUT",
                     f"page_size {page} must divide the deployment's "
                     f"max_seq {max_seq}")
+        # request-lifecycle tracing knobs: service-level overrides (they
+        # reconfigure the service, not the engine); explicit knobs
+        # force-redeploy like explicit engine knobs do
+        service_overrides: Dict[str, Any] = {}
+        if body.get("trace") is not None:
+            if not isinstance(body["trace"], bool):
+                raise ApiError("INVALID_INPUT", "'trace' must be a boolean")
+            service_overrides["trace"] = body["trace"]
+        if body.get("trace_buffer") is not None:
+            v = body["trace_buffer"]
+            if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                raise ApiError("INVALID_INPUT",
+                               "'trace_buffer' must be a positive integer")
+            if service_overrides.get("trace") is False:
+                raise ApiError("INVALID_INPUT",
+                               "'trace_buffer' conflicts with "
+                               "'trace': false")
+            service_overrides["trace_buffer"] = v
+            service_overrides.setdefault("trace", True)
+        if body.get("slow_trace_ms") is not None:
+            v = body["slow_trace_ms"]
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or v <= 0:
+                raise ApiError("INVALID_INPUT",
+                               "'slow_trace_ms' must be a positive number")
+            if service_overrides.get("trace") is False:
+                raise ApiError("INVALID_INPUT",
+                               "'slow_trace_ms' conflicts with "
+                               "'trace': false")
+            service_overrides["slow_trace_ms"] = float(v)
+            service_overrides.setdefault("trace", True)
         try:
             dep = self.manager.deploy(ctx.params["model_id"],
                                       service_mode=mode, qos=qos,
-                                      force=bool(engine_kw),
+                                      force=bool(engine_kw)
+                                      or bool(service_overrides),
+                                      service_overrides=service_overrides
+                                      or None,
                                       **{**self.build_kw, **engine_kw})
         except KeyError as e:
             raise ApiError("MODEL_NOT_FOUND", str(e)) from None

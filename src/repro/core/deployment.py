@@ -130,7 +130,13 @@ class DeploymentManager:
     def deploy(self, asset_id: str, *, mesh_slice: Optional[str] = None,
                service_mode: Optional[str] = None,
                qos: Optional[Any] = None, force: bool = False,
+               service_overrides: Optional[Dict[str, Any]] = None,
                **build_kw) -> Deployment:
+        """``service_overrides`` are per-deploy service kwargs (e.g. the
+        tracing knobs ``trace``/``trace_buffer``/``slow_trace_ms``) merged
+        over the manager-wide ``service_kw`` — callers that pass them
+        should also pass ``force=True`` so they take effect on a live
+        deployment, mirroring the engine-knob rule."""
         if qos is not None and not isinstance(qos, QoSConfig):
             qos = QoSConfig.from_json(qos)    # validate before any teardown
         while True:
@@ -171,6 +177,8 @@ class DeploymentManager:
             service_kw.setdefault("metrics", self.metrics)
             if qos is not None:
                 service_kw["qos"] = qos             # per-deploy override
+            if service_overrides:
+                service_kw.update(service_overrides)
             service = make_service(
                 wrapper, service_mode or self.service_mode, **service_kw)
             dep = Deployment(asset_id, service, mesh_slice=mesh_slice)

@@ -59,6 +59,7 @@ from repro.serving.metrics import TOKEN_LATENCY_BUCKETS, MetricsRegistry
 from repro.serving.qos import (
     AdmissionController, AdmissionError, QoSConfig, QueueFull,
 )
+from repro.serving.tracing import Tracer, now as _mono
 
 
 class ServiceOverloaded(MAXError):
@@ -155,6 +156,7 @@ class Job:
     error: Optional[str] = None
     stream: JobStream = field(default_factory=JobStream, repr=False)
     cancel_requested: bool = False    # sync running jobs honor it post-hoc
+    trace_id: Optional[int] = None    # RequestTrace id when tracing is on
 
     def to_json(self) -> Dict[str, Any]:
         out = {"id": self.id, "model_id": self.model_id, "state": self.state,
@@ -177,15 +179,43 @@ class InferenceService(abc.ABC):
     def __init__(self, wrapper: MAXModelWrapper, *,
                  qos: Optional[Any] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 job_ttl_s: Optional[float] = None):
+                 job_ttl_s: Optional[float] = None,
+                 trace: bool = True, trace_buffer: int = 256,
+                 slow_trace_ms: Optional[float] = None):
         self.wrapper = wrapper
         self.qos_cfg = qos if isinstance(qos, QoSConfig) \
             else QoSConfig.from_json(qos)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.job_ttl_s = job_ttl_s
+        # request-lifecycle tracing: bounded ring of finished traces;
+        # slow_trace_ms turns on slow-request capture (fast traces compact
+        # under ring pressure, slow ones keep full span detail)
+        self.tracer: Optional[Tracer] = Tracer(
+            capacity=trace_buffer, slow_trace_ms=slow_trace_ms,
+            model=wrapper.metadata.id) if trace else None
         self.admission = AdmissionController(
             self.qos_cfg, metrics=self.metrics,
             model_id=wrapper.metadata.id)
+        for name, help_text in (
+            ("max_ttft_seconds",
+             "Time to first token from submit, per model"),
+            ("max_inter_token_seconds",
+             "Mean per-token interval of each decode chunk"),
+            ("max_active_streams",
+             "Currently open SSE token streams"),
+            ("max_phase_queue_seconds",
+             "Per-request queue/admission wait, by priority class"),
+            ("max_phase_prefill_seconds",
+             "Per-request prefill span (admission to first token), by "
+             "priority class"),
+            ("max_decode_per_token_seconds",
+             "Per-request decode span divided by tokens generated, by "
+             "priority class"),
+            ("max_e2e_latency_seconds",
+             "Per-request end-to-end latency (submit to retire), by "
+             "priority class"),
+        ):
+            self.metrics.describe(name, help_text)
         self._jobs: Dict[str, Job] = {}
         self._jobs_lock = threading.Lock()
         # streaming accounting (both kinds): instantaneous gauge + totals
@@ -228,6 +258,31 @@ class InferenceService(abc.ABC):
             "max_requests_total", 1,
             **{"model": self.model_id, "outcome": outcome,
                "class": priority or self.qos_cfg.default_priority})
+
+    def _observe_phases(self, priority: Optional[str],
+                        usage: Optional[Dict[str, Any]]):
+        """Phase histograms (queue wait / prefill / per-token decode /
+        e2e) labelled by priority class, fed from the usage record both
+        service kinds already compute — no extra stamps."""
+        if not usage:
+            return
+        labels = {"model": self.model_id,
+                  "class": priority or self.qos_cfg.default_priority}
+        if usage.get("queue_ms") is not None:
+            self.metrics.observe("max_phase_queue_seconds",
+                                 usage["queue_ms"] / 1e3, **labels)
+        if usage.get("prefill_ms"):
+            self.metrics.observe("max_phase_prefill_seconds",
+                                 usage["prefill_ms"] / 1e3, **labels)
+        toks = usage.get("completion_tokens")
+        if usage.get("decode_ms") and toks:
+            self.metrics.histogram(
+                "max_decode_per_token_seconds",
+                buckets=TOKEN_LATENCY_BUCKETS, **labels,
+            ).observe(usage["decode_ms"] / 1e3 / toks)
+        if usage.get("latency_ms") is not None:
+            self.metrics.observe("max_e2e_latency_seconds",
+                                 usage["latency_ms"] / 1e3, **labels)
 
     # -- predictions -------------------------------------------------------
 
@@ -379,6 +434,24 @@ class InferenceService(abc.ABC):
         return self.get_job(job_id).stream.subscribe(
             from_seq, timeout_s=timeout_s)
 
+    def get_trace(self, job_id: str) -> Dict[str, Any]:
+        """Span timeline JSON for a job's request. Raises KeyError for
+        unknown jobs (like :meth:`get_job`), for jobs submitted before
+        tracing was enabled, and for traces the bounded ring evicted."""
+        job = self.get_job(job_id)
+        if self.tracer is None:
+            raise KeyError(
+                f"tracing is disabled for {self.model_id!r} "
+                "(redeploy with {\"trace\": true})")
+        if job.trace_id is None:
+            raise KeyError(f"job {job_id!r} has no trace record")
+        trace = self.tracer.get(job.trace_id)
+        if trace is None:
+            raise KeyError(
+                f"trace for job {job_id!r} was evicted from the "
+                f"{self.tracer.capacity}-entry ring")
+        return trace
+
     # -- lifecycle / introspection ----------------------------------------
 
     def stats(self) -> Dict[str, Any]:
@@ -399,6 +472,9 @@ class InferenceService(abc.ABC):
                     "max_inter_token_seconds",
                     buckets=TOKEN_LATENCY_BUCKETS,
                     model=self.model_id).snapshot(),
+                "tracing": (self.tracer.snapshot_stats()
+                            if self.tracer is not None
+                            else {"enabled": False}),
                 "qos": self.admission.stats()}
 
     def close(self):
@@ -448,16 +524,25 @@ class SyncService(InferenceService):
         return preds[0] if isinstance(preds, list) and preds \
             and isinstance(preds[0], dict) else {}
 
-    def _sync_usage(self, env: Dict[str, Any],
-                    latency_ms: float) -> Dict[str, Any]:
+    def _sync_usage(self, env: Dict[str, Any], latency_ms: float,
+                    queue_ms: float = 0.0) -> Dict[str, Any]:
         """Usage for the whole-result fallback: token counts when the
         wrapper reports them, TTFT = engine-measured first token (sync
-        generation) or the whole-call latency (classifiers)."""
+        generation) or the whole-call latency (classifiers). Phase fields
+        mirror the batched service: sync has no scheduler queue (only job
+        submissions wait, measured by ``queue_ms``), prefill is the
+        engine-measured TTFT, decode the remainder."""
         first = self._first_prediction(env)
+        ttft = first.get("ttft_ms", latency_ms)
+        prefill = float(ttft) if ttft is not None else 0.0
         return {"prompt_tokens": first.get("prompt_tokens"),
                 "completion_tokens": first.get("generated_tokens"),
-                "ttft_ms": first.get("ttft_ms", latency_ms),
-                "latency_ms": latency_ms}
+                "ttft_ms": ttft,
+                "latency_ms": latency_ms,
+                "queue_ms": round(queue_ms, 3),
+                "prefill_ms": round(min(prefill, latency_ms), 3),
+                "decode_ms": round(max(0.0, latency_ms - prefill), 3),
+                "sched_ticks": 0}
 
     def _sync_token_event(self, env: Dict[str, Any]) -> Dict[str, Any]:
         """The whole-result-as-one-event token payload (one grammar for
@@ -478,11 +563,50 @@ class SyncService(InferenceService):
             self.metrics.observe("max_ttft_seconds", float(ttft_ms) / 1e3,
                                  model=self.model_id)
 
+    def _start_sync_trace(self, qos: Optional[Dict[str, Any]],
+                          ts: Optional[float] = None):
+        if self.tracer is None:
+            return None
+        return self.tracer.start(
+            self.tracer.next_id(),
+            priority=(_qos_field(qos, "priority")
+                      or self.qos_cfg.default_priority),
+            client=_qos_field(qos, "client") or "anon",
+            submitted_at=ts)
+
+    def _finish_sync_trace(self, tr, env: Dict[str, Any], t_exec: float,
+                           *, outcome: Optional[str] = None):
+        """Close a sync trace from its envelope: first-token derived from
+        the engine-measured TTFT (sync execution has no chunk boundary to
+        stamp at), outcome from the envelope unless overridden (a cancel
+        race resolved by ``_finish_job`` wins over the late result)."""
+        if tr is None:
+            return
+        t_end = _mono()
+        ttft_ms = self._first_prediction(env).get("ttft_ms")
+        if env.get("status") == "ok" and ttft_ms is not None:
+            tr.first_token(min(t_end, t_exec + float(ttft_ms) / 1e3))
+        if outcome is None:
+            outcome = "ok" if env.get("status") == "ok" \
+                else str(env.get("code") or "INTERNAL")
+        toks = self._first_prediction(env).get("generated_tokens") or 0
+        self.tracer.finish(tr, outcome=outcome,
+                           error_code=None if outcome == "ok" else outcome,
+                           completion_tokens=int(toks), ts=t_end)
+
     def predict(self, inp: Any,
                 qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        t0 = _mono()
+        tr = self._start_sync_trace(qos, ts=t0)
         rejected = self._admit_or_envelope(qos, cost=self._request_cost(inp))
         if rejected is not None:
+            if tr is not None:
+                code = rejected.get("code") or "REJECTED"
+                self.tracer.finish(tr, outcome=code, error_code=code)
             return rejected
+        t_exec = _mono()
+        if tr is not None:
+            tr.admitted(t_exec, slot=-1, tick=-1)
         if self._serialize:
             with self._predict_lock:
                 env = self.wrapper.predict_envelope(inp)
@@ -490,6 +614,11 @@ class SyncService(InferenceService):
             env = self.wrapper.predict_envelope(inp)
         self._observe_ttft(env)
         self._count_request(_qos_field(qos, "priority"), env)
+        if env.get("status") == "ok":
+            self._observe_phases(
+                _qos_field(qos, "priority"),
+                self._sync_usage(env, round((_mono() - t0) * 1e3, 3)))
+        self._finish_sync_trace(tr, env, t_exec)
         return env
 
     def predict_stream(self, inp: Any,
@@ -502,9 +631,9 @@ class SyncService(InferenceService):
         def gen():
             self._stream_opened()
             try:
-                t0 = time.perf_counter()
+                t0 = _mono()
                 env = self.predict(inp, qos)
-                latency_ms = round((time.perf_counter() - t0) * 1e3, 3)
+                latency_ms = round((_mono() - t0) * 1e3, 3)
                 if env.get("status") != "ok":
                     code = env.get("code") or "INVALID_INPUT"
                     yield StreamEvent("error", {
@@ -542,17 +671,23 @@ class SyncService(InferenceService):
                                    self._request_cost(inp),
                                    _qos_field(qos, "priority"))
         job = self._new_job()
+        tr = self._start_sync_trace(qos)    # queue span = submit -> pickup
+        if tr is not None:
+            job.trace_id = tr.trace_id
         with self._job_cv:
             if self._closed:
                 with self._jobs_lock:
                     self._jobs.pop(job.id, None)
+                if tr is not None:
+                    self.tracer.finish(tr, outcome="INTERNAL",
+                                       error_code="INTERNAL")
                 raise MAXError(f"service for {self.model_id!r} is closed")
             if self._job_thread is None:        # lazy single worker
                 self._job_thread = threading.Thread(
                     target=self._job_worker, daemon=True,
                     name=f"sync-jobs-{self.model_id}")
                 self._job_thread.start()
-            self._job_queue.append((job, inp, qos))
+            self._job_queue.append((job, inp, qos, tr))
             self._job_cv.notify()
         return job
 
@@ -566,9 +701,12 @@ class SyncService(InferenceService):
         mark makes it finish as ``cancelled`` with its result discarded
         (there is no decode slot to reclaim in the sync service)."""
         with self._job_cv:
-            for i, (job, _inp, _qos) in enumerate(self._job_queue):
+            for i, (job, _inp, _qos, tr) in enumerate(self._job_queue):
                 if job.id == job_id:
                     del self._job_queue[i]
+                    if tr is not None:
+                        self.tracer.finish(tr, outcome="CANCELLED",
+                                           error_code="CANCELLED")
                     self._finish_job(job,
                                      self._cancelled_envelope("while queued"))
                     return True
@@ -586,15 +724,20 @@ class SyncService(InferenceService):
                     self._job_cv.wait()
                 if self._closed:
                     return
-                job, inp, qos = self._job_queue.popleft()
+                job, inp, qos, tr = self._job_queue.popleft()
             if job.cancel_requested:             # cancelled between queue
-                self._finish_job(job,            # scan and pickup
+                if tr is not None:               # scan and pickup
+                    self.tracer.finish(tr, outcome="CANCELLED",
+                                       error_code="CANCELLED")
+                self._finish_job(job,
                                  self._cancelled_envelope("while queued"))
                 continue
             job.state = "running"
             try:
                 # rate limit was paid at submit; run the wrapper directly
-                t0 = time.perf_counter()
+                t0 = _mono()
+                if tr is not None:               # queue wait ends here
+                    tr.admitted(t0, slot=-1, tick=-1)
                 if self._serialize:
                     with self._predict_lock:
                         env = self.wrapper.predict_envelope(inp)
@@ -607,14 +750,23 @@ class SyncService(InferenceService):
                        "model_id": self.model_id}
             usage = token_event = None
             if env.get("status") == "ok":
-                latency_ms = round((time.perf_counter() - t0) * 1e3, 3)
-                usage = self._sync_usage(env, latency_ms)
+                latency_ms = round((_mono() - t0) * 1e3, 3)
+                usage = self._sync_usage(
+                    env, latency_ms,
+                    queue_ms=(t0 - tr.submitted_at) * 1e3
+                    if tr is not None else 0.0)
+                self._observe_phases(_qos_field(qos, "priority"), usage)
                 token_event = self._sync_token_event(env)
             # a cancel that races this completion is resolved inside
             # _finish_job under the jobs lock: the record can never flip
             # to 'done' after cancel_job answered "cancelled", and the
             # whole-result token event is only pushed if the result stands
             self._finish_job(job, env, usage=usage, token_event=token_event)
+            # trace outcome follows the resolved job state (a cancel race
+            # answered "cancelled" — the trace must agree)
+            self._finish_sync_trace(
+                tr, env, t0,
+                outcome="CANCELLED" if job.state == "cancelled" else None)
 
     def close(self):
         with self._job_cv:
@@ -623,7 +775,10 @@ class SyncService(InferenceService):
             self._job_queue.clear()
             self._job_cv.notify_all()
         # fail undrained jobs now — pollers must not spin on 'queued' forever
-        for job, _inp, _qos in queued:
+        for job, _inp, _qos, tr in queued:
+            if tr is not None:
+                self.tracer.finish(tr, outcome="INTERNAL",
+                                   error_code="INTERNAL")
             self._finish_job(job, {
                 "status": "error",
                 "error": f"service for {self.model_id!r} is closed",
@@ -707,7 +862,7 @@ class BatchedService(InferenceService):
         self.engine = wrapper.engine
         self.scheduler = ContinuousBatchingScheduler(
             self.engine, admission=self.admission,
-            decode_chunk=decode_chunk)
+            decode_chunk=decode_chunk, tracer=self.tracer)
         self.batch_window_s = batch_window_s
         self.max_queue = self.qos_cfg.max_queue
         self.request_timeout_s = request_timeout_s
@@ -770,7 +925,7 @@ class BatchedService(InferenceService):
                 f"{self.engine.max_seq} with generation headroom (longest "
                 f"admissible prompt: {self.engine.max_prompt_len()} tokens)")
         work = _Work(inp=inp, prompt=prompt, gen_kw=gen_kw, extra=extra,
-                     t0=time.perf_counter(), job=job,
+                     t0=_mono(), job=job,
                      push=push, notify=notify)
 
         def sink(toks: List[int]):
@@ -779,7 +934,7 @@ class BatchedService(InferenceService):
             # TTFT rides Request.first_token_s (stamped by the scheduler)
             # so queue wait is included; the gap/len(toks) sample is the
             # chunk's mean inter-token interval.
-            now = time.perf_counter()
+            now = _mono()
             if work.last_tok_t is None:
                 self.metrics.observe("max_ttft_seconds", now - work.t0,
                                      model=self.model_id)
@@ -811,6 +966,10 @@ class BatchedService(InferenceService):
             except AdmissionError:
                 self.batch_stats.rejected += 1      # rate-limited etc.
                 raise
+            if job is not None and self.tracer is not None:
+                # the scheduler request IS the trace (same id), so
+                # GET /v2/jobs/{id}/trace resolves through the job record
+                job.trace_id = work.request.id
             self._inflight[work.request.id] = work
             self.batch_stats.submitted += 1
             self._cv.notify_all()
@@ -1002,11 +1161,29 @@ class BatchedService(InferenceService):
         ttft_ms = None
         if req is not None and req.first_token_s is not None:
             ttft_ms = round((req.first_token_s - work.t0) * 1e3, 3)
-        return {"prompt_tokens": len(work.prompt),
-                "completion_tokens": len(req.output) if req else 0,
-                "ttft_ms": ttft_ms,
-                "latency_ms": round(
-                    (time.perf_counter() - work.t0) * 1e3, 3)}
+        end = req.finished_at_s if req is not None \
+            and req.finished_at_s is not None else _mono()
+        usage = {"prompt_tokens": len(work.prompt),
+                 "completion_tokens": len(req.output) if req else 0,
+                 "ttft_ms": ttft_ms,
+                 "latency_ms": round((end - work.t0) * 1e3, 3)}
+        # phase durations from the scheduler's lifecycle stamps — all on
+        # the one serving clock, each boundary shared by two phases, so
+        # queue_ms + prefill_ms + decode_ms == retire - submit exactly
+        sub = req.submitted_at_s or work.t0
+        adm, ft = req.admitted_at_s, req.first_token_s
+        usage["queue_ms"] = round(
+            max(0.0, (adm if adm is not None else end) - sub) * 1e3, 3)
+        usage["prefill_ms"] = round(
+            max(0.0, (ft if ft is not None else end) - adm) * 1e3, 3) \
+            if adm is not None else 0.0
+        usage["decode_ms"] = round(max(0.0, end - ft) * 1e3, 3) \
+            if ft is not None else 0.0
+        usage["sched_ticks"] = (req.finished_at_tick
+                                - req.admitted_at_tick + 1) \
+            if req.admitted_at_tick >= 0 and req.finished_at_tick >= 0 \
+            else 0
+        return usage
 
     def _finalize(self, work: _Work):
         req = work.request
@@ -1024,7 +1201,7 @@ class BatchedService(InferenceService):
                 env = {"status": "ok", "predictions": preds,
                        "model_id": self.model_id,
                        "latency_ms": round(
-                           (time.perf_counter() - work.t0) * 1e3, 3)}
+                           (_mono() - work.t0) * 1e3, 3)}
                 self.metrics.inc("max_generated_tokens_total",
                                  len(req.output), model=self.model_id)
             except MAXError as e:
@@ -1038,6 +1215,7 @@ class BatchedService(InferenceService):
             self.batch_stats.completed += 1
         self._count_request(req.priority, env)
         usage = self._usage(work)
+        self._observe_phases(req.priority, usage)
         if work.job is not None:
             self._finish_job(work.job, env, usage=usage)
         work.event.set()
@@ -1084,10 +1262,10 @@ class BatchedService(InferenceService):
                     break
                 # coalescing window: give simultaneous arrivals a chance to
                 # share the first prefill/decode batch
-                deadline = time.monotonic() + self.batch_window_s
+                deadline = _mono() + self.batch_window_s
                 while (self.scheduler.queued_count() < self.engine.max_batch
                        and not self._closed):
-                    remaining = deadline - time.monotonic()
+                    remaining = deadline - _mono()
                     if remaining <= 0:
                         break
                     self._cv.wait(timeout=remaining)
@@ -1168,10 +1346,12 @@ def make_service(wrapper: MAXModelWrapper, mode: str = "auto",
                  **service_kw) -> InferenceService:
     """``mode``: 'sync' | 'batched' | 'auto' (batched iff the wrapper speaks
     the generation protocol — classifiers and other per-call models stay
-    sync). ``qos`` / ``metrics`` / ``job_ttl_s`` apply to either kind;
-    the remaining kwargs are batched-service tuning."""
+    sync). ``qos`` / ``metrics`` / ``job_ttl_s`` and the tracing knobs
+    (``trace`` / ``trace_buffer`` / ``slow_trace_ms``) apply to either
+    kind; the remaining kwargs are batched-service tuning."""
     shared = {k: service_kw.pop(k)
-              for k in ("qos", "metrics", "job_ttl_s")
+              for k in ("qos", "metrics", "job_ttl_s",
+                        "trace", "trace_buffer", "slow_trace_ms")
               if k in service_kw}
     if mode == "sync":
         return SyncService(wrapper, **shared)

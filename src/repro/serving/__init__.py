@@ -3,6 +3,7 @@ from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SchedulerStats
 from repro.serving.sampling import sample, mask_padded_vocab
 from repro.serving.metrics import Counter, Histogram, MetricsRegistry
+from repro.serving.tracing import RequestTrace, Tracer
 from repro.serving.qos import (
     AdmissionController, AdmissionError, DeadlineExceeded, InvalidPriority,
     QoSConfig, QueueFull, RateLimited, PRIORITIES,

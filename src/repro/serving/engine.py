@@ -115,6 +115,10 @@ class GenerationEngine:
         self.decode_chunk = 1 << (max(1, int(decode_chunk)).bit_length() - 1)
         # static per-request extra inputs (e.g. image embeds builder)
         self.extra_inputs = extra_inputs or {}
+        # host-side summary of the most recent admission (prompt tokens,
+        # prefix-cache hit tokens, pages allocated, COW) — read by the
+        # scheduler's tracer immediately after insert_request
+        self.last_admission: Optional[Dict[str, Any]] = None
 
         # Ring-cache families (sliding-window / hybrid local attention / SSM
         # state) left-pad prompts and wrap or accumulate their caches —
@@ -874,6 +878,11 @@ class GenerationEngine:
         except Exception:
             self.release_slot(slot)   # no orphaned slot or leaked pages
             raise
+        # host-side admission summary for observability (the scheduler's
+        # tracer reads it right after insert — never a device value)
+        self.last_admission = {
+            "prompt_tokens": len(prompt), "cached_hit_tokens": 0,
+            "pages_allocated": need if self.paged else 0, "cow": False}
         return first
 
     def _insert_cached(self, prompt: List[int], slot: int) -> jax.Array:
@@ -953,6 +962,11 @@ class GenerationEngine:
         except Exception:
             self.release_slot(slot)   # no orphaned slot or leaked pages
             raise
+        # warm-vs-cold is distinguishable here: hit tokens were installed
+        # by reference, only the remainder paid pages/compute
+        self.last_admission = {
+            "prompt_tokens": n, "cached_hit_tokens": min(hit_len, n),
+            "pages_allocated": total - len(hits), "cow": hit_len >= n}
         return first
 
     def release_slot(self, slot: int, tokens: Optional[List[int]] = None):

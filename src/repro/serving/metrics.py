@@ -131,7 +131,15 @@ class MetricsRegistry:
         self._counters: Dict[Tuple[str, LabelKey], Counter] = {}
         self._hists: Dict[Tuple[str, LabelKey], Histogram] = {}
         self._gauges: Dict[Tuple[str, LabelKey], Callable[[], float]] = {}
+        self._help: Dict[str, str] = {}
         self.created_at = time.time()
+
+    def describe(self, name: str, help_text: str):
+        """Attach a ``# HELP`` description to a metric family (by base
+        name, not per label set). Idempotent; call sites annotate the
+        series they emit so the Prometheus exposition is self-documenting."""
+        with self._lock:
+            self._help[name] = " ".join(str(help_text).split())
 
     # -- recording ---------------------------------------------------------
 
@@ -201,14 +209,27 @@ class MetricsRegistry:
             counters = dict(self._counters)
             hists = dict(self._hists)
             gauges = dict(self._gauges)
+            help_ = dict(self._help)
         lines: List[str] = []
         seen_type = set()
 
         def typ(name: str, kind: str):
             if name not in seen_type:
+                h = help_.get(name)
+                if h:
+                    esc = h.replace("\\", r"\\").replace("\n", r"\n")
+                    lines.append(f"# HELP {name} {esc}")
                 lines.append(f"# TYPE {name} {kind}")
                 seen_type.add(name)
 
+        # uptime is a first-class series in BOTH renderings (to_json
+        # reports uptime_s): dashboards detect registry restarts from it
+        lines.append("# HELP max_uptime_seconds "
+                     "Seconds since this metrics registry was created")
+        lines.append("# TYPE max_uptime_seconds gauge")
+        seen_type.add("max_uptime_seconds")
+        lines.append(
+            f"max_uptime_seconds {round(time.time() - self.created_at, 3)}")
         for (name, key), c in sorted(counters.items()):
             typ(name, "counter")
             lines.append(f"{name}{_label_str(key)} {c.value}")

@@ -35,12 +35,12 @@ from __future__ import annotations
 import itertools
 import math
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.serving.metrics import MetricsRegistry
+from repro.serving.tracing import now as tracing_now
 
 #: priority classes, highest first — order is the tiebreak in WRR
 PRIORITIES: Tuple[str, ...] = ("interactive", "batch", "best_effort")
@@ -204,9 +204,19 @@ class AdmissionController:
 
     def __init__(self, config: Optional[QoSConfig] = None, *,
                  metrics: Optional[MetricsRegistry] = None,
-                 model_id: str = "", clock=time.monotonic):
+                 model_id: str = "", clock=tracing_now):
         self.cfg = config or QoSConfig()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.metrics.describe(
+            "max_requests_total",
+            "Finished/rejected requests by model, outcome and priority "
+            "class (rejections counted at submit time)")
+        self.metrics.describe(
+            "max_queue_wait_seconds",
+            "Admission-queue wait per admitted request, by priority class")
+        self.metrics.describe(
+            "max_shed_total",
+            "Requests shed by deadline while queued, by priority class")
         self.model_id = model_id
         self._clock = clock
         self._lock = threading.Lock()

@@ -67,7 +67,6 @@ from __future__ import annotations
 
 import itertools
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -76,6 +75,7 @@ import jax
 import numpy as np
 
 from repro.serving.engine import GenerationEngine
+from repro.serving.tracing import now as _now
 
 
 # eq=False: requests compare by IDENTITY. Beyond being semantically right
@@ -107,7 +107,14 @@ class Request:
     slot: int = -1
     admitted_at_tick: int = -1
     finished_at_tick: int = -1
-    first_token_s: Optional[float] = None  # perf_counter at first sync point
+    # lifecycle timestamps on the serving clock (tracing.now): stamped at
+    # existing sync points whether or not a tracer is attached, so the
+    # service layer can always report queue/prefill/decode phase durations
+    submitted_at_s: float = 0.0
+    admitted_at_s: Optional[float] = None
+    finished_at_s: Optional[float] = None
+    first_token_s: Optional[float] = None  # serving clock, first sync point
+    trace: Optional[Any] = field(default=None, repr=False)  # RequestTrace
     cancelled: bool = False                # set via Scheduler.cancel()
     error: Optional[str] = None
     error_code: Optional[str] = None      # e.g. DEADLINE_EXCEEDED when shed
@@ -147,8 +154,12 @@ class SchedulerStats:
 class ContinuousBatchingScheduler:
     def __init__(self, engine: GenerationEngine, *, seed: int = 0,
                  retain_completed: int = 1024, admission=None,
-                 decode_chunk: Optional[int] = None):
+                 decode_chunk: Optional[int] = None, tracer=None):
         self.engine = engine
+        # Optional[Tracer]: span recording at the existing sync points.
+        # Every hook below is guarded so tracer=None costs one attribute
+        # check per boundary, nothing on the per-token path.
+        self.tracer = tracer
         # scheduler-local override: two schedulers sharing an engine (e.g.
         # a warm-up one) must not reconfigure each other through it.
         # Floored to a power of two like the engine default — the reported
@@ -208,10 +219,16 @@ class ContinuousBatchingScheduler:
         queue behind JAX compute just to enqueue. The id counter is an
         atomic ``itertools.count``; the controller and the FIFO deque have
         their own synchronization."""
+        t_sub = _now()
         req = Request(next(self._ids), list(prompt), max_new_tokens,
                       temperature, extra, token_sink=token_sink,
-                      deadline_at=(time.monotonic() + deadline_s
+                      submitted_at_s=t_sub,
+                      deadline_at=(t_sub + deadline_s
                                    if deadline_s is not None else None))
+        if self.tracer is not None:
+            req.trace = self.tracer.start(
+                req.id, prompt_tokens=len(req.prompt),
+                max_new_tokens=max_new_tokens, submitted_at=t_sub)
         self._pending[req.id] = req
         if self.admission is not None:
             try:
@@ -219,11 +236,24 @@ class ContinuousBatchingScheduler:
                     req, priority=priority, client=client,
                     cost=self.admission.cfg.request_cost(max_new_tokens),
                     deadline_s=deadline_s)
-            except Exception:
+            except Exception as e:
                 self._pending.pop(req.id, None)   # rejected: nothing to cancel
+                if req.trace is not None:         # rejection is a complete
+                    code = getattr(e, "code", "REJECTED")   # trace too
+                    self.tracer.finish(req.trace, outcome=code,
+                                       error_code=code)
                 raise
             req.priority, req.client = ticket.priority, ticket.client
+            if req.trace is not None:
+                req.trace.priority, req.trace.client = \
+                    ticket.priority, ticket.client
+                req.trace.event("qos_enqueue", **{
+                    "class": ticket.priority, "client": ticket.client,
+                    "cost": ticket.cost})
         else:
+            if req.trace is not None:
+                req.trace.priority, req.trace.client = \
+                    req.priority, req.client
             self.queue.append(req)      # deque.append is atomic
         return req
 
@@ -265,11 +295,21 @@ class ContinuousBatchingScheduler:
 
     def _retire(self, req: Request):
         req.finished_at_tick = self.stats.ticks
+        req.finished_at_s = _now()
         req.extra = None              # may pin large arrays (image embeds…)
         self._pending.pop(req.id, None)
         self._completed[req.id] = req
         while len(self._completed) > self.retain_completed:
             self._completed.pop(next(iter(self._completed)))
+        if req.trace is not None:
+            # every retire path funnels here, so cancelled/shed/exhausted
+            # requests get complete traces too — exactly the ones pulled
+            self.tracer.finish(req.trace,
+                               outcome=req.error_code or "ok",
+                               error_code=req.error_code,
+                               tick=self.stats.ticks,
+                               completion_tokens=len(req.output),
+                               ts=req.finished_at_s)
 
     def _shed(self, req: Request):
         if req.cancelled:             # cancelled while queued: its own code
@@ -278,6 +318,9 @@ class ContinuousBatchingScheduler:
         req.error = ("deadline exceeded while queued "
                      f"(waited for a decode slot, class {req.priority!r})")
         req.error_code = "DEADLINE_EXCEEDED"
+        if req.trace is not None:
+            req.trace.event("qos_shed", **{"class": req.priority,
+                                           "client": req.client})
         self._retire(req)
         self.stats.shed += 1
 
@@ -287,6 +330,9 @@ class ContinuousBatchingScheduler:
         req.error = (f"cancelled after {len(req.output)} generated tokens"
                      if req.output else "cancelled before starting")
         req.error_code = "CANCELLED"
+        if req.trace is not None:
+            req.trace.event("cancel", ran=req.slot >= 0,
+                            generated=len(req.output))
         self._retire(req)
         self.stats.cancelled += 1
 
@@ -311,6 +357,9 @@ class ContinuousBatchingScheduler:
                      f"{self.engine.kv_pool_blocks} pages of "
                      f"{self.engine.page_size} tokens)")
         req.error_code = "KV_POOL_EXHAUSTED"
+        if req.trace is not None:
+            req.trace.event("stall", kind="KV_POOL_EXHAUSTED",
+                            generated=len(req.output))
         self._release(req)
         # ran and retired -> counted completed (same reconciliation rule
         # as MAX_SEQ_EXCEEDED) plus the specific exhaustion counter
@@ -354,7 +403,7 @@ class ContinuousBatchingScheduler:
             self._cancel_retire(req)
         # deadlines keep ticking while a granted ticket waits for pool
         # blocks — the controller only enforces them up to the grant
-        now = time.monotonic()
+        now = _now()
         for req in [r for r in list(self._deferred)
                     if r.deadline_at is not None and r.deadline_at < now]:
             try:
@@ -366,6 +415,7 @@ class ContinuousBatchingScheduler:
     def _place(self, req: Request, slot: int):
         """Dispatch prefill + on-device first token; no host sync here —
         the first token is read with the chunk at the tick's sync point."""
+        req.admitted_at_s = _now()
         first = self.engine.insert_request(req.prompt, slot, extra=req.extra)
         req.slot = slot
         req.admitted_at_tick = self.stats.ticks
@@ -373,6 +423,13 @@ class ContinuousBatchingScheduler:
         self.active[slot] = req
         self._pending_first.append((req, first))
         self.stats.prefills += 1
+        if req.trace is not None:
+            # the engine's host-side admission summary (prefix-cache hit
+            # tokens vs cold prefill, pages allocated, COW) — the
+            # warm-vs-cold distinction operators diff traces on
+            req.trace.admitted(
+                req.admitted_at_s, slot=slot, tick=self.stats.ticks,
+                admission=getattr(self.engine, "last_admission", None))
 
     def _admit_charge(self, req: Request):
         """What the admission gate charges for ``req``: the token list —
@@ -423,6 +480,8 @@ class ContinuousBatchingScheduler:
                 blocked = True                    # pool still tight: hold
                 break                             # order, retry next tick
             self._deferred.popleft()
+            if req.trace is not None:
+                req.trace.event("deferred_unpark")
             self._place(req, free.pop(0))
         if self.admission is not None:
             # controller decides order; it also sweeps deadline-expired
@@ -434,6 +493,9 @@ class ContinuousBatchingScheduler:
             for t in shed:
                 self._shed(t.item)
             for t in tickets:
+                if t.item.trace is not None:
+                    t.item.trace.event("qos_grant", **{
+                        "class": t.priority, "client": t.client})
                 if t.item.cancelled:              # raced the sweep
                     self._cancel_retire(t.item)
                     continue
@@ -444,6 +506,10 @@ class ContinuousBatchingScheduler:
                         self._admit_charge(t.item)):
                     # no slot left (an earlier ticket took the last) or no
                     # pool blocks: hold in grant order until capacity frees
+                    if t.item.trace is not None:
+                        t.item.trace.event(
+                            "deferred_park",
+                            reason="no_slot" if not free else "no_blocks")
                     self._deferred.append(t.item)
                     continue
                 self._place(t.item, free.pop(0))
@@ -498,7 +564,9 @@ class ContinuousBatchingScheduler:
         """Per-chunk token delivery + first-token timestamp, at the sync
         point. A sink fault must never poison the co-batch's tick."""
         if req.first_token_s is None:
-            req.first_token_s = time.perf_counter()
+            req.first_token_s = _now()
+            if req.trace is not None:
+                req.trace.first_token(req.first_token_s)
         if req.token_sink is not None:
             try:
                 req.token_sink(tokens)
@@ -519,7 +587,9 @@ class ContinuousBatchingScheduler:
 
         Exactly one host sync per tick (reading the chunk's token block),
         however many tokens the chunk produced."""
-        t0 = time.perf_counter()
+        t0 = _now()
+        emitted_before = self.stats.emitted_tokens
+        chunk_k = 0
         with self._lock:
             self._sweep_cancelled()
             self._admit()
@@ -562,6 +632,7 @@ class ContinuousBatchingScheduler:
                 k = min(self.decode_chunk,
                         max(1, min(int(budgets[s]) for s in self.active)))
                 k = 1 << (k.bit_length() - 1)
+                chunk_k = k
                 self._rng, sub = jax.random.split(self._rng)
                 toks, emitted = self.engine.step_chunk(
                     sub, self._temps, budgets, k)
@@ -586,6 +657,9 @@ class ContinuousBatchingScheduler:
                         req.output.extend(chunk_toks)
                         self.stats.emitted_tokens += n
                         self._feed_sink(req, chunk_toks)
+                        if req.trace is not None:
+                            req.trace.event("chunk", n=n, k=chunk_k,
+                                            occupancy=len(self.active))
                     self._maybe_finish(req)
                     # physical capacity only: a pool-starved (but not
                     # max_seq-full) slot is retired by the pre-chunk ensure
@@ -593,8 +667,21 @@ class ContinuousBatchingScheduler:
                     if not req.done and (self.engine.context_len(slot)
                                          >= self.engine.max_seq):
                         self._overflow(req)
+            if self.tracer is not None:
+                # tick lane + occupancy counter tracks, host mirrors only
+                # (blocks_in_use / prefix stats never touch the device)
+                kv = self.engine.blocks_in_use() if self.engine.paged \
+                    else None
+                pages = None
+                if getattr(self.engine, "prefix_cache", None) is not None:
+                    pages = self.engine.prefix_stats().get("cached_pages")
+                self.tracer.tick(
+                    self.stats.ticks, t0, _now(), k=chunk_k,
+                    active=len(self.active),
+                    emitted=self.stats.emitted_tokens - emitted_before,
+                    kv_blocks_in_use=kv, prefix_cached_pages=pages)
             self.stats.ticks += 1
-            self.stats.wall_s += time.perf_counter() - t0
+            self.stats.wall_s += _now() - t0
 
     def run(self, *, max_ticks: int = 10_000) -> SchedulerStats:
         """Run until queue + active drain (or tick budget). ``wall_s`` is

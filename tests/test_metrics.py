@@ -1,0 +1,219 @@
+"""MetricsRegistry invariants: concurrent writers, gauge lifecycle, and
+the hand-rolled Prometheus exposition grammar."""
+
+import re
+import threading
+
+from repro.serving.metrics import (DEFAULT_BUCKETS, MetricsRegistry,
+                                   percentile)
+
+
+# -- concurrency -------------------------------------------------------------
+
+def test_concurrent_writers_on_one_series():
+    """N threads hammering the SAME counter and histogram identities must
+    lose no increments (the registry interns one object per identity and
+    each object locks its own updates)."""
+    reg = MetricsRegistry()
+    threads, per_thread = 8, 500
+
+    def work():
+        for _ in range(per_thread):
+            reg.inc("max_requests_total", model="m", outcome="ok")
+            reg.observe("max_queue_wait_seconds", 0.01, model="m")
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+    total = threads * per_thread
+    c = reg.counter("max_requests_total", model="m", outcome="ok")
+    assert c.value == total
+    h = reg.histogram("max_queue_wait_seconds", model="m")
+    assert h.count == total
+    # the exposition agrees with the objects
+    text = reg.to_prometheus()
+    assert f'max_requests_total{{model="m",outcome="ok"}} {float(total)}' \
+        in text
+    assert f'max_queue_wait_seconds_count{{model="m"}} {total}' in text
+
+
+def test_concurrent_reads_during_writes_do_not_crash():
+    reg = MetricsRegistry()
+    stop = threading.Event()
+    errors = []
+
+    def write():
+        while not stop.is_set():
+            reg.inc("max_requests_total", model="m")
+            reg.observe("max_queue_wait_seconds", 0.002, model="m")
+
+    def render():
+        try:
+            for _ in range(50):
+                reg.to_json()
+                reg.to_prometheus()
+        except Exception as e:           # pragma: no cover - failure path
+            errors.append(e)
+
+    w = threading.Thread(target=write)
+    w.start()
+    rs = [threading.Thread(target=render) for _ in range(3)]
+    for r in rs:
+        r.start()
+    for r in rs:
+        r.join()
+    stop.set()
+    w.join()
+    assert errors == []
+
+
+# -- gauges ------------------------------------------------------------------
+
+def test_unregister_gauges_drops_from_both_renderings():
+    reg = MetricsRegistry()
+    reg.register_gauge("max_queue_depth", lambda: 3.0, model="a")
+    reg.register_gauge("max_queue_depth", lambda: 7.0, model="b")
+
+    assert 'max_queue_depth{model="a"}' in reg.to_json()["gauges"]
+    assert 'max_queue_depth{model="a"}' in reg.to_prometheus()
+
+    reg.unregister_gauges(model="a")
+    j, p = reg.to_json(), reg.to_prometheus()
+    assert 'max_queue_depth{model="a"}' not in j["gauges"]
+    assert 'max_queue_depth{model="a"}' not in p
+    # the other deployment's gauge survives
+    assert 'max_queue_depth{model="b"}' in j["gauges"]
+    assert 'max_queue_depth{model="b"} 7.0' in p
+
+
+def test_dead_gauge_does_not_kill_rendering():
+    reg = MetricsRegistry()
+    reg.register_gauge("max_queue_depth", lambda: 1 / 0, model="a")
+    assert reg.to_json()["gauges"]['max_queue_depth{model="a"}'] is None
+    assert "max_queue_depth" not in reg.to_prometheus()
+
+
+# -- exposition grammar ------------------------------------------------------
+
+_SAMPLE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?P<labels>\{[^{}]*\})?'
+    r' (?P<value>[-+]?(?:\d+\.?\d*(?:[eE][-+]?\d+)?|Inf|NaN))$')
+_LABEL = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _parse_exposition(text: str):
+    """Minimal Prometheus text-format parser: returns (types, samples)
+    or raises AssertionError on any malformed line."""
+    types, samples = {}, []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            assert len(parts) == 4 and parts[2], f"bad HELP line: {line!r}"
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            assert kind in ("counter", "gauge", "histogram"), line
+            assert name not in types, f"duplicate TYPE for {name}"
+            types[name] = kind
+            continue
+        assert not line.startswith("#"), f"unknown comment: {line!r}"
+        m = _SAMPLE.match(line)
+        assert m, f"malformed sample line: {line!r}"
+        labels = dict(_LABEL.findall(m.group("labels") or ""))
+        samples.append((m.group("name"), labels, m.group("value")))
+    return types, samples
+
+
+def _populated_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.describe("max_requests_total", "Requests by model and outcome")
+    reg.inc("max_requests_total", model="m", outcome="ok")
+    # label values exercising the escaper: backslash, quote, newline
+    reg.inc("max_shed_total", reason='dead"line', client="a\\b\nc")
+    reg.observe("max_queue_wait_seconds", 0.003, model="m")
+    reg.observe("max_queue_wait_seconds", 99.0, model="m")   # +Inf bucket
+    reg.register_gauge("max_queue_depth", lambda: 2.0, model="m")
+    return reg
+
+
+def test_prometheus_grammar_parses():
+    types, samples = _parse_exposition(_populated_registry().to_prometheus())
+    names = {s[0] for s in samples}
+    assert "max_requests_total" in names
+    assert "max_queue_wait_seconds_bucket" in names
+    # every sample's base family carries a TYPE declaration
+    for name, _, _ in samples:
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        assert name in types or base in types, f"no TYPE for {name}"
+
+
+def test_prometheus_label_escaping_roundtrips():
+    text = _populated_registry().to_prometheus()
+    _, samples = _parse_exposition(text)
+    shed = [s for s in samples if s[0] == "max_shed_total"]
+    assert len(shed) == 1
+    labels = shed[0][1]
+    # unescape what the regex captured and compare to the original values
+    unesc = lambda v: (v.replace(r"\n", "\n").replace(r'\"', '"')
+                       .replace(r"\\", "\\"))          # noqa: E731
+    assert unesc(labels["reason"]) == 'dead"line'
+    assert unesc(labels["client"]) == "a\\b\nc"
+
+
+def test_prometheus_histogram_buckets_cumulative_inf_last():
+    reg = _populated_registry()
+    h = reg.histogram("max_queue_wait_seconds", model="m")
+    pairs = h.cumulative()
+    les = [le for le, _ in pairs]
+    assert les[-1] == "+Inf"
+    assert les[:-1] == [repr(b) for b in DEFAULT_BUCKETS]
+    counts = [c for _, c in pairs]
+    assert counts == sorted(counts), "bucket counts must be cumulative"
+    assert counts[-1] == h.count
+    # exposition order matches: +Inf is the last _bucket line of the series
+    text = reg.to_prometheus()
+    bucket_lines = [ln for ln in text.splitlines()
+                    if ln.startswith("max_queue_wait_seconds_bucket")]
+    assert 'le="+Inf"' in bucket_lines[-1]
+    assert f"{h.count}" in bucket_lines[-1].split()[-1]
+
+
+def test_uptime_in_both_renderings():
+    reg = MetricsRegistry()
+    j = reg.to_json()
+    assert "uptime_s" in j and j["uptime_s"] >= 0.0
+    text = reg.to_prometheus()
+    types, samples = _parse_exposition(text)
+    assert types.get("max_uptime_seconds") == "gauge"
+    up = [s for s in samples if s[0] == "max_uptime_seconds"]
+    assert len(up) == 1 and float(up[0][2]) >= 0.0
+    assert "# HELP max_uptime_seconds" in text
+
+
+def test_describe_emits_help_line_idempotently():
+    reg = MetricsRegistry()
+    reg.describe("max_requests_total", "Requests  by\nmodel")
+    reg.describe("max_requests_total", "Requests  by\nmodel")   # idempotent
+    reg.inc("max_requests_total", model="m")
+    text = reg.to_prometheus()
+    helps = [ln for ln in text.splitlines()
+             if ln.startswith("# HELP max_requests_total")]
+    assert helps == ["# HELP max_requests_total Requests by model"]
+    # HELP precedes TYPE precedes the first sample
+    lines = text.splitlines()
+    ih = lines.index("# HELP max_requests_total Requests by model")
+    it = lines.index("# TYPE max_requests_total counter")
+    assert ih < it
+
+
+def test_percentile_nearest_rank():
+    vals = sorted([0.1, 0.2, 0.3, 0.4])
+    assert percentile(vals, 0.0) == 0.1
+    assert percentile(vals, 0.99) == 0.4
+    assert percentile([], 0.5) == 0.0
