@@ -15,6 +15,8 @@ health.
         # live token events, job event streams, and mid-stream cancel
     PYTHONPATH=src python examples/serve_http.py --trace   # tracing demo:
         # span timelines, slow-request capture, Perfetto export
+    PYTHONPATH=src python examples/serve_http.py --chaos   # robustness demo:
+        # armed fault injection, safe retries, brownout + /v2/health
 """
 
 import argparse
@@ -420,6 +422,90 @@ def trace_demo():
         print("tracing stats:", json.dumps(stats["service"]["tracing"]))
 
 
+def chaos_demo():
+    """Fault-tolerant serving: deploy with the fault plane armed (every
+    decode chunk has a 15% chance of raising inside the engine), fire a
+    batch of concurrent requests, and watch them all complete anyway —
+    the scheduler quarantines faulted slots as ``ENGINE_FAULT`` and the
+    service requeues zero-delivered-token work with backoff. Then force
+    the brownout circuit open and see 503 + ``Retry-After`` and the
+    load-balancer view flip at ``/v2/health``."""
+    with MAXServer(build_kw={"max_seq": 64, "max_batch": 4},
+                   auto_deploy=False,
+                   service_kw={"max_retries": 6,
+                               "retry_backoff_s": 0.05}) as server:
+        print(f"MAX serving at {server.url}")
+        post(server.url, "/v2/model/qwen3-4b/deploy",
+             {"service": "batched",
+              "faults": {"chunk_rate": 0.15, "seed": 7},
+              "brownout": {"retry_after_s": 2}})
+        print("deployed with chunk_rate=0.15 fault injection armed")
+        post(server.url, "/v2/model/qwen3-4b/predict",       # warm compile
+             {"input": {"text": "warm", "max_new_tokens": 2}})
+
+        results, threads = {}, []
+        t0 = time.perf_counter()
+        for i in range(8):
+
+            def work(i=i):
+                try:
+                    results[i] = post(
+                        server.url, "/v2/model/qwen3-4b/predict",
+                        {"input": {"text": f"chaos {i}",
+                                   "max_new_tokens": 12}})
+                except urllib.error.HTTPError as e:
+                    results[i] = json.loads(e.read())
+
+            th = threading.Thread(target=work)
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join()
+        dt = time.perf_counter() - t0
+        ok = sum(1 for env in results.values()
+                 if env.get("status") == "ok")
+        rob = get(server.url,
+                  "/v2/model/qwen3-4b/stats")["service"]["robustness"]
+        print(f"\n8 requests under ~15%-per-chunk faults: {ok}/8 ok "
+              f"in {dt:.1f}s")
+        for i, env in sorted(results.items()):
+            if env.get("status") != "ok":
+                print(f"  req{i} failed structurally: "
+                      f"{env['error']['code']}")
+        print(f"  engine_faults={rob['engine_faults']} "
+              f"retries={rob['retries']} "
+              f"rebuilds={rob['engine_rebuilds']} "
+              f"worker_restarts={rob['worker_restarts']}")
+        print(f"  injection: {json.dumps(rob['fault_injection'])}")
+
+        # brownout: open the circuit and watch the serving surface degrade
+        ctl = server.manager.get("qwen3-4b").service._brownout
+        ctl.force("hard")
+        try:
+            post(server.url, "/v2/model/qwen3-4b/predict",
+                 {"input": {"text": "shed me", "max_new_tokens": 2}})
+            print("\nunexpected: request admitted under HARD brownout")
+        except urllib.error.HTTPError as e:
+            env = json.loads(e.read())
+            print(f"\nHARD brownout: {e.code} {env['error']['code']} "
+                  f"Retry-After={e.headers['Retry-After']}s")
+        try:
+            get(server.url, "/v2/health")
+        except urllib.error.HTTPError as e:
+            health = json.loads(e.read())
+            dep = health["deployments"]["qwen3-4b"]
+            print(f"/v2/health -> {e.code}: ready={health['ready']} "
+                  f"degradation={dep['degradation']}")
+        ctl.force("normal")
+        ctl.force(None)
+        health = get(server.url, "/v2/health")
+        rob = get(server.url,
+                  "/v2/model/qwen3-4b/stats")["service"]["robustness"]
+        print(f"circuit closed: /v2/health -> ready={health['ready']} "
+              f"state={rob['brownout']['state']} "
+              f"shed={rob['brownout']['shed']}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--qos", action="store_true",
@@ -434,6 +520,9 @@ if __name__ == "__main__":
                     help="run the request-lifecycle tracing demo "
                          "(span timelines, slow-request capture, "
                          "Perfetto export)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection robustness demo "
+                         "(safe retries, brownout, /v2/health)")
     args = ap.parse_args()
     if args.qos:
         qos_demo()
@@ -445,5 +534,7 @@ if __name__ == "__main__":
         prefix_demo()
     elif args.trace:
         trace_demo()
+    elif args.chaos:
+        chaos_demo()
     else:
         main()

@@ -37,7 +37,16 @@ service is a :class:`~repro.core.service.BatchedService`):
     GET    /v2/metrics                 -> QoS/serving metrics (JSON, or
                                           Prometheus text with
                                           ?format=prometheus)
+    GET    /v2/health                  -> liveness / readiness /
+                                          degradation (503 when any
+                                          deployment is not ready)
     GET    /v2/routes                  -> the route table itself
+
+Robustness: every 429/503 response carries a ``Retry-After`` header
+(honouring the error's ``retry_after_s`` when the brownout controller
+set one). Engine faults surface as structured ``ENGINE_FAULT`` (500)
+after the service's bounded retry budget is exhausted; brownout
+shedding surfaces as ``DEGRADED``/``CIRCUIT_OPEN`` (503).
 
 QoS: v2 predict/predict_batch/jobs bodies accept optional ``priority``
 (interactive | batch | best_effort), ``client`` (identity for fairness and
@@ -53,6 +62,7 @@ apps around the wrapper.
 from __future__ import annotations
 
 import json
+import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Tuple
@@ -63,6 +73,7 @@ from repro.core.registry import EXCHANGE, ModelRegistry
 from repro.core.router import RequestCtx, Response, Router, StreamEvent
 from repro.core.service import ServiceOverloaded
 from repro.core.wrapper import MAXError, PromptTooLong
+from repro.serving.faults import BrownoutConfig, FaultSpec
 from repro.serving.qos import PRIORITIES, AdmissionError
 
 API_VERSION = "v1"          # of the back-compat surface
@@ -91,6 +102,13 @@ ERROR_STATUS = {
     # the shared KV page pool ran dry mid-generation — a capacity
     # condition of the deployment, not a malformed request
     "KV_POOL_EXHAUSTED": 503,
+    # engine fault quarantined the request and the retry budget ran out
+    # (or tokens had already streamed, which forbids a replay)
+    "ENGINE_FAULT": 500,
+    # brownout SOFT shed a best_effort request; retryable after backoff
+    "DEGRADED": 503,
+    # brownout HARD opened the admission circuit for all classes
+    "CIRCUIT_OPEN": 503,
     # the client (or its DELETE) abandoned the work: nginx's 499
     "CANCELLED": 499,
     "INTERNAL": 500,
@@ -103,10 +121,12 @@ class ApiError(Exception):
     """Client-visible failure with a structured code; formatted per API
     generation by the dispatcher (flat string for v1, object for v2)."""
 
-    def __init__(self, code: str, message: str):
+    def __init__(self, code: str, message: str,
+                 retry_after_s: Optional[float] = None):
         super().__init__(message)
         self.code = code
         self.status = ERROR_STATUS.get(code, 400)
+        self.retry_after_s = retry_after_s
 
 
 def _v1_error(message: str) -> Dict[str, Any]:
@@ -116,6 +136,22 @@ def _v1_error(message: str) -> Dict[str, Any]:
 def _v2_error(code: str, message: str, **extra) -> Dict[str, Any]:
     return {"status": "error",
             "error": {"code": code, "message": message}, **extra}
+
+
+def _with_retry_after(resp: Response) -> Response:
+    """Every 429/503 tells the client when to come back: honour a
+    structured ``retry_after_s`` from the error body (the brownout
+    controller sets one), default to 1 second otherwise. Retry-After is
+    whole seconds per RFC 9110, so fractional hints round up."""
+    if resp.status in (429, 503) and "Retry-After" not in resp.headers:
+        after = 1.0
+        if isinstance(resp.body, dict):
+            err = resp.body.get("error")
+            if isinstance(err, dict) and isinstance(
+                    err.get("retry_after_s"), (int, float)):
+                after = float(err["retry_after_s"])
+        resp.headers["Retry-After"] = str(max(1, math.ceil(after)))
+    return resp
 
 
 _ENVELOPE_SCHEMA = {
@@ -227,7 +263,9 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
                   " knobs select the paged KV cache layout, the prefix knobs"
                   " enable content-addressed KV page sharing on top of it,"
                   " and the trace knobs size request-lifecycle tracing /"
-                  " slow-request capture)")
+                  " slow-request capture; 'faults': {...} arms deterministic"
+                  " fault injection and 'brownout': {...} tunes the"
+                  " NORMAL/SOFT/HARD degradation controller)")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
@@ -236,6 +274,11 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
           summary="Serving metrics: requests by class/outcome, queue-wait "
                   "percentiles, shed counts (?format=prometheus for text "
                   "exposition)")
+    r.add("GET", "/v2/health", h("_h_health_v2"),
+          summary="Liveness / readiness / degradation across deployments: "
+                  "200 when every deployed service is ready, 503 (with "
+                  "Retry-After) when any worker is dead or a brownout "
+                  "circuit is open")
     r.add("GET", "/v2/routes", h("_h_routes"),
           summary="The route table (source of truth for this spec)")
     return r
@@ -309,7 +352,8 @@ class MAXServer:
             def log_message(self, *a):      # quiet
                 pass
 
-            def _send(self, code: int, payload: Dict[str, Any]):
+            def _send(self, code: int, payload: Dict[str, Any],
+                      headers: Optional[Dict[str, str]] = None):
                 # handlers may return a pre-rendered non-JSON body (the
                 # Prometheus exposition) via the _raw escape hatch
                 if isinstance(payload, dict) and "_raw" in payload:
@@ -321,6 +365,8 @@ class MAXServer:
                 self.send_response(code)
                 self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))
+                for k, v in (headers or {}).items():
+                    self.send_header(k, v)
                 self.end_headers()
                 self.wfile.write(body)
 
@@ -334,6 +380,8 @@ class MAXServer:
                 self.send_header("Content-Type", "text/event-stream")
                 self.send_header("Cache-Control", "no-cache")
                 self.send_header("X-Accel-Buffering", "no")
+                for k, v in resp.headers.items():
+                    self.send_header(k, v)
                 self.end_headers()
                 events = resp.events
                 last_seq = -1
@@ -369,7 +417,7 @@ class MAXServer:
                 if resp.streaming:
                     self._send_sse(resp)
                 else:
-                    self._send(resp.status, resp.body)
+                    self._send(resp.status, resp.body, resp.headers)
 
             def _hdrs(self):
                 return {k.lower(): v for k, v in self.headers.items()}
@@ -425,17 +473,20 @@ class MAXServer:
             return Response(404, _v2_error("NOT_FOUND", msg) if v2
                             else _v1_error(msg))
         try:
-            return Response.adapt(
+            resp = Response.adapt(
                 route.handler(RequestCtx(method, path, params, body,
                                          query=query,
                                          headers=headers or {})))
         except ApiError as e:
             payload = _v2_error(e.code, str(e)) if v2 else _v1_error(str(e))
-            return Response(e.status, payload)
+            if v2 and e.retry_after_s is not None:
+                payload["error"]["retry_after_s"] = e.retry_after_s
+            resp = Response(e.status, payload)
         except Exception as e:          # container fault isolation
             payload = _v2_error("INTERNAL", str(e)) if v2 \
                 else _v1_error(str(e))
-            return Response(500, payload)
+            resp = Response(500, payload)
+        return _with_retry_after(resp)
 
     # back-compat shims for callers of the old (status, json) entry points
     def handle_get(self, path: str) -> Tuple[int, Dict[str, Any]]:
@@ -519,6 +570,8 @@ class MAXServer:
             return ERROR_STATUS["CANCELLED"], env
         code = env.get("code", "INVALID_INPUT")
         out = _v2_error(code, str(env.get("error", "prediction failed")))
+        if isinstance(env.get("retry_after_s"), (int, float)):
+            out["error"]["retry_after_s"] = env["retry_after_s"]
         if "model_id" in env:
             out["model_id"] = env["model_id"]
         return ERROR_STATUS.get(code, 400), out
@@ -652,7 +705,9 @@ class MAXServer:
         except ServiceOverloaded as e:
             raise ApiError("QUEUE_FULL", str(e)) from None
         except AdmissionError as e:
-            raise ApiError(e.code, str(e)) from None
+            raise ApiError(e.code, str(e),
+                           retry_after_s=getattr(e, "retry_after_s", None)
+                           ) from None
         except PromptTooLong as e:
             raise ApiError("PROMPT_TOO_LONG", str(e)) from None
         except MAXError as e:
@@ -837,6 +892,29 @@ class MAXServer:
                                "'trace': false")
             service_overrides["slow_trace_ms"] = float(v)
             service_overrides.setdefault("trace", True)
+        # robustness knobs: fault injection (chaos testing) and brownout
+        # tuning — validated HERE, before deploy, for the same
+        # validate-before-teardown reason as the kv/qos knobs (a bad spec
+        # must not leave the model undeployed)
+        if body.get("faults") is not None:
+            if not isinstance(body["faults"], dict):
+                raise ApiError("INVALID_INPUT", "'faults' must be an object")
+            try:
+                FaultSpec.from_json(body["faults"])
+            except (TypeError, ValueError) as e:
+                raise ApiError("INVALID_INPUT",
+                               f"bad 'faults' spec: {e}") from None
+            service_overrides["faults"] = body["faults"]
+        if body.get("brownout") is not None:
+            if not isinstance(body["brownout"], dict):
+                raise ApiError("INVALID_INPUT",
+                               "'brownout' must be an object")
+            try:
+                BrownoutConfig.from_json(body["brownout"])
+            except (TypeError, ValueError) as e:
+                raise ApiError("INVALID_INPUT",
+                               f"bad 'brownout' config: {e}") from None
+            service_overrides["brownout"] = body["brownout"]
         try:
             dep = self.manager.deploy(ctx.params["model_id"],
                                       service_mode=mode, qos=qos,
@@ -881,6 +959,30 @@ class MAXServer:
                      "requests": dep.stats.requests,
                      "errors": dep.stats.errors,
                      "mean_latency_ms": round(dep.stats.mean_latency_ms, 2)}
+
+    def _h_health_v2(self, ctx) -> Tuple[int, Dict[str, Any]]:
+        """Aggregate liveness/readiness: the server process answering at
+        all is liveness; readiness requires every deployed service to be
+        ready (worker thread alive, brownout circuit not open). 503 (with
+        Retry-After via the central attach) tells a load balancer to stop
+        routing here until the degradation clears."""
+        deployments: Dict[str, Any] = {}
+        ready = True
+        degraded = False
+        for asset_id in self.manager.deployed():
+            try:
+                service = self.manager.get(asset_id).service
+            except KeyError:
+                continue            # undeployed between list and get
+            h = service.health()
+            deployments[asset_id] = h
+            ready = ready and bool(h.get("ready"))
+            degraded = degraded or h.get("degradation", "normal") != "normal"
+        status = 200 if ready else 503
+        return status, {"status": "ok" if ready else "error",
+                        "live": True, "ready": ready,
+                        "degraded": degraded,
+                        "deployments": deployments}
 
     def _h_metrics(self, ctx) -> Tuple[int, Dict[str, Any]]:
         reg = self.manager.metrics

@@ -65,6 +65,7 @@ class Response:
     status: int = 200
     body: Optional[Dict[str, Any]] = None
     events: Optional[Iterator[StreamEvent]] = None
+    headers: Dict[str, str] = field(default_factory=dict)
 
     @classmethod
     def adapt(cls, result: Union["Response", Tuple[int, Dict[str, Any]]]

@@ -55,6 +55,9 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.core.router import StreamEvent
 from repro.core.wrapper import MAXError, MAXModelWrapper, PromptTooLong
+from repro.serving.faults import (
+    BROWNOUT_STATES, BrownoutController, FaultPlane, FaultSpec, WorkerKill,
+)
 from repro.serving.metrics import TOKEN_LATENCY_BUCKETS, MetricsRegistry
 from repro.serving.qos import (
     AdmissionController, AdmissionError, QoSConfig, QueueFull,
@@ -454,6 +457,14 @@ class InferenceService(abc.ABC):
 
     # -- lifecycle / introspection ----------------------------------------
 
+    def health(self) -> Dict[str, Any]:
+        """Liveness/readiness/degradation summary for ``GET /v2/health``.
+        The sync service is live and ready as long as it is open (the
+        request thread does the work — there is no worker to die); the
+        batched service overrides this with worker/brownout state."""
+        open_ = not getattr(self, "_closed", False)
+        return {"live": open_, "ready": open_, "degradation": "normal"}
+
     def stats(self) -> Dict[str, Any]:
         with self._jobs_lock:
             self._gc_jobs_locked()
@@ -515,8 +526,11 @@ class SyncService(InferenceService):
             # the controller (counting again would double the series), and
             # an invalid priority must not mint a metrics label from a
             # client-controlled string
-            return {"status": "error", "error": str(e), "code": e.code,
-                    "model_id": self.model_id}
+            env = {"status": "error", "error": str(e), "code": e.code,
+                   "model_id": self.model_id}
+            if getattr(e, "retry_after_s", None) is not None:
+                env["retry_after_s"] = e.retry_after_s
+            return env
 
     @staticmethod
     def _first_prediction(env: Dict[str, Any]) -> Dict[str, Any]:
@@ -808,6 +822,15 @@ class _Work:
     push: Optional[Callable] = None
     notify: Optional[Callable] = None
     last_tok_t: Optional[float] = None   # previous sync-point timestamp
+    # retry bookkeeping: a faulted request is retry-safe only while ZERO
+    # tokens were DELIVERED outside the service (streamed to a bridge or a
+    # job replay buffer) — internal scheduler output is discarded freely,
+    # but a token a client may have seen must never be re-emitted
+    sink: Optional[Callable] = None      # token_sink, reused on resubmit
+    qos: Optional[Dict[str, Any]] = None # original QoS fields, for resubmit
+    deadline_at: Optional[float] = None  # absolute: retries never extend it
+    attempts: int = 0                    # completed (faulted) attempts
+    delivered: int = 0                   # tokens pushed to an external sink
 
 
 @dataclass
@@ -849,7 +872,14 @@ class BatchedService(InferenceService):
                  batch_window_s: float = 0.01, max_queue: int = 64,
                  request_timeout_s: float = 300.0,
                  decode_chunk: Optional[int] = None,
-                 stream_queue_depth: int = 256, **kw):
+                 stream_queue_depth: int = 256,
+                 faults: Optional[Any] = None,
+                 brownout: Optional[Any] = None,
+                 max_retries: int = 3,
+                 retry_backoff_s: float = 0.05,
+                 stall_budget_s: float = 5.0,
+                 rebuild_after_faults: int = 3,
+                 watchdog_interval_s: float = 0.1, **kw):
         if not wrapper.supports_generation():
             raise ValueError(
                 f"{wrapper.metadata.id!r} does not implement the generation "
@@ -860,9 +890,17 @@ class BatchedService(InferenceService):
         super().__init__(wrapper, **kw)
         from repro.serving.scheduler import ContinuousBatchingScheduler
         self.engine = wrapper.engine
+        # fault injection (chaos testing): an unarmed spec attaches no
+        # plane at all, so disabled injection is byte-identical to a build
+        # without it — the scheduler hook is a bare `is not None` check
+        spec = faults if isinstance(faults, FaultSpec) \
+            else FaultSpec.from_json(faults)
+        self.fault_plane: Optional[FaultPlane] = \
+            FaultPlane(spec) if spec.armed else None
         self.scheduler = ContinuousBatchingScheduler(
             self.engine, admission=self.admission,
-            decode_chunk=decode_chunk, tracer=self.tracer)
+            decode_chunk=decode_chunk, tracer=self.tracer,
+            faults=self.fault_plane)
         self.batch_window_s = batch_window_s
         self.max_queue = self.qos_cfg.max_queue
         self.request_timeout_s = request_timeout_s
@@ -875,6 +913,48 @@ class BatchedService(InferenceService):
         self._cv = threading.Condition()
         self._closed = False
         self._worker_error: Optional[str] = None
+        # -- supervision / retry / brownout --------------------------------
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = retry_backoff_s
+        self.stall_budget_s = stall_budget_s
+        self.rebuild_after_faults = max(0, int(rebuild_after_faults))
+        self.watchdog_interval_s = watchdog_interval_s
+        self._retry_q: List[tuple] = []   # (due_monotonic, _Work), sorted
+        self.retries = 0
+        self.worker_restarts = 0
+        self.engine_rebuilds = 0
+        self.tick_stalls = 0
+        self._faults_seen = 0             # metric-delta mirror of scheduler
+        self._pool_exhausted_seen = 0
+        self._tick_started: Optional[float] = None
+        self._stall_flagged = False
+        self._brownout: Optional[BrownoutController] = None
+        if brownout is not None:
+            self._brownout = BrownoutController(
+                brownout, metrics=self.metrics, model_id=self.model_id)
+            self.metrics.register_gauge(
+                "max_brownout_state",
+                lambda: BROWNOUT_STATES.index(self._brownout.state),
+                model=self.model_id)
+        for name, help_text in (
+            ("max_engine_faults_total",
+             "Requests retired as ENGINE_FAULT (injected or real)"),
+            ("max_retries_total",
+             "Automatic requeues of zero-delivery faulted requests"),
+            ("max_worker_restarts_total",
+             "Dead scheduler workers respawned by the watchdog"),
+            ("max_engine_rebuilds_total",
+             "Engine state rebuilds after repeated faults"),
+            ("max_tick_stalls_total",
+             "Scheduler ticks that exceeded the stall budget"),
+            ("max_brownout_transitions_total",
+             "Brownout state-machine transitions, by target state"),
+            ("max_brownout_shed_total",
+             "Requests shed at admission by brownout degradation"),
+            ("max_brownout_state",
+             "Current degradation state (0=normal, 1=soft, 2=hard)"),
+        ):
+            self.metrics.describe(name, help_text)
         self.metrics.register_gauge(
             "max_queue_depth", self.admission.depth, model=self.model_id)
         if getattr(self.engine, "paged", False):
@@ -907,6 +987,13 @@ class BatchedService(InferenceService):
             target=self._worker, daemon=True,
             name=f"batched-{self.model_id}")
         self._thread.start()
+        # the watchdog outlives any one worker incarnation: it respawns
+        # dead workers (quarantining whatever they held) and flags ticks
+        # that blow the stall budget
+        self._watchdog_thread = threading.Thread(
+            target=self._watchdog, daemon=True,
+            name=f"watchdog-{self.model_id}")
+        self._watchdog_thread.start()
 
     # -- request path ------------------------------------------------------
 
@@ -924,9 +1011,24 @@ class BatchedService(InferenceService):
                 f"prompt of {len(prompt)} tokens does not fit max_seq "
                 f"{self.engine.max_seq} with generation headroom (longest "
                 f"admissible prompt: {self.engine.max_prompt_len()} tokens)")
+        if self._brownout is not None:
+            # re-evaluate with the live queue (so an idle service cools
+            # down even while the worker sleeps), then shed or clamp:
+            # HARD raises CircuitOpen for everyone, SOFT raises Degraded
+            # for best_effort and caps the generation budget for the rest
+            self._brownout.observe(self._queue_frac())
+            self._brownout.admit(_qos_field(qos, "priority")
+                                 or self.qos_cfg.default_priority)
+            mnt = gen_kw.get("max_new_tokens")
+            clamped = self._brownout.clamp(mnt if mnt is not None else 32)
+            if clamped is not None and clamped != mnt:
+                gen_kw = dict(gen_kw, max_new_tokens=clamped)
         work = _Work(inp=inp, prompt=prompt, gen_kw=gen_kw, extra=extra,
                      t0=_mono(), job=job,
-                     push=push, notify=notify)
+                     push=push, notify=notify, qos=dict(qos) if qos else None)
+        dl = _qos_field(qos, "deadline_s")
+        if dl is not None:
+            work.deadline_at = work.t0 + float(dl)
 
         def sink(toks: List[int]):
             # runs at the scheduler's per-chunk sync point (worker thread,
@@ -946,9 +1048,15 @@ class BatchedService(InferenceService):
                 ).observe((now - work.last_tok_t) / len(toks))
             work.last_tok_t = now
             if work.push is not None:
+                # tokens handed to an external consumer (stream bridge /
+                # job replay buffer): from here on a fault is terminal for
+                # this request — retrying could duplicate what the client
+                # already saw
+                work.delivered += len(toks)
                 work.push(list(toks),
                           self.wrapper.format_stream_delta(toks))
 
+        work.sink = sink
         with self._cv:
             if self._closed:
                 raise MAXError(f"service for {self.model_id!r} is closed")
@@ -975,12 +1083,17 @@ class BatchedService(InferenceService):
             self._cv.notify_all()
         return work
 
-    def _error_envelope(self, msg: str,
-                        code: str = "INVALID_INPUT") -> Dict[str, Any]:
+    def _error_envelope(self, msg: str, code: str = "INVALID_INPUT",
+                        retry_after_s: Optional[float] = None
+                        ) -> Dict[str, Any]:
         # "code" is consumed (and stripped) by the API layer: v2 maps it to
-        # a structured error + HTTP status, v1 drops it
-        return {"status": "error", "error": msg, "code": code,
-                "model_id": self.model_id}
+        # a structured error + HTTP status, v1 drops it; retry_after_s
+        # surfaces as the Retry-After header on 429/503 responses
+        env = {"status": "error", "error": msg, "code": code,
+               "model_id": self.model_id}
+        if retry_after_s is not None:
+            env["retry_after_s"] = retry_after_s
+        return env
 
     def _enqueue_or_error(self, inp: Any, job: Optional[Job] = None,
                           qos: Optional[Dict[str, Any]] = None):
@@ -991,7 +1104,9 @@ class BatchedService(InferenceService):
         except PromptTooLong as e:
             env = self._error_envelope(str(e), "PROMPT_TOO_LONG")
         except AdmissionError as e:
-            env = self._error_envelope(str(e), e.code)
+            env = self._error_envelope(
+                str(e), e.code,
+                retry_after_s=getattr(e, "retry_after_s", None))
         except MAXError as e:
             env = self._error_envelope(str(e))
         return env
@@ -1108,9 +1223,11 @@ class BatchedService(InferenceService):
                         "model_id": self.model_id}, seq)
                     return
                 except AdmissionError as e:
-                    yield StreamEvent("error", {
-                        "code": e.code, "message": str(e),
-                        "model_id": self.model_id}, seq)
+                    data = {"code": e.code, "message": str(e),
+                            "model_id": self.model_id}
+                    if getattr(e, "retry_after_s", None) is not None:
+                        data["retry_after_s"] = e.retry_after_s
+                    yield StreamEvent("error", data, seq)
                     return
                 except PromptTooLong as e:
                     yield StreamEvent("error", {
@@ -1187,6 +1304,13 @@ class BatchedService(InferenceService):
 
     def _finalize(self, work: _Work):
         req = work.request
+        if req.error_code == "ENGINE_FAULT" and self._should_retry(work):
+            # zero tokens delivered: the fault is invisible to the client,
+            # so requeue with backoff instead of surfacing a 500. Greedy
+            # decode makes the retried run token-identical to a fault-free
+            # one — never silence, never duplicates.
+            self._schedule_retry(work)
+            return
         if req.error_code == "CANCELLED":
             # user cancel / client disconnect: a first-class outcome, not
             # an error — partial output is dropped, the slot already freed
@@ -1209,9 +1333,11 @@ class BatchedService(InferenceService):
         work.envelope = env
         if req.error_code == "CANCELLED":
             self.batch_stats.cancelled += 1
-        elif req.error_code != "DEADLINE_EXCEEDED":
-            # shed work never ran — it shows up under 'shed', not
-            # 'completed' (keeps service and scheduler counts reconciled)
+        elif req.error_code not in ("DEADLINE_EXCEEDED", "ENGINE_FAULT"):
+            # shed work never ran and faulted work never finished — both
+            # are counted by their own scheduler stats ('shed' /
+            # 'engine_faults'), not 'completed' (keeps service and
+            # scheduler counts reconciled)
             self.batch_stats.completed += 1
         self._count_request(req.priority, env)
         usage = self._usage(work)
@@ -1242,6 +1368,8 @@ class BatchedService(InferenceService):
         with self._cv:
             works = list(self._inflight.values())
             self._inflight.clear()
+            works += [w for _, w in self._retry_q]   # backoff parking lot
+            self._retry_q.clear()
         for work in works:
             work.envelope = self._error_envelope(msg, code)
             if work.job is not None:
@@ -1253,13 +1381,188 @@ class BatchedService(InferenceService):
                 except Exception:
                     pass
 
+    # -- retry with backoff ------------------------------------------------
+
+    def _queue_frac(self) -> float:
+        """Queue pressure as a fraction of the per-class admission bound
+        (the brownout controller's primary signal)."""
+        return self.scheduler.queued_count() / max(1, self.max_queue)
+
+    def _should_retry(self, work: _Work) -> bool:
+        """A faulted request may requeue only while the fault is invisible
+        (zero delivered tokens), attempts remain, the original deadline
+        has not passed, and the service is still open."""
+        if self._closed or work.delivered:
+            return False
+        if work.attempts >= self.max_retries:
+            return False
+        if work.deadline_at is not None and _mono() >= work.deadline_at:
+            return False
+        return True
+
+    def _schedule_retry(self, work: _Work, *, locked: bool = False):
+        """Park ``work`` for exponential-backoff resubmission. The worker
+        drains due entries; its wait predicate wakes at the earliest due
+        time, so a parked retry never waits on new traffic to arrive."""
+        work.attempts += 1
+        due = _mono() + self.retry_backoff_s * (2 ** (work.attempts - 1))
+        self.retries += 1
+        self.metrics.inc("max_retries_total", model=self.model_id)
+        if work.request is not None and work.request.trace is not None:
+            work.request.trace.event("retry", attempt=work.attempts)
+
+        def park():
+            self._retry_q.append((due, work))
+            self._retry_q.sort(key=lambda t: t[0])
+            self._cv.notify_all()
+        if locked:
+            park()
+        else:
+            with self._cv:
+                park()
+
+    def _retry_wait_locked(self) -> Optional[float]:
+        """How long the idle worker may sleep (None = until notified)."""
+        if not self._retry_q:
+            return None
+        return max(0.001, self._retry_q[0][0] - _mono())
+
+    def _drain_due_retries_locked(self) -> List[_Work]:
+        """Resubmit every due retry (``_cv`` held). Returns works whose
+        resubmission failed terminally — the caller finalizes them outside
+        the lock (finalizing fans out to job/stream callbacks)."""
+        failed: List[_Work] = []
+        now = _mono()
+        while self._retry_q and self._retry_q[0][0] <= now:
+            work = self._retry_q.pop(0)[1]
+            qos = work.qos
+            deadline_s = None
+            if work.deadline_at is not None:
+                deadline_s = max(0.0, work.deadline_at - _mono())
+            work.last_tok_t = None
+            try:
+                work.request = self.scheduler.submit(
+                    work.prompt, extra=work.extra,
+                    priority=_qos_field(qos, "priority"),
+                    client=_qos_field(qos, "client"),
+                    deadline_s=deadline_s,
+                    token_sink=work.sink, **work.gen_kw)
+            except Exception as e:
+                # admission rejected the retry (queue full / rate limit /
+                # brownout): more backoff while attempts last, else the
+                # original fault is terminal
+                if self._should_retry(work):
+                    self._schedule_retry(work, locked=True)
+                else:
+                    if work.request is not None:
+                        work.request.error = (
+                            f"{work.request.error}; retry rejected: {e}")
+                    failed.append(work)
+                continue
+            if work.request.trace is not None:
+                work.request.trace.event("retry_resubmit",
+                                         attempt=work.attempts)
+            if work.job is not None and self.tracer is not None:
+                work.job.trace_id = work.request.id   # trace follows retry
+            self._inflight[work.request.id] = work
+        return failed
+
+    # -- supervision -------------------------------------------------------
+
+    def _observe_pressure(self):
+        """Feed scheduler-stat deltas to metrics and the brownout
+        controller — once per worker iteration, at an existing host sync
+        cadence (never on the per-token path)."""
+        ss = self.scheduler.stats
+        df = ss.engine_faults - self._faults_seen
+        if df > 0:
+            self._faults_seen = ss.engine_faults
+            self.metrics.inc("max_engine_faults_total", df,
+                             model=self.model_id)
+            if self._brownout is not None:
+                self._brownout.note("fault", df)
+        dp = ss.pool_exhausted - self._pool_exhausted_seen
+        if dp > 0:
+            self._pool_exhausted_seen = ss.pool_exhausted
+            if self._brownout is not None:
+                self._brownout.note("pool_exhausted", dp)
+        if self._brownout is not None:
+            self._brownout.observe(self._queue_frac())
+
+    def _maybe_rebuild(self):
+        if (self.rebuild_after_faults
+                and self.scheduler.fault_streak >= self.rebuild_after_faults):
+            self._rebuild_engine(
+                f"{self.scheduler.fault_streak} consecutive engine faults")
+
+    def _rebuild_engine(self, reason: str):
+        """Recovery hammer: quarantine every active slot (their requests
+        retry or fail as ENGINE_FAULT), rebuild all mutable engine state
+        (pool, caches, jitted fns), and keep going. Queued admission work
+        never touched the engine and rides through untouched."""
+        self.scheduler.quarantine_active(f"engine rebuild: {reason}",
+                                         site="rebuild")
+        self.engine.reset()
+        self.scheduler.fault_streak = 0
+        self.engine_rebuilds += 1
+        self.metrics.inc("max_engine_rebuilds_total", model=self.model_id)
+        self._reap()                      # requeue/fail the quarantined work
+
+    def _watchdog(self):
+        """Supervision loop: detects ticks that blow the stall budget and
+        worker threads that died (an escaped ``WorkerKill``, or any bug
+        the per-batch isolation could not catch) and respawns them."""
+        while True:
+            time.sleep(self.watchdog_interval_s)
+            if self._closed:
+                return
+            t0 = self._tick_started
+            if (t0 is not None and not self._stall_flagged
+                    and _mono() - t0 > self.stall_budget_s):
+                self._stall_flagged = True
+                self.tick_stalls += 1
+                self.metrics.inc("max_tick_stalls_total",
+                                 model=self.model_id)
+                if self._brownout is not None:
+                    self._brownout.note("stall")
+            if not self._thread.is_alive() and not self._closed:
+                self._respawn_worker()
+
+    def _respawn_worker(self):
+        """The worker is dead: whatever it was driving is lost mid-tick,
+        so engine state is untrustworthy — quarantine active slots (their
+        requests retry or fail; queued work persists), reset the engine,
+        and start a fresh worker."""
+        self.worker_restarts += 1
+        self.metrics.inc("max_worker_restarts_total", model=self.model_id)
+        self._tick_started = None
+        self._stall_flagged = False
+        try:
+            self.scheduler.quarantine_active("worker died mid-batch",
+                                             site="worker")
+            self.engine.reset()
+            self.scheduler.fault_streak = 0
+        except Exception as e:
+            self._worker_error = f"respawn recovery failed: {e}"
+        self._reap()
+        with self._cv:
+            if self._closed:
+                return
+            self._thread = threading.Thread(
+                target=self._worker, daemon=True,
+                name=f"batched-{self.model_id}")
+            self._thread.start()
+
     def _worker(self):
         while True:
             with self._cv:
-                while not self.scheduler.has_work() and not self._closed:
-                    self._cv.wait()
+                while (not self.scheduler.has_work() and not self._closed
+                       and not (self._retry_q
+                                and self._retry_q[0][0] <= _mono())):
+                    self._cv.wait(timeout=self._retry_wait_locked())
                 if self._closed:
                     break
+                failed = self._drain_due_retries_locked()
                 # coalescing window: give simultaneous arrivals a chance to
                 # share the first prefill/decode batch
                 deadline = _mono() + self.batch_window_s
@@ -1271,8 +1574,16 @@ class BatchedService(InferenceService):
                     self._cv.wait(timeout=remaining)
                 if self._closed:
                     break
+            for work in failed:
+                self._finalize(work)
             try:
                 self._run_batch()
+            except WorkerKill as e:
+                # injected worker death: leave without cleanup, exactly
+                # like a crashed thread — the watchdog quarantines what we
+                # held, resets the engine, and respawns
+                self._worker_error = f"worker killed: {e}"
+                return
             except Exception as e:              # fault isolation: the worker
                 self._worker_error = str(e)     # must survive bad batches
                 self._fail_all(f"batch failed: {e}", "INTERNAL")
@@ -1283,12 +1594,45 @@ class BatchedService(InferenceService):
         ticks — later arrivals join the running batch (continuous
         batching); the controller decides who gets the next free slot."""
         sched = self.scheduler
-        while sched.has_work() and not self._closed:
+        while not self._closed:
+            with self._cv:
+                failed = self._drain_due_retries_locked()
+            for work in failed:
+                self._finalize(work)
+            if not sched.has_work():
+                break
+            self._tick_started = _mono()      # the watchdog's stall clock
             sched.tick()
+            self._tick_started = None
+            self._stall_flagged = False
             self._reap()
+            self._observe_pressure()
+            self._maybe_rebuild()
         self._reap()
 
     # -- introspection / lifecycle ----------------------------------------
+
+    def health(self) -> Dict[str, Any]:
+        """Liveness/readiness/degradation for ``GET /v2/health``: live
+        while open; ready only with a live (or respawning) worker and the
+        circuit closed. Load balancers route on ``ready`` and read
+        ``Retry-After`` off the 503 the endpoint returns when it is not."""
+        alive = self._thread.is_alive()
+        state = "normal"
+        if self._brownout is not None:
+            state = self._brownout.observe(self._queue_frac())
+        return {
+            "live": not self._closed,
+            "ready": (not self._closed) and alive and state != "hard",
+            "degradation": state,
+            "worker_alive": alive,
+            "worker_restarts": self.worker_restarts,
+            "tick_stalls": self.tick_stalls,
+            "engine_faults": self.scheduler.stats.engine_faults,
+            "engine_rebuilds": self.engine_rebuilds,
+            "retry_pending": len(self._retry_q),
+            "queue_depth": self.scheduler.queued_count(),
+        }
 
     def stats(self) -> Dict[str, Any]:
         out = super().stats()
@@ -1321,6 +1665,19 @@ class BatchedService(InferenceService):
             # also nested under kv_cache; surfaced top-level so dashboards
             # need not know the KV layout to find hit rates
             out["prefix_cache"] = self.engine.prefix_stats()
+        out["robustness"] = {
+            "engine_faults": ss.engine_faults,
+            "retries": self.retries,
+            "retry_pending": len(self._retry_q),
+            "worker_restarts": self.worker_restarts,
+            "engine_rebuilds": self.engine_rebuilds,
+            "tick_stalls": self.tick_stalls,
+            "worker_alive": self._thread.is_alive(),
+            "brownout": (self._brownout.stats() if self._brownout is not None
+                         else {"state": "normal"}),
+            "fault_injection": (self.fault_plane.stats()
+                                if self.fault_plane is not None else None),
+        }
         if self._worker_error:
             out["last_worker_error"] = self._worker_error
         return out
@@ -1334,6 +1691,7 @@ class BatchedService(InferenceService):
         # worker stuck past the join timeout (each work is popped exactly
         # once under the lock, so nothing double-finalizes)
         self._thread.join(timeout=5)
+        self._watchdog_thread.join(timeout=2 * self.watchdog_interval_s + 1)
         self._fail_all(f"service for {self.model_id!r} is closed", "INTERNAL")
         super().close()
 
@@ -1348,7 +1706,10 @@ def make_service(wrapper: MAXModelWrapper, mode: str = "auto",
     the generation protocol — classifiers and other per-call models stay
     sync). ``qos`` / ``metrics`` / ``job_ttl_s`` and the tracing knobs
     (``trace`` / ``trace_buffer`` / ``slow_trace_ms``) apply to either
-    kind; the remaining kwargs are batched-service tuning."""
+    kind; the remaining kwargs — including the robustness knobs
+    (``faults`` / ``brownout`` / ``max_retries`` / ``stall_budget_s`` …)
+    — are batched-service tuning and are ignored by sync services (a
+    sync call has no worker to supervise or queue to shed)."""
     shared = {k: service_kw.pop(k)
               for k in ("qos", "metrics", "job_ttl_s",
                         "trace", "trace_buffer", "slow_trace_ms")

@@ -1008,6 +1008,55 @@ class GenerationEngine:
         self._table[slot, :] = self.kv_pool_blocks
         self._push_table_row(slot)
 
+    def reset(self):
+        """Rebuild every piece of mutable serving state from scratch —
+        the supervision layer's recovery hammer after repeated engine
+        faults or a dead worker, when device caches, the page pool, and
+        compiled programs are all suspect.
+
+        Reconstructs the KV cache (and pool/table/refcounts on paged
+        engines), clears the prefix cache, zeroes the host length/active
+        mirrors, and drops every jitted callable so programs recompile
+        clean. Weights (``params``) are immutable and survive. All active
+        slots are abandoned: callers quarantine their requests first
+        (``ContinuousBatchingScheduler.quarantine_active``); queued work
+        never touched the engine and rides through untouched."""
+        max_batch, max_seq = self.max_batch, self.max_seq
+        if self.paged:
+            self._free_pool = list(range(self.kv_pool_blocks))
+            self._slot_blocks = [[] for _ in range(max_batch)]
+            self._table = np.full((max_batch, self._pages_per_slot),
+                                  self.kv_pool_blocks, np.int32)
+            self._cache = self.model.init_cache(
+                max_batch, max_seq,
+                paged=(self.kv_pool_blocks, self.page_size))
+            self._insert = jax.jit(self._insert_paged_impl,
+                                   donate_argnums=(0,))
+        else:
+            self._free_pool = []
+            self._slot_blocks = [[] for _ in range(max_batch)]
+            self._cache = self.model.init_cache(max_batch, max_seq)
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        if self.prefix_cache is not None:
+            self.prefix_cache = PrefixCache(
+                self.page_size,
+                max_unreferenced=self.prefix_cache.max_unreferenced)
+            self._page_refs = np.zeros((self.kv_pool_blocks,), np.int32)
+            self._slot_cacheable = [False] * max_batch
+            self._fill_jit = {}
+            self._copy_page = jax.jit(self._copy_page_impl,
+                                      donate_argnums=(0,))
+        self._lengths = np.zeros((max_batch,), np.int32)
+        self._active = np.zeros((max_batch,), bool)
+        self._prompt_lens = np.zeros((max_batch,), np.int32)
+        self._prefill_lens = np.zeros((max_batch,), np.int32)
+        self._next_tok = jnp.zeros((max_batch,), jnp.int32)
+        self._prefill_jit = {}
+        self._decode = jax.jit(self._decode_impl)
+        self._chunk_jit = {}
+        self._first_tok = jax.jit(self._first_tok_impl)
+        self.last_admission = None
+
     def step(self, tokens: np.ndarray, rng, temperature=0.0):
         """One decode step for the whole batch. tokens [max_batch] int32;
         ``temperature`` is a scalar (applied to every slot) or a per-slot

@@ -57,8 +57,15 @@ class AdmissionError(Exception):
 
     Deliberately NOT a :class:`~repro.core.wrapper.MAXError` subclass —
     qos must stay importable without the core package (no cycle through
-    ``core.service``); the service/API layers translate explicitly."""
+    ``core.service``); the service/API layers translate explicitly.
+
+    ``retry_after_s`` is an optional client back-off hint; the HTTP layer
+    surfaces it as a ``Retry-After`` header on 429/503 responses."""
     code = "INTERNAL"
+
+    def __init__(self, *args, retry_after_s: Optional[float] = None):
+        super().__init__(*args)
+        self.retry_after_s = retry_after_s
 
 
 class InvalidPriority(AdmissionError):
@@ -79,6 +86,16 @@ class QueueFull(AdmissionError):
 class DeadlineExceeded(AdmissionError):
     """Client-supplied deadline passed before the work could run (504)."""
     code = "DEADLINE_EXCEEDED"
+
+
+class Degraded(AdmissionError):
+    """SOFT brownout: best_effort work is shed at admission (HTTP 503)."""
+    code = "DEGRADED"
+
+
+class CircuitOpen(AdmissionError):
+    """HARD brownout: circuit breaker is open, nothing admits (HTTP 503)."""
+    code = "CIRCUIT_OPEN"
 
 
 @dataclass(frozen=True)

@@ -61,6 +61,19 @@ Thread-safety: ``submit``/``poll``/``tick`` take an internal lock so HTTP
 threads can enqueue while a single worker thread drives ``tick`` (the model
 used by ``core.service.BatchedService``). Engine state is only ever touched
 from inside ``tick``, i.e. from whichever single thread drives the loop.
+
+Fault boundary: the two places a tick touches the engine — prefill
+admission and the fused chunk dispatch/commit — are supervised. An
+exception there quarantines only the implicated slots (an injected fault
+names its victim; a real exception implicates the whole co-batch, whose
+device state is no longer trustworthy), retiring them as structured
+``ENGINE_FAULT`` instead of unwinding the worker. Uncommitted chunk work
+is dropped safely: sinks and ``req.output`` are only fed from committed
+sync points, so a faulted chunk never half-delivers tokens. An optional
+:class:`~repro.serving.faults.FaultPlane` injects deterministic faults at
+exactly these boundaries; with ``faults=None`` each hook is a single
+``is not None`` check and behavior is byte-identical to a build without
+injection.
 """
 
 from __future__ import annotations
@@ -75,6 +88,7 @@ import jax
 import numpy as np
 
 from repro.serving.engine import GenerationEngine
+from repro.serving.faults import FaultPlane, InjectedFault
 from repro.serving.tracing import now as _now
 
 
@@ -137,6 +151,7 @@ class SchedulerStats:
     cache_overflows: int = 0          # retired with MAX_SEQ_EXCEEDED
     pool_exhausted: int = 0           # retired with KV_POOL_EXHAUSTED
     rejected: int = 0                 # retired with PROMPT_TOO_LONG
+    engine_faults: int = 0            # retired with ENGINE_FAULT
     wall_s: float = 0.0               # accrued per tick (run() adds nothing)
     occupancy_sum: int = 0            # sum of active-batch sizes per decode
     max_occupancy: int = 0
@@ -154,8 +169,18 @@ class SchedulerStats:
 class ContinuousBatchingScheduler:
     def __init__(self, engine: GenerationEngine, *, seed: int = 0,
                  retain_completed: int = 1024, admission=None,
-                 decode_chunk: Optional[int] = None, tracer=None):
+                 decode_chunk: Optional[int] = None, tracer=None,
+                 faults=None):
         self.engine = engine
+        # Optional fault-injection plane (FaultPlane | FaultSpec | dict).
+        # None keeps every hook a bare attribute check — byte-identical
+        # behavior with injection compiled out.
+        if faults is not None and not isinstance(faults, FaultPlane):
+            faults = FaultPlane(faults)
+        self.faults = faults
+        # consecutive engine faults with no committed chunk in between —
+        # the supervising service's rebuild trigger
+        self.fault_streak = 0
         # Optional[Tracer]: span recording at the existing sync points.
         # Every hook below is guarded so tracer=None costs one attribute
         # check per boundary, nothing on the per-token path.
@@ -366,6 +391,51 @@ class ContinuousBatchingScheduler:
         self.stats.completed += 1
         self.stats.pool_exhausted += 1
 
+    def _engine_fault_retire(self, req: Request, msg: str, site: str):
+        """Retire ``req`` as structured ENGINE_FAULT (HTTP 500). The fault
+        is scoped to the request, never the worker: the supervising
+        service sees the code and decides retry/terminal per its
+        delivered-token state."""
+        req.error = f"engine fault during {site}: {msg}"
+        req.error_code = "ENGINE_FAULT"
+        if req.trace is not None:
+            req.trace.event("fault", site=site, generated=len(req.output))
+        self._retire(req)
+        self.stats.engine_faults += 1
+        self.fault_streak += 1
+
+    def _quarantine_slot(self, slot: int, msg: str, site: str):
+        """Evict one active slot after a fault. The release passes no
+        tokens — a faulted slot's KV is suspect and must not be registered
+        with the prefix cache — and is defensive: a partially-inserted
+        slot still returns whatever pages it took."""
+        req = self.active.pop(slot, None)
+        if req is None:
+            return
+        try:
+            self.engine.release_slot(slot)
+        except Exception:
+            pass
+        self._pending_first = [(r, f) for (r, f) in self._pending_first
+                               if r is not req]
+        self._engine_fault_retire(req, msg, site)
+
+    def quarantine_active(self, reason: str, *, site: str = "engine"):
+        """Retire EVERY active slot as ENGINE_FAULT and drop unread first
+        tokens. Used when engine state as a whole is no longer
+        trustworthy: a real (non-injected) exception from a fused dispatch,
+        a dead worker found by the watchdog, or an engine rebuild."""
+        with self._lock:
+            for slot in sorted(self.active):
+                self._quarantine_slot(slot, reason, site)
+            for req, _ in self._pending_first:
+                # placed this tick but never resolved: the request is in
+                # active and was handled above unless insert raced — drop
+                # any stragglers without reading poisoned device values
+                if not req.done:
+                    self._engine_fault_retire(req, reason, site)
+            self._pending_first.clear()
+
     @staticmethod
     def _sweep_queue(q: "deque[Request]") -> List[Request]:
         """Remove cancelled entries from ``q`` in place and return them.
@@ -412,11 +482,28 @@ class ContinuousBatchingScheduler:
                 continue
             self._shed(req)
 
-    def _place(self, req: Request, slot: int):
+    def _place(self, req: Request, slot: int) -> bool:
         """Dispatch prefill + on-device first token; no host sync here —
-        the first token is read with the chunk at the tick's sync point."""
+        the first token is read with the chunk at the tick's sync point.
+
+        Returns False when admission faulted: the request retires as
+        ENGINE_FAULT (it never emitted a token, so the service layer can
+        requeue it safely) and the slot stays free for the next request."""
         req.admitted_at_s = _now()
-        first = self.engine.insert_request(req.prompt, slot, extra=req.extra)
+        try:
+            if self.faults is not None:
+                self.faults.check_admission(self.stats.ticks)
+            first = self.engine.insert_request(req.prompt, slot,
+                                               extra=req.extra)
+        except Exception as e:
+            # a partial insert may have taken pool pages before raising;
+            # a defensive release returns them (no-op on an untouched slot)
+            try:
+                self.engine.release_slot(slot)
+            except Exception:
+                pass
+            self._engine_fault_retire(req, str(e), "admission")
+            return False
         req.slot = slot
         req.admitted_at_tick = self.stats.ticks
         self._temps[slot] = req.temperature
@@ -430,6 +517,7 @@ class ContinuousBatchingScheduler:
             req.trace.admitted(
                 req.admitted_at_s, slot=slot, tick=self.stats.ticks,
                 admission=getattr(self.engine, "last_admission", None))
+        return True
 
     def _admit_charge(self, req: Request):
         """What the admission gate charges for ``req``: the token list —
@@ -482,7 +570,9 @@ class ContinuousBatchingScheduler:
             self._deferred.popleft()
             if req.trace is not None:
                 req.trace.event("deferred_unpark")
-            self._place(req, free.pop(0))
+            slot = free.pop(0)
+            if not self._place(req, slot):
+                free.insert(0, slot)      # admission faulted: slot unused
         if self.admission is not None:
             # controller decides order; it also sweeps deadline-expired
             # and cancelled work even when no slot is free (k == 0) so
@@ -512,7 +602,9 @@ class ContinuousBatchingScheduler:
                             reason="no_slot" if not free else "no_blocks")
                     self._deferred.append(t.item)
                     continue
-                self._place(t.item, free.pop(0))
+                slot = free.pop(0)
+                if not self._place(t.item, slot):
+                    free.insert(0, slot)
             return
         while free and self.queue and not blocked:
             req = self.queue[0]                   # peek: FIFO holds even
@@ -527,7 +619,9 @@ class ContinuousBatchingScheduler:
             if not self.engine.can_admit(self._admit_charge(req)):
                 break                             # blocks exhausted: wait
             self.queue.popleft()                  # FIFO: no starvation
-            self._place(req, free.pop(0))
+            slot = free.pop(0)
+            if not self._place(req, slot):
+                free.insert(0, slot)
 
     def _maybe_finish(self, req: Request):
         eos = self.engine.eos_id
@@ -589,6 +683,7 @@ class ContinuousBatchingScheduler:
         however many tokens the chunk produced."""
         t0 = _now()
         emitted_before = self.stats.emitted_tokens
+        faults_before = self.stats.engine_faults
         chunk_k = 0
         with self._lock:
             self._sweep_cancelled()
@@ -633,15 +728,50 @@ class ContinuousBatchingScheduler:
                         max(1, min(int(budgets[s]) for s in self.active)))
                 k = 1 << (k.bit_length() - 1)
                 chunk_k = k
-                self._rng, sub = jax.random.split(self._rng)
-                toks, emitted = self.engine.step_chunk(
-                    sub, self._temps, budgets, k)
+                try:
+                    if self.faults is not None:
+                        # may raise InjectedFault / WorkerKill, or stall.
+                        # WorkerKill is a BaseException: it unwinds past
+                        # tick (the `with` releases the lock) and kills
+                        # the driving thread — the watchdog's problem.
+                        self.faults.check_chunk(self.stats.ticks,
+                                                sorted(self.active))
+                    self._rng, sub = jax.random.split(self._rng)
+                    toks, emitted = self.engine.step_chunk(
+                        sub, self._temps, budgets, k)
+                except InjectedFault as e:
+                    # scoped fault: quarantine only the named victim; the
+                    # co-batch skips this chunk (nothing was committed)
+                    # and resumes next tick
+                    if e.slot is not None and e.slot in self.active:
+                        self._quarantine_slot(e.slot, str(e), e.site)
+                    else:
+                        self.quarantine_active(str(e), site=e.site)
+                    toks = emitted = None
+                    chunk_k = 0
+                except Exception as e:
+                    # real dispatch fault: the whole co-batch's device
+                    # state is suspect — quarantine everything, keep the
+                    # worker alive
+                    self.quarantine_active(
+                        f"chunk dispatch failed: {e}", site="chunk")
+                    toks = emitted = None
+                    chunk_k = 0
             # single sync point: first tokens of fresh admissions, then the
             # chunk block (np.asarray forces both)
             self._resolve_pending_first()
             if toks is not None:
-                toks = np.asarray(toks)
-                emitted = np.asarray(emitted)
+                try:
+                    toks = np.asarray(toks)       # the tick's host sync
+                    emitted = np.asarray(emitted)
+                except Exception as e:
+                    # the sync surfaces deferred device failures: nothing
+                    # was committed, no token reached any sink — the whole
+                    # batch retires ENGINE_FAULT and remains retry-safe
+                    self.quarantine_active(
+                        f"chunk sync failed: {e}", site="chunk")
+                    toks = None
+            if toks is not None:
                 counts = emitted.sum(axis=1).astype(np.int32)
                 self.engine.commit_chunk(counts)
                 per_step = emitted.sum(axis=0)
@@ -667,6 +797,8 @@ class ContinuousBatchingScheduler:
                     if not req.done and (self.engine.context_len(slot)
                                          >= self.engine.max_seq):
                         self._overflow(req)
+                if self.stats.engine_faults == faults_before:
+                    self.fault_streak = 0         # a clean committed chunk
             if self.tracer is not None:
                 # tick lane + occupancy counter tracks, host mirrors only
                 # (blocks_in_use / prefix stats never touch the device)

@@ -60,6 +60,10 @@ def now() -> float:
 _LIFECYCLE_EVENTS = frozenset({
     "submit", "qos_enqueue", "qos_grant", "qos_shed", "deferred_park",
     "deferred_unpark", "admit", "first_token", "stall", "cancel", "retire",
+    # fault-tolerance lifecycle: quarantine/retry/recovery marks survive
+    # compaction — they are exactly what an operator diffs after an
+    # incident
+    "fault", "retry", "retry_resubmit", "brownout",
 })
 
 

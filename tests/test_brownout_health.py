@@ -1,0 +1,220 @@
+"""Brownout degradation (NORMAL -> SOFT -> HARD), Retry-After contract
+on 429/503, the /v2/health endpoint, and the deploy/undeploy race
+against in-flight jobs."""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.core import BatchedService, EXCHANGE, MAXServer
+from repro.core.deployment import DeploymentManager
+from repro.serving.faults import BrownoutController
+from repro.serving.qos import CircuitOpen, Degraded
+
+BUILD_KW = {"max_seq": 64, "max_batch": 4}
+
+
+# -- controller unit tests (explicit clock) ----------------------------------
+
+def test_controller_escalates_and_cools():
+    c = BrownoutController({"escalate_s": 0.1, "cool_s": 1.0})
+    assert c.observe(0.0, now=0.0) == "normal"
+    # pressure must be SUSTAINED past escalate_s, not a single spike
+    assert c.observe(1.0, now=0.2) == "normal"      # clock starts here
+    assert c.observe(1.0, now=0.35) == "soft"
+    assert c.observe(2.0, now=0.4) == "soft"        # hard clock starts
+    assert c.observe(2.0, now=0.55) == "hard"
+    # de-escalation is one step per cool_s of calm — no flapping
+    assert c.observe(0.0, now=0.6) == "hard"
+    assert c.observe(0.0, now=1.7) == "soft"
+    assert c.observe(0.0, now=2.8) == "normal"
+    assert c.stats()["transitions"] == 4
+
+
+def test_controller_reacts_to_pressure_events():
+    c = BrownoutController({"fault_soft": 3, "escalate_s": 0.1,
+                            "window_s": 2.0})
+    c.note("fault", 3, now=0.0)
+    assert c.observe(0.0, now=0.05) == "normal"
+    assert c.observe(0.0, now=0.2) == "soft"        # sustained fault burst
+    # events age out of the window; calm then cools the state back down
+    assert c.observe(0.0, now=3.0) == "soft"        # calm clock starts
+    assert c.observe(0.0, now=4.1) == "normal"
+
+
+def test_soft_sheds_best_effort_and_clamps_budget():
+    c = BrownoutController({"clamp_tokens": 32, "retry_after_s": 2.5})
+    c.force("soft")
+    c.admit("interactive")                          # paid traffic flows
+    with pytest.raises(Degraded) as ei:
+        c.admit("best_effort")
+    assert ei.value.retry_after_s == 2.5
+    assert c.clamp(100) == 32 and c.clamp(8) == 8
+    assert c.clamp(None) is None
+    c.force("hard")
+    with pytest.raises(CircuitOpen) as ei:
+        c.admit("interactive")                      # HARD admits nothing
+    assert ei.value.retry_after_s == 2.5
+    assert c.clamp(100) == 100                      # clamp is SOFT-only
+    assert c.stats()["shed"] == 2
+
+
+# -- service-level degradation ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def gen_wrapper():
+    return EXCHANGE.get("qwen3-4b").build(**BUILD_KW)
+
+
+def test_service_soft_brownout_clamps_and_sheds(gen_wrapper):
+    text = "brownout clamp"
+    plain = BatchedService(gen_wrapper, batch_window_s=0.0)
+    try:
+        short = plain.predict({"text": text, "max_new_tokens": 4})
+    finally:
+        plain.close()
+
+    svc = BatchedService(gen_wrapper, batch_window_s=0.0,
+                         brownout={"clamp_tokens": 4, "retry_after_s": 2.0})
+    try:
+        svc._brownout.force("soft")
+        # interactive work still flows, but its budget is clamped: asking
+        # for 12 tokens under SOFT yields exactly the 4-token generation
+        env = svc.predict({"text": text, "max_new_tokens": 12})
+        assert env["status"] == "ok"
+        assert (env["predictions"][0]["generated_text"]
+                == short["predictions"][0]["generated_text"])
+        # best_effort is shed with a structured, retryable error
+        shed = svc.predict({"text": text, "max_new_tokens": 4},
+                           {"priority": "best_effort"})
+        assert shed["status"] == "error" and shed["code"] == "DEGRADED"
+        assert shed["retry_after_s"] == 2.0
+        assert svc.stats()["robustness"]["brownout"]["shed"] == 1
+        svc._brownout.force(None)
+    finally:
+        svc.close()
+
+
+# -- HTTP surface: /v2/health + Retry-After ----------------------------------
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw=BUILD_KW,
+                   service_kw={"batch_window_s": 0.0}) as s:
+        code, _, _ = _post(s, "/v2/model/qwen3-4b/deploy", {
+            "service": "batched",
+            "brownout": {"retry_after_s": 2.0},
+            # near-zero refill: the bucket holds exactly one burst token,
+            # so a client's second request reliably 429s even after a slow
+            # first (jit-warm) request
+            "qos": {"rate": 0.001, "burst": 1.0},
+        })
+        assert code == 200
+        yield s
+
+
+def _req(server, method, path, payload=None, headers=None):
+    data = json.dumps(payload).encode() if payload is not None else None
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(headers or {})
+    req = urllib.request.Request(server.url + path, data, hdrs,
+                                 method=method)
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read()), dict(e.headers)
+
+
+def _get(server, path):
+    return _req(server, "GET", path)
+
+
+def _post(server, path, payload, headers=None):
+    return _req(server, "POST", path, payload, headers)
+
+
+def test_health_reports_ready(server):
+    code, body, _ = _get(server, "/v2/health")
+    assert code == 200
+    assert body["status"] == "ok" and body["live"] and body["ready"]
+    dep = body["deployments"]["qwen3-4b"]
+    assert dep["degradation"] == "normal" and dep["worker_alive"]
+
+
+def test_circuit_open_is_503_with_retry_after(server):
+    ctl = server.manager.get("qwen3-4b").service._brownout
+    ctl.force("hard")
+    try:
+        code, body, hdrs = _post(
+            server, "/v2/model/qwen3-4b/predict",
+            {"input": {"text": "hi", "max_new_tokens": 2},
+             "client": "hard-c"})
+        assert code == 503
+        assert body["error"]["code"] == "CIRCUIT_OPEN"
+        assert body["error"]["retry_after_s"] == 2.0
+        assert hdrs["Retry-After"] == "2"
+        # health flips to not-ready while the circuit is open
+        code, body, hdrs = _get(server, "/v2/health")
+        assert code == 503 and not body["ready"] and body["degraded"]
+        assert "Retry-After" in hdrs
+    finally:
+        ctl.force("normal")   # snap back (skips the cool-down ladder)
+        ctl.force(None)
+    code, body, _ = _get(server, "/v2/health")
+    assert code == 200 and body["ready"]
+
+
+def test_rate_limit_429_carries_retry_after(server):
+    inp = {"input": {"text": "rl", "max_new_tokens": 2}, "client": "rl-c"}
+    code, _, _ = _post(server, "/v2/model/qwen3-4b/predict", inp)
+    assert code == 200                               # burst token spent
+    code, body, hdrs = _post(server, "/v2/model/qwen3-4b/predict", inp)
+    assert code == 429
+    assert body["error"]["code"] == "RATE_LIMITED"
+    assert "Retry-After" in hdrs
+    assert int(hdrs["Retry-After"]) >= 1
+
+
+# -- deploy/undeploy racing in-flight jobs (satellite) -----------------------
+
+def test_undeploy_races_inflight_jobs_without_leaks():
+    mgr = DeploymentManager(service_mode="batched",
+                            service_kw={"batch_window_s": 0.0})
+    dep = mgr.deploy("qwen3-4b", paged=True, page_size=16, **BUILD_KW)
+    svc = dep.service
+    engine = dep.wrapper.engine
+    jobs = [svc.submit_job({"text": f"race {i}", "max_new_tokens": 16})
+            for i in range(6)]
+    undone = threading.Thread(target=mgr.undeploy, args=("qwen3-4b",))
+    time.sleep(0.05)          # let some jobs reach the engine
+    undone.start()
+    undone.join(timeout=30)
+    assert not undone.is_alive()
+
+    # every job lands in a terminal state — finished before the teardown,
+    # or failed with a structured close error; none hang silently
+    deadline = time.monotonic() + 20
+    while time.monotonic() < deadline:
+        states = [svc.get_job(j.id).state for j in jobs]
+        if all(s in ("done", "error", "cancelled") for s in states):
+            break
+        time.sleep(0.02)
+    else:
+        raise AssertionError(f"jobs stuck after undeploy: {states}")
+    for j in jobs:
+        got = svc.get_job(j.id)
+        if got.state == "error":
+            assert got.error                         # never silence
+    engine.check_pool_invariants()                   # no leaked KV pages
+
+    # the asset redeploys cleanly after the race
+    dep2 = mgr.deploy("qwen3-4b", **BUILD_KW)
+    env = dep2.predict({"text": "after race", "max_new_tokens": 4})
+    assert env["status"] == "ok"
+    mgr.undeploy("qwen3-4b")

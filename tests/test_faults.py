@@ -1,0 +1,330 @@
+"""Fault-tolerant serving: deterministic injection, quarantine scope,
+safe retry, worker supervision (watchdog respawn), engine rebuild, and
+the disabled-plane byte-identity guarantee."""
+
+import time
+
+import jax
+import pytest
+
+import repro.core.assets  # noqa: F401
+from repro.configs import CONFIGS
+from repro.core import BatchedService, EXCHANGE
+from repro.models import build_model
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine
+from repro.serving.faults import (
+    FaultPlane, FaultSpec, InjectedFault, WorkerKill,
+)
+
+BUILD_KW = {"max_seq": 64, "max_batch": 4}
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = CONFIGS["max-sentiment"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return GenerationEngine(model, params, max_batch=3, max_seq=64,
+                            paged=True, page_size=16)
+
+
+@pytest.fixture(scope="module")
+def gen_wrapper():
+    return EXCHANGE.get("qwen3-4b").build(**BUILD_KW)
+
+
+def _wait_jobs(svc, jobs, timeout_s=30.0):
+    deadline = time.monotonic() + timeout_s
+    terminal = ("done", "error", "cancelled")
+    while time.monotonic() < deadline:
+        if all(svc.get_job(j.id).state in terminal for j in jobs):
+            return [svc.get_job(j.id) for j in jobs]
+        time.sleep(0.02)
+    raise AssertionError(
+        f"jobs not terminal: {[svc.get_job(j.id).state for j in jobs]}")
+
+
+# -- spec & plane ------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec.from_json({"chunk_rate": 2.0})
+    with pytest.raises(ValueError):
+        FaultSpec.from_json({"wat": 1})
+    with pytest.raises(ValueError):
+        FaultSpec.from_json({"script": [{"tick": 0, "site": "nope"}]})
+    with pytest.raises(ValueError):
+        FaultSpec.from_json({"seed": "seven"})
+    assert not FaultSpec.from_json({}).armed
+    assert not FaultSpec.from_json({"chunk_rate": 0.0}).armed
+    assert FaultSpec.from_json({"chunk_rate": 0.5}).armed
+    assert FaultSpec.from_json(
+        {"script": [{"tick": 3, "site": "kill"}]}).armed
+
+
+def test_fault_plane_is_deterministic():
+    spec = FaultSpec.from_json({"chunk_rate": 0.3, "seed": 11})
+
+    def fire_schedule():
+        plane = FaultPlane(spec)
+        fired = []
+        for tick in range(60):
+            try:
+                plane.check_chunk(tick, [0, 1, 2])
+            except InjectedFault as e:
+                fired.append((tick, e.slot))
+        return fired
+
+    a, b = fire_schedule(), fire_schedule()
+    assert a and a == b     # same seed -> same faults at the same ticks
+
+
+def test_scripted_kill_and_max_faults():
+    plane = FaultPlane(FaultSpec.from_json(
+        {"script": [{"tick": 2, "site": "kill"}]}))
+    plane.check_chunk(0, [0])
+    plane.check_chunk(1, [0])
+    with pytest.raises(WorkerKill):
+        plane.check_chunk(2, [0])
+    assert plane.stats()["fired"]["kill"] == 1
+    # rate faults respect the total budget
+    capped = FaultPlane(FaultSpec.from_json(
+        {"chunk_rate": 1.0, "max_faults": 2}))
+    fired = 0
+    for tick in range(10):
+        try:
+            capped.check_chunk(tick, [0])
+        except InjectedFault:
+            fired += 1
+    assert fired == 2
+
+
+# -- scheduler-level quarantine ---------------------------------------------
+
+def test_admission_fault_retires_only_the_victim(small_engine):
+    prompts = [[1 + i] for i in range(3)]
+    base = ContinuousBatchingScheduler(small_engine)
+    base_reqs = [base.submit(p, max_new_tokens=4) for p in prompts]
+    base.run()
+
+    sched = ContinuousBatchingScheduler(
+        small_engine,
+        faults={"script": [{"tick": 0, "site": "admission"}]})
+    reqs = [sched.submit(p, max_new_tokens=4) for p in prompts]
+    stats = sched.run()
+    assert reqs[0].error_code == "ENGINE_FAULT"   # first admission at tick 0
+    assert reqs[0].output == []                   # engine never touched it
+    for got, want in zip(reqs[1:], base_reqs[1:]):
+        assert got.error_code is None and got.output == want.output
+    assert stats.engine_faults == 1
+    small_engine.check_pool_invariants()
+
+
+def test_chunk_fault_quarantines_single_slot(small_engine):
+    prompts = [[11 + i] for i in range(3)]
+    base = ContinuousBatchingScheduler(small_engine)
+    base_reqs = [base.submit(p, max_new_tokens=8) for p in prompts]
+    base.run()
+
+    sched = ContinuousBatchingScheduler(
+        small_engine,
+        faults={"script": [{"tick": 1, "site": "chunk", "slot": 1}]})
+    reqs = [sched.submit(p, max_new_tokens=8) for p in prompts]
+    stats = sched.run()
+    assert reqs[1].error_code == "ENGINE_FAULT"
+    assert len(reqs[1].output) < 8                # cut off mid-generation
+    # the co-batch survives the victim's fault with identical tokens
+    for got, want in ((reqs[0], base_reqs[0]), (reqs[2], base_reqs[2])):
+        assert got.error_code is None and got.output == want.output
+    assert stats.engine_faults == 1
+    small_engine.check_pool_invariants()
+
+
+def test_unarmed_plane_is_byte_identical(small_engine):
+    prompts = [[21 + i] for i in range(3)]
+
+    def run(faults):
+        sched = ContinuousBatchingScheduler(small_engine, faults=faults)
+        reqs = [sched.submit(p, max_new_tokens=6) for p in prompts]
+        sched.run()
+        return [r.output for r in reqs]
+
+    assert run(None) == run({"chunk_rate": 0.0}) == run(FaultSpec())
+
+
+def test_engine_reset_restores_pool_and_determinism():
+    cfg = CONFIGS["max-sentiment"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GenerationEngine(model, params, max_batch=2, max_seq=32,
+                           paged=True, page_size=8)
+
+    def run():
+        sched = ContinuousBatchingScheduler(eng)
+        reqs = [sched.submit([1, 2, 3], max_new_tokens=5),
+                sched.submit([4, 5], max_new_tokens=5)]
+        sched.run()
+        return [r.output for r in reqs]
+
+    before = run()
+    eng.insert_request([7, 8, 9], 0)      # leave a seated slot behind
+    eng.reset()                           # rebuild-from-clean
+    eng.check_pool_invariants()
+    assert eng.blocks_in_use() == 0
+    assert run() == before                # same params, same greedy tokens
+    eng.check_pool_invariants()
+
+
+# -- service-level safe retry ------------------------------------------------
+
+def test_service_retries_fault_to_identical_tokens(gen_wrapper):
+    inputs = [{"text": f"retry {i}", "max_new_tokens": 6} for i in range(3)]
+    free = BatchedService(gen_wrapper, batch_window_s=0.0)
+    try:
+        want = [free.predict(inp) for inp in inputs]
+    finally:
+        free.close()
+    assert all(e["status"] == "ok" for e in want)
+
+    svc = BatchedService(
+        gen_wrapper, batch_window_s=0.0,
+        faults={"script": [{"tick": 1, "site": "chunk"},
+                           {"tick": 3, "site": "chunk"}]},
+        max_retries=4, retry_backoff_s=0.01)
+    try:
+        got = [svc.predict(inp) for inp in inputs]
+        rob = svc.stats()["robustness"]
+    finally:
+        svc.close()
+    assert all(e["status"] == "ok" for e in got)
+    for g, w in zip(got, want):           # greedy replay is exact
+        assert (g["predictions"][0]["generated_text"]
+                == w["predictions"][0]["generated_text"])
+    assert rob["engine_faults"] == 2 and rob["retries"] == 2
+    assert rob["retry_pending"] == 0
+
+
+def test_retry_exhaustion_surfaces_engine_fault(gen_wrapper):
+    svc = BatchedService(gen_wrapper, batch_window_s=0.0,
+                         faults={"chunk_rate": 1.0, "seed": 0},
+                         max_retries=1, retry_backoff_s=0.01)
+    try:
+        env = svc.predict({"text": "doomed", "max_new_tokens": 4})
+        rob = svc.stats()["robustness"]
+    finally:
+        svc.close()
+    assert env["status"] == "error" and env["code"] == "ENGINE_FAULT"
+    assert rob["retries"] == 1            # initial attempt + one retry
+    assert rob["engine_faults"] >= 2
+
+
+def test_stream_fault_after_tokens_gets_terminal_error_event(gen_wrapper):
+    """Regression (satellite): a server-side fault after tokens have
+    streamed must close the SSE stream with a terminal structured
+    ``error`` event — never silence, and never a retry that would
+    duplicate delivered tokens."""
+    inp = {"text": "stream fault", "max_new_tokens": 6}
+    clean = BatchedService(gen_wrapper, batch_window_s=0.0)
+    try:
+        clean_toks = [t for ev in clean.predict_stream(inp)
+                      if ev.event == "token"
+                      for t in ev.data["token_ids"]]
+    finally:
+        clean.close()
+    assert len(clean_toks) == 6
+
+    svc = BatchedService(gen_wrapper, batch_window_s=0.0,
+                         faults={"script": [{"tick": 1, "site": "chunk"}]},
+                         max_retries=3, retry_backoff_s=0.01)
+    try:
+        events = list(svc.predict_stream(inp))
+        rob = svc.stats()["robustness"]
+    finally:
+        svc.close()
+    toks = [t for ev in events if ev.event == "token"
+            for t in ev.data["token_ids"]]
+    assert 0 < len(toks) < 6              # cut off mid-stream
+    assert toks == clean_toks[:len(toks)]   # delivered prefix is exact
+    assert events[-1].event == "error"      # terminal structured frame
+    assert events[-1].data["code"] == "ENGINE_FAULT"
+    assert not any(e.event == "done" for e in events)
+    assert rob["retries"] == 0            # delivered tokens forbid retry
+
+
+def test_worker_kill_watchdog_respawns_and_queued_jobs_complete(gen_wrapper):
+    svc = BatchedService(gen_wrapper, batch_window_s=0.0,
+                         faults={"script": [{"tick": 2, "site": "kill"}]},
+                         max_retries=4, retry_backoff_s=0.01,
+                         watchdog_interval_s=0.05)
+    try:
+        # long enough to still be decoding when tick 2 kills the worker
+        active = [svc.submit_job({"text": f"a {i}", "max_new_tokens": 24})
+                  for i in range(2)]
+        deadline = time.monotonic() + 20
+        while (svc.stats()["robustness"]["worker_restarts"] < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        assert svc.stats()["robustness"]["worker_restarts"] >= 1
+
+        # submitted after the kill: pure queued work — the respawned
+        # worker must pick it up and finish it
+        queued = [svc.submit_job({"text": f"q {i}", "max_new_tokens": 4})
+                  for i in range(3)]
+        done_q = _wait_jobs(svc, queued)
+        assert all(j.state == "done" for j in done_q)
+
+        # the in-flight jobs reach terminal states too — a structured
+        # error at worst (their tokens had already streamed into the
+        # replay buffer, which forbids a replaying retry), never silence
+        done_a = _wait_jobs(svc, active)
+        for j in done_a:
+            assert j.state in ("done", "error")
+            if j.state == "error":
+                assert j.error
+        health = svc.health()
+        assert health["live"] and health["ready"]
+        assert health["worker_alive"]
+    finally:
+        svc.close()
+
+
+def test_repeated_faults_trigger_engine_rebuild(gen_wrapper):
+    svc = BatchedService(
+        gen_wrapper, batch_window_s=0.0,
+        faults={"script": [{"tick": 1, "site": "chunk"},
+                           {"tick": 2, "site": "chunk"},
+                           {"tick": 3, "site": "chunk"}]},
+        max_retries=5, retry_backoff_s=0.01, rebuild_after_faults=2)
+    try:
+        env = svc.predict({"text": "rebuild me", "max_new_tokens": 6})
+        assert env["status"] == "ok", env
+        rob = svc.stats()["robustness"]
+        assert rob["engine_rebuilds"] >= 1
+        assert rob["engine_faults"] >= 2
+        if svc.scheduler.engine.paged:
+            svc.scheduler.engine.check_pool_invariants()
+        # the rebuilt engine serves fresh work
+        again = svc.predict({"text": "after rebuild", "max_new_tokens": 4})
+        assert again["status"] == "ok", again
+    finally:
+        svc.close()
+
+
+def test_service_with_unarmed_faults_matches_plain(gen_wrapper):
+    inp = {"text": "identical", "max_new_tokens": 6}
+    plain = BatchedService(gen_wrapper, batch_window_s=0.0)
+    try:
+        want = plain.predict(inp)
+    finally:
+        plain.close()
+    svc = BatchedService(gen_wrapper, batch_window_s=0.0,
+                         faults={"chunk_rate": 0.0})
+    try:
+        assert svc.fault_plane is None            # unarmed -> no plane
+        assert svc.scheduler.faults is None       # bare is-None hook
+        got = svc.predict(inp)
+        assert svc.stats()["robustness"]["fault_injection"] is None
+    finally:
+        svc.close()
+    assert (got["predictions"][0]["generated_text"]
+            == want["predictions"][0]["generated_text"])
