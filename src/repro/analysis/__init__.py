@@ -1,0 +1,24 @@
+"""maxlint: invariant-enforcing static analysis for the serving stack.
+
+The serving stack carries invariants that unit tests cannot police —
+ONE host sync per scheduler chunk, ONE monotonic clock, WorkerKill
+escaping ``except Exception``, no blocking work under hot-path locks,
+every structured error code mapped to an HTTP status.  maxlint checks
+them mechanically over the AST, cross-module, on every CI run.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis --strict src tests
+
+Suppress a finding (reason is mandatory)::
+
+    toks = np.asarray(toks)  # maxlint: allow[host-sync] reason=the one sanctioned chunk-boundary sync
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    AnalysisContext,
+    Finding,
+    Report,
+    all_rules,
+    run_paths,
+)

@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis [--strict] [--json FILE] [paths...]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage error.  Without ``--strict``,
+pragma-hygiene findings (unknown rule names, missing ``reason=``) are
+reported but do not fail the run; with it they do — CI runs strict so
+the tree can never go green with an undocumented suppression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.core import all_rules, run_paths
+from repro.analysis.report import render_json, render_text
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="maxlint: invariant-enforcing static analysis for the serving stack",
+    )
+    parser.add_argument("paths", nargs="*", default=None, help="files/dirs (default: src)")
+    parser.add_argument(
+        "--strict",
+        action="store_true",
+        help="pragma-hygiene findings (unknown rule, missing reason=) also fail",
+    )
+    parser.add_argument("--json", metavar="FILE", help="write a JSON report to FILE")
+    parser.add_argument(
+        "--rules", help="comma-separated subset of rules to run (default: all)"
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="list registered rules and exit"
+    )
+    parser.add_argument(
+        "-v", "--verbose", action="store_true", help="also print suppressed findings"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        import repro.analysis.rules  # noqa: F401
+
+        for name, rule in sorted(all_rules().items()):
+            print(f"{name}: {rule.doc}")
+        return 0
+
+    paths = args.paths or ["src"]
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    report = run_paths(paths, rules=rules, root=Path.cwd())
+
+    print(render_text(report, verbose=args.verbose))
+    if args.json:
+        Path(args.json).write_text(render_json(report), encoding="utf-8")
+
+    hard = [f for f in report.findings if f.rule not in {"pragma"}]
+    soft = [f for f in report.findings if f.rule in {"pragma"}]
+    if hard:
+        return 1
+    if soft and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

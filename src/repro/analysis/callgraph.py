@@ -1,0 +1,203 @@
+"""Cross-module symbol table and approximate call graph.
+
+Resolution is name-based: precise where Python's dynamism allows
+(module-level names via the import-alias map, ``self.method`` within the
+enclosing class) and conservative elsewhere.  Attribute calls through
+arbitrary objects (``self.engine.step_chunk``) resolve by method name:
+
+* **strict** mode resolves only when the name is defined exactly once
+  across the indexed tree (or on the caller's own class).  Used where a
+  false edge would be worse than a missed one (lock-graph fixpoints).
+* **loose** mode resolves to *every* definition of the name, excluding a
+  blocklist of common container/stdlib-ish names.  Used for hot-path
+  reachability where over-approximation is the safe direction.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import ModuleInfo
+
+# Method names too generic to resolve cross-object by name alone.
+LOOSE_BLOCKLIST = frozenset(
+    {
+        "get",
+        "put",
+        "pop",
+        "popleft",
+        "append",
+        "appendleft",
+        "add",
+        "remove",
+        "clear",
+        "copy",
+        "update",
+        "items",
+        "keys",
+        "values",
+        "sort",
+        "index",
+        "count",
+        "join",
+        "split",
+        "strip",
+        "read",
+        "write",
+        "flush",
+        "close",
+        "open",
+        "send",
+        "start",
+        "run",
+        "wait",
+        "notify",
+        "notify_all",
+        "acquire",
+        "release",
+        "set",
+        "is_set",
+        "next",
+        "format",
+        "encode",
+        "decode",
+        "sum",
+        "mean",
+        "max",
+        "min",
+        "all",
+        "any",
+        "astype",
+        "tolist",
+        "item",
+        "reshape",
+        "get_event_loop",
+    }
+)
+
+
+@dataclass
+class FuncInfo:
+    modname: str
+    qualname: str  # "repro.serving.engine.Engine.step_chunk"
+    name: str
+    cls: Optional[str]  # enclosing class name, if a method / nested in one
+    node: ast.AST
+    module: ModuleInfo
+
+
+class SymbolIndex:
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules = list(modules)
+        self.functions: Dict[str, FuncInfo] = {}
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        # (modname, classname) -> {method name -> FuncInfo}
+        self.class_methods: Dict[Tuple[str, str], Dict[str, FuncInfo]] = {}
+        for m in self.modules:
+            self._index_module(m)
+
+    # -- construction ------------------------------------------------------
+
+    def _index_module(self, m: ModuleInfo) -> None:
+        def visit(node: ast.AST, qual: List[str], cls: Optional[str]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = ".".join([m.modname] + qual + [child.name])
+                    fi = FuncInfo(
+                        modname=m.modname,
+                        qualname=q,
+                        name=child.name,
+                        cls=cls,
+                        node=child,
+                        module=m,
+                    )
+                    self.functions[q] = fi
+                    self.by_name.setdefault(child.name, []).append(fi)
+                    if cls is not None:
+                        self.class_methods.setdefault((m.modname, cls), {})[
+                            child.name
+                        ] = fi
+                    visit(child, qual + [child.name], cls)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, qual + [child.name], child.name)
+                else:
+                    visit(child, qual, cls)
+
+        visit(m.tree, [], None)
+
+    # -- queries -----------------------------------------------------------
+
+    def own_calls(self, func: FuncInfo) -> List[ast.Call]:
+        """Call nodes lexically inside `func`, excluding nested defs (those
+        are indexed as their own functions)."""
+        out: List[ast.Call] = []
+
+        def walk(node: ast.AST) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+                ):
+                    continue
+                if isinstance(child, ast.Call):
+                    out.append(child)
+                walk(child)
+
+        walk(func.node)
+        return out
+
+    def resolve(self, call: ast.Call, caller: FuncInfo, loose: bool) -> List[FuncInfo]:
+        fn = call.func
+        if isinstance(fn, ast.Name):
+            name = fn.id
+            target = caller.module.aliases.get(name)
+            if target is not None:
+                fi = self.functions.get(target)
+                return [fi] if fi else []
+            # same-class method referenced bare (rare), then module-level
+            if caller.cls is not None:
+                meth = self.class_methods.get((caller.modname, caller.cls), {}).get(
+                    name
+                )
+                if meth is not None and meth.qualname != caller.qualname:
+                    return [meth]
+            fi = self.functions.get(f"{caller.modname}.{name}")
+            if fi is not None:
+                return [fi]
+            cands = self.by_name.get(name, [])
+            if len(cands) == 1:
+                return cands
+            if loose and name not in LOOSE_BLOCKLIST:
+                return list(cands)
+            return []
+        if isinstance(fn, ast.Attribute):
+            name = fn.attr
+            # self.method() -> own class first
+            if isinstance(fn.value, ast.Name) and fn.value.id == "self":
+                if caller.cls is not None:
+                    meth = self.class_methods.get(
+                        (caller.modname, caller.cls), {}
+                    ).get(name)
+                    if meth is not None:
+                        return [meth]
+            cands = self.by_name.get(name, [])
+            if len(cands) == 1:
+                return cands
+            if loose and name not in LOOSE_BLOCKLIST:
+                return list(cands)
+            return []
+        return []
+
+    def reachable(self, roots: Iterable[FuncInfo], loose: bool = True) -> Set[str]:
+        """Fixpoint closure of the call graph from `roots` (qualnames)."""
+        frontier = [r for r in roots]
+        seen: Set[str] = {r.qualname for r in frontier}
+        while frontier:
+            cur = frontier.pop()
+            for call in self.own_calls(cur):
+                for callee in self.resolve(call, cur, loose=loose):
+                    if callee.qualname not in seen:
+                        seen.add(callee.qualname)
+                        frontier.append(callee)
+        return seen

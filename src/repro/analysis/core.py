@@ -1,0 +1,342 @@
+"""maxlint core: findings, rules, pragmas, module loading.
+
+The analysis framework is deliberately stdlib-only (``ast`` + ``re``) so it
+can run in CI and pre-commit without importing jax or any of the serving
+stack.  A *rule* is a whole-program pass: it receives an
+:class:`AnalysisContext` holding every parsed module plus a cross-module
+symbol index, and yields :class:`Finding` objects.  Suppression is purely
+textual via pragma comments::
+
+    # maxlint: allow[host-sync] reason=why this is sanctioned
+
+A pragma suppresses findings of the named rule(s) on its own line or the
+line immediately below (so it can sit above a long statement).  Every
+pragma must carry a non-empty ``reason=``; a reasonless pragma still
+suppresses but emits its own ``pragma`` finding so the tree never goes
+green with undocumented exemptions.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def key(self) -> Tuple[str, str, int, str]:
+        return (self.rule, self.path, self.line, self.message)
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "suppressed": self.suppressed,
+            "suppress_reason": self.suppress_reason,
+        }
+
+
+# --------------------------------------------------------------------------
+# pragmas
+# --------------------------------------------------------------------------
+
+_PRAGMA_RE = re.compile(
+    r"#\s*maxlint:\s*allow\[([A-Za-z0-9_,\- ]+)\]\s*(?:reason=(.*))?$"
+)
+
+
+@dataclass
+class Pragma:
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+
+
+def parse_pragmas(source: str) -> List[Pragma]:
+    out: List[Pragma] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if m is None:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = (m.group(2) or "").strip()
+        out.append(Pragma(line=i, rules=rules, reason=reason))
+    return out
+
+
+# --------------------------------------------------------------------------
+# modules
+# --------------------------------------------------------------------------
+
+
+def _modname_for(path: Path) -> str:
+    """Dotted module name; anchored at the last ``repro`` path component so
+    fixture trees like ``tmp/repro/serving/x.py`` scope the same way the
+    real tree does."""
+    parts = list(path.parts)
+    name = path.stem
+    anchor = None
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            anchor = i
+            break
+    if anchor is None:
+        return name
+    pkg = parts[anchor:-1]
+    return ".".join(list(pkg) + [name])
+
+
+@dataclass
+class ModuleInfo:
+    path: Path
+    rel: str
+    modname: str
+    source: str
+    tree: ast.Module
+    pragmas: List[Pragma] = field(default_factory=list)
+    # import alias -> fully qualified target, e.g. {"jnp": "jax.numpy",
+    # "np": "numpy", "_now": "repro.serving.tracing.now"}
+    aliases: Dict[str, str] = field(default_factory=dict)
+
+    def allow(self, rule: str, line: int) -> Optional[Pragma]:
+        """Return the pragma suppressing `rule` at `line`, if any."""
+        for p in self.pragmas:
+            if rule in p.rules and p.line in (line, line - 1):
+                return p
+        return None
+
+
+def _collect_aliases(tree: ast.Module) -> Dict[str, str]:
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def load_module(path: Path, root: Optional[Path] = None) -> Optional[ModuleInfo]:
+    try:
+        source = path.read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=str(path))
+    except (OSError, SyntaxError, ValueError):
+        return None
+    rel = str(path)
+    if root is not None:
+        try:
+            rel = str(path.relative_to(root))
+        except ValueError:
+            pass
+    return ModuleInfo(
+        path=path,
+        rel=rel,
+        modname=_modname_for(path),
+        source=source,
+        tree=tree,
+        pragmas=parse_pragmas(source),
+        aliases=_collect_aliases(tree),
+    )
+
+
+def collect_files(paths: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    seen = set()
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            cands = sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            cands = [p]
+        else:
+            cands = []
+        for c in cands:
+            if "__pycache__" in c.parts:
+                continue
+            key = str(c.resolve())
+            if key not in seen:
+                seen.add(key)
+                files.append(c)
+    return files
+
+
+# --------------------------------------------------------------------------
+# rule registry
+# --------------------------------------------------------------------------
+
+
+class Rule:
+    """Base class: subclasses set `name`/`doc` and implement `check`."""
+
+    name: str = ""
+    doc: str = ""
+
+    def check(self, ctx: "AnalysisContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_cls: type) -> type:
+    rule = rule_cls()
+    if not rule.name:
+        raise ValueError(f"rule {rule_cls.__name__} has no name")
+    _REGISTRY[rule.name] = rule
+    return rule_cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# analysis context + driver
+# --------------------------------------------------------------------------
+
+
+class AnalysisContext:
+    def __init__(self, modules: List[ModuleInfo]):
+        from repro.analysis.callgraph import SymbolIndex
+
+        self.modules = modules
+        self.index = SymbolIndex(modules)
+
+    def modules_under(self, *prefixes: str) -> List[ModuleInfo]:
+        return [
+            m
+            for m in self.modules
+            if any(m.modname == p or m.modname.startswith(p + ".") for p in prefixes)
+        ]
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    files_scanned: int
+    rules_run: List[str]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+
+def run_paths(
+    paths: Sequence[str],
+    rules: Optional[Sequence[str]] = None,
+    root: Optional[Path] = None,
+) -> Report:
+    # import for side effect: registers the builtin rules
+    import repro.analysis.rules  # noqa: F401
+
+    files = collect_files(paths)
+    modules: List[ModuleInfo] = []
+    parse_failures: List[Finding] = []
+    for f in files:
+        mi = load_module(f, root=root)
+        if mi is None:
+            parse_failures.append(
+                Finding(
+                    rule="parse",
+                    path=str(f),
+                    line=1,
+                    col=0,
+                    message="file could not be read or parsed",
+                )
+            )
+        else:
+            modules.append(mi)
+
+    ctx = AnalysisContext(modules)
+    registry = all_rules()
+    selected = list(registry) if rules is None else [r for r in rules if r in registry]
+
+    raw: List[Finding] = list(parse_failures)
+    for rn in selected:
+        raw.extend(registry[rn].check(ctx))
+
+    # pragma hygiene: unknown rule names, missing reasons.  Only modules
+    # inside the repro package — pragmas mean nothing where no rule runs,
+    # and test files legitimately embed malformed pragmas in fixtures.
+    known = set(registry)
+    for m in modules:
+        if not (m.modname == "repro" or m.modname.startswith("repro.")):
+            continue
+        for p in m.pragmas:
+            for r in p.rules:
+                if r not in known:
+                    raw.append(
+                        Finding(
+                            rule="pragma",
+                            path=m.rel,
+                            line=p.line,
+                            col=0,
+                            message=f"pragma allows unknown rule '{r}'",
+                        )
+                    )
+            if not p.reason:
+                raw.append(
+                    Finding(
+                        rule="pragma",
+                        path=m.rel,
+                        line=p.line,
+                        col=0,
+                        message="pragma has no reason= (every suppression must be justified)",
+                    )
+                )
+
+    # apply suppression
+    by_rel = {m.rel: m for m in modules}
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    seen = set()
+    for f in raw:
+        if f.key() in seen:
+            continue
+        seen.add(f.key())
+        m = by_rel.get(f.path)
+        pragma = m.allow(f.rule, f.line) if (m and f.rule != "pragma") else None
+        if pragma is not None:
+            f.suppressed = True
+            f.suppress_reason = pragma.reason
+            suppressed.append(f)
+        else:
+            active.append(f)
+
+    active.sort(key=lambda f: (f.path, f.line, f.rule))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(
+        findings=active,
+        suppressed=suppressed,
+        files_scanned=len(files),
+        rules_run=selected,
+    )
+
+
+def iter_functions(tree: ast.AST) -> Iterable[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

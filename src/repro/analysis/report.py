@@ -1,0 +1,44 @@
+"""Text and JSON reporters for maxlint runs."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from repro.analysis.core import Report
+
+
+def render_text(report: Report, verbose: bool = False) -> str:
+    lines = []
+    for f in report.findings:
+        lines.append(f"{f.path}:{f.line}:{f.col}: [{f.rule}] {f.message}")
+    if verbose:
+        for f in report.suppressed:
+            reason = f.suppress_reason or "(no reason)"
+            lines.append(
+                f"{f.path}:{f.line}:{f.col}: [{f.rule}] suppressed: {reason}"
+            )
+    n = len(report.findings)
+    s = len(report.suppressed)
+    lines.append(
+        f"maxlint: {report.files_scanned} files, "
+        f"{len(report.rules_run)} rules, {n} finding{'s' if n != 1 else ''}"
+        f" ({s} suppressed)"
+    )
+    return "\n".join(lines)
+
+
+def render_json(report: Report) -> str:
+    doc: Dict[str, object] = {
+        "version": 1,
+        "files_scanned": report.files_scanned,
+        "rules": report.rules_run,
+        "findings": [f.to_json() for f in report.findings],
+        "suppressed": [f.to_json() for f in report.suppressed],
+        "summary": {
+            "findings": len(report.findings),
+            "suppressed": len(report.suppressed),
+            "clean": report.clean,
+        },
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

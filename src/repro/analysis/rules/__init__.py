@@ -1,0 +1,7 @@
+"""Built-in maxlint rules; importing this package registers them."""
+
+from repro.analysis.rules import clock  # noqa: F401
+from repro.analysis.rules import host_sync  # noqa: F401
+from repro.analysis.rules import locks  # noqa: F401
+from repro.analysis.rules import exceptions  # noqa: F401
+from repro.analysis.rules import errors  # noqa: F401

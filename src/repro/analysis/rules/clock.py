@@ -1,0 +1,62 @@
+"""clock-discipline: one monotonic serving clock.
+
+Every duration, deadline, and TTL in the serving stack must come from
+``repro.serving.tracing.now`` (the single monotonic clock) so traces,
+QoS deadlines, and GC agree with each other and survive host clock
+steps.  Direct use of ``time.monotonic`` / ``time.perf_counter`` /
+``time.time`` anywhere under ``repro.serving`` or ``repro.core`` is
+flagged — except inside ``repro.serving.tracing`` itself, which defines
+the clock.  Reported wall-clock timestamps (job ``submitted_at`` /
+``finished_at``, metrics uptime) are sanctioned via pragmas, never used
+for arithmetic against monotonic values.
+
+``time.sleep`` is not a clock read and is not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import AnalysisContext, Finding, Rule, register
+
+SCOPES = ("repro.serving", "repro.core")
+EXEMPT_MODULES = {"repro.serving.tracing"}
+CLOCK_ATTRS = {"monotonic", "perf_counter", "time", "monotonic_ns", "perf_counter_ns", "time_ns"}
+
+
+@register
+class ClockRule(Rule):
+    name = "clock-discipline"
+    doc = "time.monotonic/perf_counter/time outside tracing.py must route through tracing.now"
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        for m in ctx.modules_under(*SCOPES):
+            if m.modname in EXEMPT_MODULES:
+                continue
+            # names bound by `from time import time/monotonic/...`
+            from_time = {
+                alias
+                for alias, target in m.aliases.items()
+                if target in {f"time.{a}" for a in CLOCK_ATTRS}
+            }
+            for node in ast.walk(m.tree):
+                bad = None
+                if isinstance(node, ast.Attribute) and node.attr in CLOCK_ATTRS:
+                    base = node.value
+                    if isinstance(base, ast.Name) and m.aliases.get(base.id, base.id) == "time":
+                        bad = f"time.{node.attr}"
+                elif isinstance(node, ast.Name) and node.id in from_time:
+                    if isinstance(getattr(node, "ctx", None), ast.Load):
+                        bad = m.aliases[node.id]
+                if bad is not None:
+                    yield Finding(
+                        rule=self.name,
+                        path=m.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"{bad} used directly; route through "
+                            "repro.serving.tracing.now (the one monotonic serving clock)"
+                        ),
+                    )

@@ -1,0 +1,287 @@
+"""error-surface: every structured error code must reach the client intact.
+
+Three completeness checks tying the error plumbing together:
+
+1. **code mapping** — every structured error code constructed anywhere in
+   ``repro.serving`` / ``repro.core`` (``code=``/``error_code=`` kwargs
+   and assignments, ``{"code": ...}`` dict literals, class-level
+   ``code = "X"`` attributes, and the code-positional of the envelope
+   helpers) must have an HTTP status in the ``ERROR_STATUS`` table of
+   ``core/api.py``; an unmapped code falls through to a generic 500 and
+   loses its retry semantics.
+2. **Retry-After** — the api module must define the helper that stamps
+   ``Retry-After`` on 429/503 responses and actually call it on the
+   response path (backpressure without Retry-After defeats client
+   backoff).
+3. **retire funnel** — in the scheduler, every method that sets a
+   request's ``.error_code`` must (transitively through self-calls)
+   reach the retire path that calls ``self.tracer.finish``; a retire
+   path that skips trace-finish leaks an open span and drops the
+   terminal outcome from observability.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import AnalysisContext, Finding, ModuleInfo, Rule, register
+
+SCOPES = ("repro.serving", "repro.core")
+CODE_RE = re.compile(r"^[A-Z][A-Z0-9_]{2,}$")
+# helpers whose code argument is positional: name -> arg index
+CODE_POSITIONALS = {"ApiError": 0, "_error_envelope": 1, "_v2_error": 0, "_v1_error": 0}
+
+
+def _const_code(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        if CODE_RE.match(node.value):
+            return node.value
+    return None
+
+
+def _collect_codes(m: ModuleInfo) -> List[Tuple[str, int]]:
+    out: List[Tuple[str, int]] = []
+
+    def add(node: ast.AST, val: ast.AST) -> None:
+        c = _const_code(val)
+        if c is not None:
+            out.append((c, getattr(node, "lineno", 1)))
+
+    # class-level `code = "X"` attributes (the AdmissionError pattern)
+    for node in ast.walk(m.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "code":
+                        add(stmt, stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                if isinstance(stmt.target, ast.Name) and stmt.target.id == "code":
+                    add(stmt, stmt.value)
+
+    for node in ast.walk(m.tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in {"code", "error_code"}:
+                    add(kw.value, kw.value)
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+            idx = CODE_POSITIONALS.get(fname or "")
+            if idx is not None and len(node.args) > idx:
+                add(node.args[idx], node.args[idx])
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                name = None
+                if isinstance(t, ast.Attribute):
+                    name = t.attr
+                elif isinstance(t, ast.Name):
+                    name = t.id
+                if name in {"error_code"}:
+                    add(node, node.value)
+        elif isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if (
+                    isinstance(k, ast.Constant)
+                    and k.value == "code"
+                    and v is not None
+                ):
+                    add(v, v)
+        elif isinstance(node, ast.FunctionDef):
+            args = node.args
+            all_args = list(args.posonlyargs) + list(args.args)
+            defaults = list(args.defaults)
+            if defaults:
+                for a, d in zip(all_args[-len(defaults):], defaults):
+                    if a.arg in {"code", "error_code"}:
+                        add(d, d)
+    return out
+
+
+def _error_status_keys(m: ModuleInfo) -> Optional[Set[str]]:
+    for node in ast.walk(m.tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "ERROR_STATUS":
+                    if isinstance(node.value, ast.Dict):
+                        keys = set()
+                        for k in node.value.keys:
+                            if isinstance(k, ast.Constant) and isinstance(
+                                k.value, str
+                            ):
+                                keys.add(k.value)
+                        return keys
+    return None
+
+
+@register
+class ErrorSurfaceRule(Rule):
+    name = "error-surface"
+    doc = "unmapped error codes; missing Retry-After; retire paths skipping trace-finish"
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        mods = ctx.modules_under(*SCOPES)
+
+        # 1. the ERROR_STATUS table
+        api_mod: Optional[ModuleInfo] = None
+        status_keys: Optional[Set[str]] = None
+        for m in mods:
+            keys = _error_status_keys(m)
+            if keys is not None:
+                api_mod = m
+                status_keys = keys
+                break
+        if status_keys is None:
+            if any(m.modname.endswith("core.api") for m in mods):
+                m = next(m for m in mods if m.modname.endswith("core.api"))
+                yield Finding(
+                    rule=self.name,
+                    path=m.rel,
+                    line=1,
+                    col=0,
+                    message="no ERROR_STATUS mapping table found in the api module",
+                )
+            # without a table there is nothing to check against
+            return
+
+        for m in mods:
+            for code, line in _collect_codes(m):
+                if code not in status_keys:
+                    yield Finding(
+                        rule=self.name,
+                        path=m.rel,
+                        line=line,
+                        col=0,
+                        message=(
+                            f"structured error code '{code}' has no HTTP "
+                            "mapping in ERROR_STATUS (core/api.py); it would "
+                            "surface as a generic 500"
+                        ),
+                    )
+
+        # 2. Retry-After helper exists and is used on the response path
+        assert api_mod is not None
+        helper_names: Set[str] = set()
+        for node in ast.walk(api_mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Constant) and sub.value == "Retry-After":
+                        helper_names.add(node.name)
+                        break
+        # innermost helper(s): functions that literally stamp the header
+        if not helper_names:
+            yield Finding(
+                rule=self.name,
+                path=api_mod.rel,
+                line=1,
+                col=0,
+                message=(
+                    "no function in the api module stamps a Retry-After "
+                    "header; 429/503 responses must carry one"
+                ),
+            )
+        else:
+            called = False
+            for node in ast.walk(api_mod.tree):
+                if isinstance(node, ast.Call):
+                    fn = node.func
+                    name = fn.id if isinstance(fn, ast.Name) else (
+                        fn.attr if isinstance(fn, ast.Attribute) else None
+                    )
+                    if name in helper_names:
+                        called = True
+                        break
+            if not called:
+                yield Finding(
+                    rule=self.name,
+                    path=api_mod.rel,
+                    line=1,
+                    col=0,
+                    message=(
+                        "the Retry-After helper is defined but never called "
+                        "on the response path; 429/503 responses would miss it"
+                    ),
+                )
+
+        # 3. scheduler retire paths funnel through trace-finish
+        yield from self._check_retire_funnel(ctx)
+
+    def _check_retire_funnel(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        index = ctx.index
+        serving = {
+            m.modname
+            for m in ctx.modules_under("repro.serving")
+        }
+        # group methods by (modname, class)
+        by_class: Dict[Tuple[str, str], List] = {}
+        for fi in index.functions.values():
+            if fi.modname in serving and fi.cls is not None:
+                by_class.setdefault((fi.modname, fi.cls), []).append(fi)
+
+        def sets_error_code(fi) -> List[int]:
+            lines = []
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Attribute) and t.attr == "error_code":
+                            lines.append(node.lineno)
+            return lines
+
+        def calls_trace_finish(fi) -> bool:
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute
+                ):
+                    if node.func.attr == "finish":
+                        base = node.func.value
+                        if isinstance(base, ast.Attribute) and "trace" in base.attr:
+                            return True
+                        if isinstance(base, ast.Name) and "trace" in base.id:
+                            return True
+            return False
+
+        for (modname, cls), methods in sorted(by_class.items()):
+            setters = {fi.qualname: (fi, sets_error_code(fi)) for fi in methods}
+            setters = {q: v for q, v in setters.items() if v[1]}
+            if not setters:
+                continue
+            # fixpoint: methods that reach a trace-finish caller via self-calls
+            # a method literally named `finish` IS the trace-finish sink
+            # (Tracer.finish records the terminal outcome itself)
+            finishers: Set[str] = {
+                fi.qualname
+                for fi in methods
+                if calls_trace_finish(fi) or fi.name == "finish"
+            }
+            meths = {fi.qualname: fi for fi in methods}
+            changed = True
+            while changed:
+                changed = False
+                for q, fi in meths.items():
+                    if q in finishers:
+                        continue
+                    for call in index.own_calls(fi):
+                        for callee in index.resolve(call, fi, loose=False):
+                            if callee.qualname in finishers:
+                                finishers.add(q)
+                                changed = True
+                                break
+            for q, (fi, lines) in sorted(setters.items()):
+                if q not in finishers:
+                    yield Finding(
+                        rule=self.name,
+                        path=fi.module.rel,
+                        line=lines[0],
+                        col=0,
+                        message=(
+                            f"{cls}.{fi.name} sets .error_code but never "
+                            "reaches the retire path that calls "
+                            "tracer.finish; the terminal outcome would leak "
+                            "an open trace span"
+                        ),
+                    )

@@ -1,0 +1,122 @@
+"""exception-safety: WorkerKill and GeneratorExit must escape.
+
+Fault containment relies on two escape hatches: ``WorkerKill`` derives
+from ``BaseException`` precisely so worker supervision survives
+``except Exception`` walls, and ``GeneratorExit`` is how a client
+disconnect cancels a streaming generator.  Both die silently inside a
+bare ``except:`` / ``except BaseException:`` that does not re-raise.
+Separately, an ``except Exception`` whose body is only
+``pass``/``continue``/``break`` swallows real errors without attaching a
+structured error code, so the failure never reaches the error envelope.
+
+Checks (scoped to ``repro.serving`` / ``repro.core``):
+
+1. ``except:`` or ``except BaseException:`` without a bare ``raise`` in
+   the handler body — would swallow WorkerKill.
+2. ``except GeneratorExit`` without re-raise — breaks disconnect
+   cancellation.
+3. ``except Exception`` (or broader) whose body is only
+   pass/continue/break — silent swallow; either attach a structured
+   error code or pragma the sanctioned best-effort cleanups.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.core import AnalysisContext, Finding, Rule, register
+
+SCOPES = ("repro.serving", "repro.core")
+
+
+def _caught_names(handler: ast.ExceptHandler) -> List[str]:
+    t = handler.type
+    if t is None:
+        return ["<bare>"]
+    names: List[str] = []
+    for node in [t] + (list(t.elts) if isinstance(t, ast.Tuple) else []):
+        if isinstance(node, ast.Name):
+            names.append(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.append(node.attr)
+    return names
+
+
+def _has_bare_raise(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise) and node.exc is None:
+            return True
+        # `raise e` where e is the caught name also re-raises
+        if (
+            isinstance(node, ast.Raise)
+            and isinstance(node.exc, ast.Name)
+            and handler.name is not None
+            and node.exc.id == handler.name
+        ):
+            return True
+    return False
+
+
+def _body_is_silent(handler: ast.ExceptHandler) -> bool:
+    for stmt in handler.body:
+        if isinstance(stmt, (ast.Pass, ast.Continue, ast.Break)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue  # docstring / ellipsis
+        return False
+    return True
+
+
+@register
+class ExceptionRule(Rule):
+    name = "exception-safety"
+    doc = "bare/BaseException handlers swallowing WorkerKill; silent except Exception"
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        for m in ctx.modules_under(*SCOPES):
+            for node in ast.walk(m.tree):
+                if not isinstance(node, ast.ExceptHandler):
+                    continue
+                names = _caught_names(node)
+                reraises = _has_bare_raise(node)
+                if ("<bare>" in names or "BaseException" in names) and not reraises:
+                    yield Finding(
+                        rule=self.name,
+                        path=m.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            "bare except / except BaseException without re-raise "
+                            "swallows WorkerKill (worker supervision) and "
+                            "GeneratorExit (disconnect cancellation); catch "
+                            "Exception or re-raise"
+                        ),
+                    )
+                    continue
+                if "GeneratorExit" in names and not reraises:
+                    yield Finding(
+                        rule=self.name,
+                        path=m.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            "except GeneratorExit without re-raise breaks "
+                            "client-disconnect cancellation of streaming "
+                            "generators"
+                        ),
+                    )
+                    continue
+                if "Exception" in names and _body_is_silent(node):
+                    yield Finding(
+                        rule=self.name,
+                        path=m.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            "except Exception with an empty body drops the "
+                            "error without a structured code; handle it, "
+                            "attach a code, or pragma a sanctioned best-effort "
+                            "cleanup"
+                        ),
+                    )

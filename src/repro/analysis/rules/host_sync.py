@@ -1,0 +1,329 @@
+"""host-sync: ONE device->host sync per scheduler chunk.
+
+The continuous-batching hot path is designed around a single blocking
+device->host transfer per chunk (the ``np.asarray`` on the chunk's token
+block at the scheduler's chunk boundary, plus the deferred first-token
+reads resolved at that same point).  Any *other* implicit sync —
+``.item()``, ``int()/float()/bool()`` on a device value, iterating a
+device array, ``np.asarray``/``np.array`` on a jnp value,
+``jax.device_get``, ``.block_until_ready()`` — stalls the dispatch
+pipeline and silently serialises the scheduler against the accelerator.
+
+The rule computes the hot-path call graph (loose, over-approximating
+reachability) rooted at ``*.tick`` / ``*.step_chunk`` in
+``repro.serving`` plus everything in ``repro.serving.tracing`` (trace
+stamps run inside the tick), then runs a per-function forward taint pass:
+values produced by ``jax.*``/``jnp.*`` calls, by calls through
+``*_jit``-suffixed tables, by known device-returning methods
+(``step_chunk``/``step``/``insert_request``), or read from known
+device-holding attributes (``_pending_first``) are *device-tainted*;
+host conversions applied to tainted values are findings.  The sanctioned
+chunk-boundary sync carries ``# maxlint: allow[host-sync]`` pragmas.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.core import AnalysisContext, Finding, Rule, register
+from repro.analysis.callgraph import FuncInfo
+
+SCOPE = "repro.serving"
+ROOT_NAMES = {"tick", "step_chunk"}
+ROOT_MODULES = {"repro.serving.tracing"}  # every stamp helper is hot
+# methods whose return values live on device
+DEVICE_FNS = {"step_chunk", "step", "insert_request"}
+# attributes holding device values (or containers of them)
+DEVICE_ATTRS = {"_pending_first", "_next_tok"}
+# attribute accesses on arrays that are host-side metadata, never syncs
+META_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _root_name(expr: ast.AST) -> Optional[str]:
+    """Leftmost Name of a dotted/Subscripted chain, e.g. jnp for jnp.ones."""
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def _chain_has_jit(expr: ast.AST) -> bool:
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        if isinstance(expr, ast.Attribute) and expr.attr.endswith("_jit"):
+            return True
+        expr = expr.value
+    return isinstance(expr, ast.Name) and expr.id.endswith("_jit")
+
+
+class _TaintScan:
+    """Forward taint over one function body, statements in source order."""
+
+    def __init__(self, func: FuncInfo, rule: "HostSyncRule"):
+        self.func = func
+        self.m = func.module
+        self.rule = rule
+        self.tainted: Set[str] = set()
+        self.findings: List[Finding] = []
+
+    # -- device-ness of an expression -------------------------------------
+
+    def _is_device_expr(self, expr: ast.AST) -> bool:
+        aliases = self.m.aliases
+        if isinstance(expr, ast.Name):
+            return expr.id in self.tainted
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in DEVICE_ATTRS:
+                return True
+            return False
+        if isinstance(expr, ast.Subscript):
+            return self._is_device_expr(expr.value)
+        if isinstance(expr, ast.Call):
+            fn = expr.func
+            root = _root_name(fn)
+            if root is not None:
+                target = aliases.get(root, root)
+                if target == "jax" or target.startswith("jax."):
+                    return True
+            if _chain_has_jit(fn):
+                return True
+            if isinstance(fn, ast.Attribute) and fn.attr in DEVICE_FNS:
+                return True
+            if isinstance(fn, ast.Name) and fn.id in DEVICE_FNS:
+                return True
+            return False
+        if isinstance(expr, (ast.BinOp,)):
+            return self._is_device_expr(expr.left) or self._is_device_expr(expr.right)
+        if isinstance(expr, ast.UnaryOp):
+            return self._is_device_expr(expr.operand)
+        if isinstance(expr, ast.IfExp):
+            return self._is_device_expr(expr.body) or self._is_device_expr(expr.orelse)
+        return False
+
+    def _mentions_taint(self, expr: ast.AST) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in self.tainted:
+                return True
+            if isinstance(node, ast.Attribute) and node.attr in DEVICE_ATTRS:
+                return True
+        return False
+
+    # -- findings ----------------------------------------------------------
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(
+            Finding(
+                rule=self.rule.name,
+                path=self.m.rel,
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"{what} forces a device->host sync inside the hot path "
+                    f"(reached from {self.rule.root_desc}); the design allows "
+                    "exactly one sync per chunk at the scheduler chunk boundary"
+                ),
+            )
+        )
+
+    def _check_expr(self, expr: ast.AST) -> None:
+        """Detect syncs in an expression tree (no lasting taint updates)."""
+        # comprehension targets iterate their source: taint them locally
+        added: Set[str] = set()
+        for node in ast.walk(expr):
+            if isinstance(
+                node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)
+            ):
+                for gen in node.generators:
+                    if self._is_device_expr(gen.iter):
+                        for n in ast.walk(gen.target):
+                            if isinstance(n, ast.Name) and n.id not in self.tainted:
+                                added.add(n.id)
+        self.tainted |= added
+        try:
+            self._scan_calls(expr)
+        finally:
+            self.tainted -= added
+
+    def _scan_calls(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute):
+                if fn.attr == "item" and not node.args:
+                    self._flag(node, ".item()")
+                    continue
+                if fn.attr == "block_until_ready":
+                    self._flag(node, ".block_until_ready()")
+                    continue
+                if fn.attr == "device_get":
+                    root = _root_name(fn)
+                    if root and self.m.aliases.get(root, root).startswith("jax"):
+                        self._flag(node, "jax.device_get")
+                        continue
+                if fn.attr in {"asarray", "array"} and node.args:
+                    root = _root_name(fn)
+                    if root and self.m.aliases.get(root, root) == "numpy":
+                        if self._mentions_taint(node.args[0]):
+                            self._flag(node, "np.%s on a device value" % fn.attr)
+                        continue
+            if isinstance(fn, ast.Name) and fn.id in {"int", "float", "bool"} and node.args:
+                arg = node.args[0]
+                # shape/dtype/len reads are host metadata, not syncs
+                if any(
+                    isinstance(n, ast.Attribute) and n.attr in META_ATTRS
+                    for n in ast.walk(arg)
+                ):
+                    continue
+                if any(
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Name)
+                    and n.func.id == "len"
+                    for n in ast.walk(arg)
+                ):
+                    continue
+                if self._is_device_expr(arg) or (
+                    isinstance(arg, ast.Subscript) and self._mentions_taint(arg)
+                ):
+                    self._flag(node, f"{fn.id}() on a device value")
+
+    # -- statement walk ----------------------------------------------------
+
+    def _assign_target(self, target: ast.AST, device: bool) -> None:
+        if isinstance(target, ast.Name):
+            if device:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_target(elt, device)
+        # attribute/subscript targets are not tracked as locals
+
+    def _conversion_untaints(self, value: ast.AST) -> bool:
+        """np.asarray(x)/int(x) produce host values even when flagged."""
+        if isinstance(value, ast.Call):
+            fn = value.func
+            if isinstance(fn, ast.Attribute) and fn.attr in {"asarray", "array"}:
+                root = _root_name(fn)
+                if root and self.m.aliases.get(root, root) == "numpy":
+                    return True
+            if isinstance(fn, ast.Name) and fn.id in {"int", "float", "bool", "len"}:
+                return True
+        return False
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs are scanned as their own functions
+        if isinstance(stmt, ast.Assign):
+            self._check_expr(stmt.value)
+            device = (not self._conversion_untaints(stmt.value)) and self._is_device_expr(
+                stmt.value
+            )
+            for t in stmt.targets:
+                self._assign_target(t, device)
+            return
+        if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            if stmt.value is not None:
+                self._check_expr(stmt.value)
+                device = (not self._conversion_untaints(stmt.value)) and self._is_device_expr(
+                    stmt.value
+                )
+                self._assign_target(stmt.target, device)
+            return
+        if isinstance(stmt, ast.For):
+            self._check_expr(stmt.iter)
+            if isinstance(stmt.iter, ast.Name) and stmt.iter.id in self.tainted:
+                self._flag(stmt.iter, "iteration over a device array")
+            self._assign_target(stmt.target, self._is_device_expr(stmt.iter))
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.If):
+            self._check_expr(stmt.test)
+            if isinstance(stmt.test, ast.Name) and stmt.test.id in self.tainted:
+                self._flag(stmt.test, "truth-test of a device array")
+            # branches process sequentially: a host conversion inside the
+            # guarded branch (the sanctioned sync pattern) consumes taint
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+            return
+        if isinstance(stmt, (ast.While,)):
+            self._check_expr(stmt.test)
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_expr(item.context_expr)
+            for s in stmt.body:
+                self._stmt(s)
+            return
+        if isinstance(stmt, ast.Try):
+            # may-taint: handlers start from the body's taint state (the
+            # body may have run partially) and the results merge, so an
+            # `except` that assigns None cannot launder taint away
+            for s in stmt.body:
+                self._stmt(s)
+            after_body = set(self.tainted)
+            merged = set(after_body)
+            for h in stmt.handlers:
+                self.tainted = set(after_body)
+                for s in h.body:
+                    self._stmt(s)
+                merged |= self.tainted
+            self.tainted = set(after_body)
+            for s in stmt.orelse:
+                self._stmt(s)
+            merged |= self.tainted
+            self.tainted = merged
+            for s in stmt.finalbody:
+                self._stmt(s)
+            return
+        # generic statement: scan expressions, track comprehension taint
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)):
+                for gen in node.generators:
+                    if self._is_device_expr(gen.iter):
+                        self._assign_target(gen.target, True)
+        self._check_expr(stmt)
+
+    def run(self) -> List[Finding]:
+        body = getattr(self.func.node, "body", [])
+        for stmt in body:
+            self._stmt(stmt)
+        return self.findings
+
+
+@register
+class HostSyncRule(Rule):
+    name = "host-sync"
+    doc = "implicit device->host syncs inside the scheduler/engine hot path"
+    root_desc = "scheduler.tick / engine.step_chunk / tracing stamps"
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        index = ctx.index
+        roots: List[FuncInfo] = []
+        for fi in index.functions.values():
+            in_scope = fi.modname == SCOPE or fi.modname.startswith(SCOPE + ".")
+            if not in_scope:
+                continue
+            if fi.name in ROOT_NAMES or fi.modname in ROOT_MODULES:
+                roots.append(fi)
+        if not roots:
+            return
+        hot = index.reachable(roots, loose=True)
+        for qual in sorted(hot):
+            fi = index.functions.get(qual)
+            if fi is None:
+                continue
+            if not (fi.modname == SCOPE or fi.modname.startswith(SCOPE + ".")):
+                continue
+            yield from _TaintScan(fi, self).run()

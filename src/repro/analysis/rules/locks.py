@@ -1,0 +1,246 @@
+"""lock-discipline: no blocking work under hot-path locks, no lock cycles.
+
+Builds the static lock-acquisition graph from ``with self._lock``-style
+sites across the serving stack.  A lock's identity is
+``(ClassName, attribute)`` so ``JobStream._cv`` and ``BatchedService._cv``
+are distinct.  Two checks:
+
+* **work-under-lock** — inside a held ``with`` body (lexically, plus
+  one level of strict call resolution), flag jax/jnp dispatch, known
+  device-dispatching engine calls, and blocking calls (``time.sleep``,
+  ``.join()``, ``.wait()`` on anything other than the condition variable
+  being held, ``open()``, ``subprocess.*``).  The scheduler tick's
+  dispatch-under-lock is sanctioned by design (single-owner RLock) and
+  pragma'd.
+* **lock-order** — edge A->B when B is acquired (lexically or via a
+  strictly-resolved call) while A is held; any cycle in that graph is a
+  potential deadlock and is reported at the acquiring site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import AnalysisContext, Finding, Rule, register
+from repro.analysis.callgraph import FuncInfo, SymbolIndex
+
+SCOPES = ("repro.serving", "repro.core")
+LOCK_NAME_HINTS = ("lock", "_cv", "cond")
+DEVICE_FNS = {"step_chunk", "step", "insert_request", "generate"}
+BLOCKING_ATTRS = {"join"}
+
+LockId = Tuple[str, str]  # (owner class or module, attribute name)
+
+
+def _lock_attr(expr: ast.AST) -> Optional[str]:
+    """`with self._lock:` / `with self.x._lock:` -> final attr if lock-like."""
+    if isinstance(expr, ast.Call):
+        return None  # with self._lock.acquire_timeout(...) etc: not tracked
+    if isinstance(expr, ast.Attribute):
+        name = expr.attr
+        low = name.lower()
+        if any(h in low for h in LOCK_NAME_HINTS):
+            return name
+    if isinstance(expr, ast.Name):
+        low = expr.id.lower()
+        if any(h in low for h in LOCK_NAME_HINTS):
+            return expr.id
+    return None
+
+
+def _owner(func: FuncInfo) -> str:
+    return func.cls or func.modname
+
+
+def _unparse(expr: ast.AST) -> str:
+    try:
+        return ast.unparse(expr)
+    except Exception:
+        return ""
+
+
+class _FuncScan:
+    """Per-function scan: with-regions, direct violations, lock edges."""
+
+    def __init__(self, func: FuncInfo, index: SymbolIndex, rule: "LockRule"):
+        self.func = func
+        self.index = index
+        self.rule = rule
+        self.m = func.module
+        self.findings: List[Finding] = []
+        # locks acquired anywhere in this function (lexically)
+        self.acquires: Set[LockId] = set()
+        # (held_lock, acquired_lock, site_line) discovered lexically
+        self.edges: List[Tuple[LockId, LockId, int]] = []
+        # calls made while holding each lock
+        self.calls_under: List[Tuple[LockId, ast.Call]] = []
+
+    def _flag(self, node: ast.AST, lock: LockId, what: str) -> None:
+        self.findings.append(
+            Finding(
+                rule=self.rule.name,
+                path=self.m.rel,
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"{what} while holding {lock[0]}.{lock[1]}; blocking or "
+                    "device work under a hot-path lock stalls every other "
+                    "thread contending for it"
+                ),
+            )
+        )
+
+    def _check_under(self, node: ast.AST, held: List[Tuple[LockId, str]]) -> None:
+        """Direct (lexical) violation scan for one node under held locks."""
+        if not isinstance(node, ast.Call):
+            return
+        lock, subject_src = held[-1]
+        fn = node.func
+        root = None
+        e = fn
+        while isinstance(e, (ast.Attribute, ast.Subscript)):
+            e = e.value
+        if isinstance(e, ast.Name):
+            root = e.id
+        aliases = self.m.aliases
+        if root is not None:
+            target = aliases.get(root, root)
+            if target == "jax" or target.startswith("jax."):
+                self._flag(node, lock, "jax dispatch")
+                return
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in DEVICE_FNS:
+                self._flag(node, lock, f"device dispatch (.{fn.attr}())")
+                return
+            if fn.attr == "sleep" and isinstance(fn.value, ast.Name):
+                if aliases.get(fn.value.id, fn.value.id) == "time":
+                    self._flag(node, lock, "time.sleep")
+                    return
+            if fn.attr in BLOCKING_ATTRS:
+                # str.join (constant separator) is not thread join
+                if not isinstance(fn.value, ast.Constant):
+                    self._flag(node, lock, f".{fn.attr}()")
+                return
+            if fn.attr == "wait":
+                base = _unparse(fn.value)
+                if base and all(base != s for _, s in held):
+                    self._flag(node, lock, f"{base}.wait()")
+                return
+        if isinstance(fn, ast.Name) and fn.id == "open":
+            self._flag(node, lock, "blocking file I/O (open)")
+
+    def _walk_stmt(self, node: ast.AST, held: List[Tuple[LockId, str]]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs scanned as their own functions
+        if isinstance(node, ast.With):
+            new_locks: List[Tuple[LockId, str]] = []
+            for item in node.items:
+                attr = _lock_attr(item.context_expr)
+                if attr is not None:
+                    lid: LockId = (_owner(self.func), attr)
+                    new_locks.append((lid, _unparse(item.context_expr)))
+            if new_locks:
+                for lid, _src in new_locks:
+                    self.acquires.add(lid)
+                    for h, _s in held:
+                        if h != lid:
+                            self.edges.append((h, lid, node.lineno))
+                inner = held + new_locks
+                for s in node.body:
+                    self._walk_stmt(s, inner)
+                return
+        if held and isinstance(node, ast.Call):
+            self._check_under(node, held)
+            self.calls_under.append((held[-1][0], node))
+        for child in ast.iter_child_nodes(node):
+            self._walk_stmt(child, held)
+
+    def run(self) -> None:
+        for child in ast.iter_child_nodes(self.func.node):
+            self._walk_stmt(child, [])
+
+
+@register
+class LockRule(Rule):
+    name = "lock-discipline"
+    doc = "lock-order cycles; jax dispatch or blocking I/O under a held lock"
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        index = ctx.index
+        scans: Dict[str, _FuncScan] = {}
+        for qual, fi in index.functions.items():
+            if not any(
+                fi.modname == s or fi.modname.startswith(s + ".") for s in SCOPES
+            ):
+                continue
+            scan = _FuncScan(fi, index, self)
+            scan.run()
+            scans[qual] = scan
+
+        # transitive per-function acquired-lock sets (strict resolution)
+        acquired: Dict[str, Set[LockId]] = {
+            q: set(s.acquires) for q, s in scans.items()
+        }
+        changed = True
+        while changed:
+            changed = False
+            for qual, scan in scans.items():
+                for call in index.own_calls(scan.func):
+                    for callee in index.resolve(call, scan.func, loose=False):
+                        extra = acquired.get(callee.qualname)
+                        if extra and not extra <= acquired[qual]:
+                            acquired[qual] |= extra
+                            changed = True
+
+        # edges via calls made while holding a lock
+        edges: Dict[Tuple[LockId, LockId], Tuple[str, int]] = {}
+        for qual, scan in scans.items():
+            for held, acq, line in scan.edges:
+                edges.setdefault((held, acq), (scan.m.rel, line))
+            for held, call in scan.calls_under:
+                for callee in index.resolve(call, scan.func, loose=False):
+                    for acq in acquired.get(callee.qualname, ()):
+                        if acq != held:
+                            edges.setdefault(
+                                (held, acq), (scan.m.rel, call.lineno)
+                            )
+
+        # cycle detection over the lock-order graph
+        graph: Dict[LockId, Set[LockId]] = {}
+        for (a, b), _site in edges.items():
+            graph.setdefault(a, set()).add(b)
+
+        reported: Set[Tuple[LockId, LockId]] = set()
+
+        def reaches(src: LockId, dst: LockId) -> bool:
+            stack, seen = [src], {src}
+            while stack:
+                cur = stack.pop()
+                if cur == dst:
+                    return True
+                for nxt in graph.get(cur, ()):
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        stack.append(nxt)
+            return False
+
+        for (a, b), (rel, line) in sorted(edges.items(), key=lambda kv: kv[1]):
+            if (b, a) in reported or (a, b) in reported:
+                continue
+            if reaches(b, a):
+                reported.add((a, b))
+                yield Finding(
+                    rule=self.name,
+                    path=rel,
+                    line=line,
+                    col=0,
+                    message=(
+                        f"lock-order cycle: {a[0]}.{a[1]} -> {b[0]}.{b[1]} "
+                        f"and {b[0]}.{b[1]} ->* {a[0]}.{a[1]}; acquire these "
+                        "locks in one global order"
+                    ),
+                )
+
+        for scan in scans.values():
+            yield from scan.findings

@@ -25,7 +25,6 @@ concurrent deploys of the same asset build the wrapper exactly once.
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -33,6 +32,7 @@ from repro.core.registry import ModelRegistry, EXCHANGE
 from repro.core.service import InferenceService, Job, make_service
 from repro.core.wrapper import MAXModelWrapper
 from repro.serving.metrics import MetricsRegistry
+from repro.serving.tracing import now as _now
 from repro.serving.qos import QoSConfig
 
 
@@ -62,7 +62,7 @@ class DeploymentStats:
 class Deployment:
     asset_id: str
     service: InferenceService
-    created_at: float = field(default_factory=time.time)
+    created_at: float = field(default_factory=_now)   # monotonic; used for uptime only
     mesh_slice: Optional[str] = None         # e.g. "pod0/rows0-7"
     stats: DeploymentStats = field(default_factory=DeploymentStats)
 
@@ -71,21 +71,21 @@ class Deployment:
         return self.service.wrapper
 
     def _record(self, t0: float, env: Dict[str, Any]) -> Dict[str, Any]:
-        self.stats.record(time.perf_counter() - t0,
+        self.stats.record(_now() - t0,
                           env.get("status") == "ok")
         return env
 
     def predict(self, inp: Any,
                 qos: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        t0 = time.perf_counter()
+        t0 = _now()
         return self._record(t0, self.service.predict(inp, qos))
 
     def predict_batch(self, inputs: List[Any],
                       qos: Optional[Dict[str, Any]] = None
                       ) -> List[Dict[str, Any]]:
-        t0 = time.perf_counter()
+        t0 = _now()
         envs = self.service.predict_batch(inputs, qos)
-        per_input = (time.perf_counter() - t0) / max(len(inputs), 1)
+        per_input = (_now() - t0) / max(len(inputs), 1)
         for env in envs:
             self.stats.record(per_input, env.get("status") == "ok")
         return envs
@@ -98,7 +98,7 @@ class Deployment:
                        qos: Optional[Dict[str, Any]] = None):
         """Streaming predict with deployment-level accounting: the request
         counts once, when its stream terminates (done/error/disconnect)."""
-        t0 = time.perf_counter()
+        t0 = _now()
 
         def wrapped():
             ok = False
@@ -108,7 +108,7 @@ class Deployment:
                         ok = True
                     yield ev
             finally:
-                self.stats.record(time.perf_counter() - t0, ok)
+                self.stats.record(_now() - t0, ok)
         return wrapped()
 
 
@@ -213,7 +213,7 @@ class DeploymentManager:
     def health(self) -> Dict[str, Any]:
         return {
             aid: {
-                "uptime_s": round(time.time() - d.created_at, 1),
+                "uptime_s": round(_now() - d.created_at, 1),
                 "requests": d.stats.requests,
                 "errors": d.stats.errors,
                 "mean_latency_ms": round(d.stats.mean_latency_ms, 2),

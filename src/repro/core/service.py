@@ -153,8 +153,11 @@ class Job:
     id: str
     model_id: str
     state: str = "queued"     # queued | running | done | error | cancelled
+    # reported wall-clock stamps (API surface); never used for arithmetic
+    # maxlint: allow[clock-discipline] reason=submitted_at is a reported wall-clock timestamp, not a duration source
     submitted_at: float = field(default_factory=time.time)
     finished_at: Optional[float] = None
+    finished_mono: Optional[float] = None   # tracing.now stamp; drives TTL GC
     result: Optional[Any] = None      # envelope when done
     error: Optional[str] = None
     stream: JobStream = field(default_factory=JobStream, repr=False)
@@ -354,9 +357,11 @@ class InferenceService(abc.ABC):
         finished = [jid for jid, j in self._jobs.items()
                     if j.state in ("done", "error")]
         if self.job_ttl_s is not None:
-            cutoff = time.time() - self.job_ttl_s
+            # monotonic clock: a host wall-clock step must not mass-expire
+            # (step forward) or immortalize (step back) finished jobs
+            cutoff = _mono() - self.job_ttl_s
             for jid in finished:
-                if (self._jobs[jid].finished_at or 0) < cutoff:
+                if (self._jobs[jid].finished_mono or 0) < cutoff:
                     del self._jobs[jid]
             finished = [jid for jid in finished if jid in self._jobs]
         # bounded retention, like the scheduler's completed map: evict
@@ -388,7 +393,9 @@ class InferenceService(abc.ABC):
             job.error = envelope.get("error") if status != "ok" else None
             if isinstance(job.error, dict):     # structured error message
                 job.error = job.error.get("message", str(job.error))
+            # maxlint: allow[clock-discipline] reason=finished_at is the reported wall-clock timestamp; TTL GC uses finished_mono
             job.finished_at = time.time()
+            job.finished_mono = _mono()
             job.state = "done" if status == "ok" \
                 else "cancelled" if status == "cancelled" else "error"
             self._gc_jobs_locked()
@@ -1348,6 +1355,7 @@ class BatchedService(InferenceService):
         if work.notify is not None:
             try:
                 work.notify(env, usage)
+            # maxlint: allow[exception-safety] reason=notify is a caller-supplied stream callback; the envelope already carries the outcome and a broken subscriber must not fail the worker
             except Exception:
                 pass
 
@@ -1378,6 +1386,7 @@ class BatchedService(InferenceService):
             if work.notify is not None:          # release stream consumers
                 try:
                     work.notify(work.envelope, None)
+                # maxlint: allow[exception-safety] reason=best-effort consumer release during fail-all; the error envelope is already recorded on the job
                 except Exception:
                     pass
 

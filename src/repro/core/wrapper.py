@@ -15,9 +15,10 @@ classifier head from a generative decode.
 from __future__ import annotations
 
 import abc
-import time
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
+
+from repro.serving.tracing import now as _now
 
 
 @dataclass(frozen=True)
@@ -84,14 +85,14 @@ class MAXModelWrapper(abc.ABC):
 
     def predict_envelope(self, inp: Any) -> Dict[str, Any]:
         """The standardized response envelope (paper Fig. 3)."""
-        t0 = time.perf_counter()
+        t0 = _now()
         try:
             preds = self.predict(inp)
             return {
                 "status": "ok",
                 "predictions": preds,
                 "model_id": self.metadata.id,
-                "latency_ms": round((time.perf_counter() - t0) * 1e3, 3),
+                "latency_ms": round((_now() - t0) * 1e3, 3),
             }
         except MAXError as e:
             return {"status": "error", "error": str(e),
@@ -113,14 +114,14 @@ class MAXModelWrapper(abc.ABC):
             # no real batch implementation: go per-input directly, so a bad
             # input fails alone instead of forcing a full re-run
             return [self.predict_envelope(i) for i in inputs]
-        t0 = time.perf_counter()
+        t0 = _now()
         try:
             all_preds = self.predict_batch(inputs)
         except MAXError:
             # overridden batch path rejected the set (typically during
             # pre-processing, before the expensive scoring) — isolate
             return [self.predict_envelope(i) for i in inputs]
-        dt = round((time.perf_counter() - t0) * 1e3 / max(len(inputs), 1), 3)
+        dt = round((_now() - t0) * 1e3 / max(len(inputs), 1), 3)
         return [{"status": "ok", "predictions": p,
                  "model_id": self.metadata.id, "latency_ms": dt}
                 for p in all_preds]

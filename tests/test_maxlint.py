@@ -1,0 +1,565 @@
+"""maxlint static-analysis suite: per-rule fixtures and the tree-wide gate.
+
+Fixture modules are written under a ``repro/serving`` (or ``repro/core``)
+directory inside a tmp tree so they scope exactly like the real tree
+(module names anchor at the last ``repro`` path component).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_paths
+from repro.analysis.report import render_json
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def write_tree(tmp_path, files):
+    """files: {relative path under tmp: source}"""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src), encoding="utf-8")
+    return tmp_path
+
+
+def findings_of(report, rule):
+    return [f for f in report.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+
+HOT_FIXTURE = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    class Sched:
+        def tick(self):
+            toks, emitted = self.engine.step_chunk(self._rng)
+            {sync_line}
+            return toks
+
+        def cold_path(self):
+            # identical code OUTSIDE the hot call graph: not flagged
+            x = jnp.ones((4,))
+            return np.asarray(x)
+"""
+
+
+def _host_sync_report(tmp_path, sync_line):
+    tree = write_tree(
+        tmp_path,
+        {"repro/serving/schedfix.py": HOT_FIXTURE.format(sync_line=sync_line)},
+    )
+    return run_paths([str(tree)], rules=["host-sync"])
+
+
+@pytest.mark.parametrize(
+    "sync_line",
+    [
+        "toks = np.asarray(toks)",
+        "n = int(toks[0])",
+        "v = toks.item()",
+        "toks.block_until_ready()",
+        "host = jax.device_get(toks)",
+        "vals = [int(t) for t in toks]",
+    ],
+)
+def test_host_sync_positives(tmp_path, sync_line):
+    report = _host_sync_report(tmp_path, sync_line)
+    hits = findings_of(report, "host-sync")
+    assert hits, f"expected a host-sync finding for: {sync_line}"
+    # the cold path with identical conversions is never flagged
+    assert all("cold_path" not in f.message for f in hits)
+    assert all(f.line < 12 for f in hits), "finding leaked outside tick"
+
+
+@pytest.mark.parametrize(
+    "sync_line",
+    [
+        "n = int(toks.shape[0])",       # metadata read, not a sync
+        "n = int(len(self.active))",    # host container length
+        "b = budgets = np.zeros((4,))", # host-produced array
+        "pass",
+    ],
+)
+def test_host_sync_negatives(tmp_path, sync_line):
+    report = _host_sync_report(tmp_path, sync_line)
+    assert not findings_of(report, "host-sync"), sync_line
+
+
+def test_host_sync_taint_survives_except_none(tmp_path):
+    # `except: toks = None` must not launder taint away from the sync below
+    src = """
+        import jax.numpy as jnp
+        import numpy as np
+
+        class Sched:
+            def tick(self):
+                toks = None
+                try:
+                    toks = self.engine.step_chunk(self._rng)
+                except Exception:
+                    toks = None
+                if toks is not None:
+                    toks = np.asarray(toks)
+                return toks
+    """
+    tree = write_tree(tmp_path, {"repro/serving/schedfix.py": src})
+    report = run_paths([str(tree)], rules=["host-sync"])
+    assert findings_of(report, "host-sync")
+
+
+def test_host_sync_pragma_suppresses(tmp_path):
+    src = """
+        import numpy as np
+
+        class Sched:
+            def tick(self):
+                toks = self.engine.step_chunk(self._rng)
+                # maxlint: allow[host-sync] reason=the one sanctioned chunk-boundary sync
+                toks = np.asarray(toks)
+                return toks
+    """
+    tree = write_tree(tmp_path, {"repro/serving/schedfix.py": src})
+    report = run_paths([str(tree)], rules=["host-sync"])
+    assert not report.findings
+    assert len(report.suppressed) == 1
+    assert "sanctioned" in report.suppressed[0].suppress_reason
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_clock_flags_direct_time(tmp_path):
+    src = """
+        import time
+
+        def measure():
+            t0 = time.perf_counter()
+            return time.time() - t0
+    """
+    tree = write_tree(tmp_path, {"repro/serving/clockfix.py": src})
+    report = run_paths([str(tree)], rules=["clock-discipline"])
+    assert len(findings_of(report, "clock-discipline")) == 2
+
+
+def test_clock_flags_from_import_and_default_factory(tmp_path):
+    src = """
+        import time
+        from time import perf_counter
+        from dataclasses import dataclass, field
+
+        @dataclass
+        class Job:
+            submitted_at: float = field(default_factory=time.time)
+
+        def f():
+            return perf_counter()
+    """
+    tree = write_tree(tmp_path, {"repro/core/clockfix.py": src})
+    report = run_paths([str(tree)], rules=["clock-discipline"])
+    assert len(findings_of(report, "clock-discipline")) == 2
+
+
+def test_clock_allows_tracing_module_and_sleep(tmp_path):
+    src = """
+        import time
+
+        def now() -> float:
+            return time.monotonic()
+    """
+    other = """
+        import time
+
+        def pause():
+            time.sleep(0.1)   # sleep is not a clock read
+    """
+    tree = write_tree(
+        tmp_path,
+        {"repro/serving/tracing.py": src, "repro/serving/other.py": other},
+    )
+    report = run_paths([str(tree)], rules=["clock-discipline"])
+    assert not findings_of(report, "clock-discipline")
+
+
+def test_clock_outside_scope_not_flagged(tmp_path):
+    src = """
+        import time
+
+        def bench():
+            return time.perf_counter()
+    """
+    tree = write_tree(tmp_path, {"repro/benchmarks/b.py": src})
+    report = run_paths([str(tree)], rules=["clock-discipline"])
+    assert not findings_of(report, "clock-discipline")
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_lock_flags_jax_dispatch_under_lock(tmp_path):
+    src = """
+        import jax
+
+        class Sched:
+            def tick(self):
+                with self._lock:
+                    sub = jax.random.split(self._rng)
+                return sub
+    """
+    tree = write_tree(tmp_path, {"repro/serving/lockfix.py": src})
+    report = run_paths([str(tree)], rules=["lock-discipline"])
+    assert findings_of(report, "lock-discipline")
+
+
+def test_lock_flags_blocking_under_lock(tmp_path):
+    src = """
+        import time
+
+        class Svc:
+            def close(self):
+                with self._lock:
+                    self._thread.join()
+
+            def spin(self):
+                with self._lock:
+                    time.sleep(1.0)
+
+            def bad_wait(self):
+                with self._cv:
+                    self._other_event.wait()
+    """
+    tree = write_tree(tmp_path, {"repro/core/lockfix.py": src})
+    report = run_paths([str(tree)], rules=["lock-discipline"])
+    assert len(findings_of(report, "lock-discipline")) == 3
+
+
+def test_lock_allows_cv_wait_on_held_lock(tmp_path):
+    src = """
+        class Svc:
+            def worker(self):
+                with self._cv:
+                    self._cv.wait(timeout=0.5)
+                with self._lock:
+                    msg = " ".join(["a", "b"])   # str.join, not thread join
+                return msg
+    """
+    tree = write_tree(tmp_path, {"repro/core/lockfix.py": src})
+    report = run_paths([str(tree)], rules=["lock-discipline"])
+    assert not findings_of(report, "lock-discipline")
+
+
+def test_lock_order_cycle_detected(tmp_path):
+    src = """
+        class A:
+            def ab(self):
+                with self._alock:
+                    with self._block:
+                        pass
+
+            def ba(self):
+                with self._block:
+                    with self._alock:
+                        pass
+    """
+    tree = write_tree(tmp_path, {"repro/serving/cyclefix.py": src})
+    report = run_paths([str(tree)], rules=["lock-discipline"])
+    hits = findings_of(report, "lock-discipline")
+    assert any("lock-order cycle" in f.message for f in hits)
+
+
+def test_lock_order_consistent_no_cycle(tmp_path):
+    src = """
+        class A:
+            def ab(self):
+                with self._alock:
+                    with self._block:
+                        pass
+
+            def ab2(self):
+                with self._alock:
+                    with self._block:
+                        pass
+    """
+    tree = write_tree(tmp_path, {"repro/serving/cyclefix.py": src})
+    report = run_paths([str(tree)], rules=["lock-discipline"])
+    assert not any(
+        "lock-order cycle" in f.message
+        for f in findings_of(report, "lock-discipline")
+    )
+
+
+# ---------------------------------------------------------------------------
+# exception-safety
+# ---------------------------------------------------------------------------
+
+
+def test_exception_flags_bare_and_base(tmp_path):
+    src = """
+        def swallow_all():
+            try:
+                work()
+            except:
+                return None
+
+        def swallow_base():
+            try:
+                work()
+            except BaseException:
+                return None
+    """
+    tree = write_tree(tmp_path, {"repro/serving/excfix.py": src})
+    report = run_paths([str(tree)], rules=["exception-safety"])
+    assert len(findings_of(report, "exception-safety")) == 2
+
+
+def test_exception_allows_reraise_and_handled(tmp_path):
+    src = """
+        def reraises():
+            try:
+                work()
+            except BaseException:
+                cleanup()
+                raise
+
+        def generator_exit_ok():
+            try:
+                yield 1
+            except GeneratorExit:
+                cleanup()
+                raise
+
+        def handled():
+            try:
+                work()
+            except Exception as e:
+                return {"status": "error", "code": "INTERNAL", "error": str(e)}
+    """
+    tree = write_tree(tmp_path, {"repro/serving/excfix.py": src})
+    report = run_paths([str(tree)], rules=["exception-safety"])
+    assert not findings_of(report, "exception-safety")
+
+
+def test_exception_flags_silent_swallow_and_generator_exit(tmp_path):
+    src = """
+        def silent():
+            try:
+                work()
+            except Exception:
+                pass
+
+        def kills_cancellation():
+            try:
+                yield 1
+            except GeneratorExit:
+                cleanup()
+    """
+    tree = write_tree(tmp_path, {"repro/serving/excfix.py": src})
+    report = run_paths([str(tree)], rules=["exception-safety"])
+    assert len(findings_of(report, "exception-safety")) == 2
+
+
+# ---------------------------------------------------------------------------
+# error-surface
+# ---------------------------------------------------------------------------
+
+
+API_FIXTURE = """
+    ERROR_STATUS = {
+        "INTERNAL": 500,
+        "QUEUE_FULL": 429,
+        "DEGRADED": 503,
+    }
+
+    def _with_retry_after(resp):
+        if resp.get("status_code") in (429, 503):
+            resp.setdefault("headers", {})["Retry-After"] = "1"
+        return resp
+
+    def dispatch(resp):
+        return _with_retry_after(resp)
+"""
+
+
+def test_error_surface_unmapped_code(tmp_path):
+    svc = """
+        def fail(req):
+            req.error_code = "TOTALLY_NEW_CODE"
+    """
+    tree = write_tree(
+        tmp_path,
+        {"repro/core/api.py": API_FIXTURE, "repro/core/svc.py": svc},
+    )
+    report = run_paths([str(tree)], rules=["error-surface"])
+    hits = findings_of(report, "error-surface")
+    assert len(hits) == 1 and "TOTALLY_NEW_CODE" in hits[0].message
+
+
+def test_error_surface_mapped_codes_clean(tmp_path):
+    svc = """
+        class QueueFull(Exception):
+            code = "QUEUE_FULL"
+
+        def fail(req):
+            req.error_code = "INTERNAL"
+            return {"code": "DEGRADED"}
+    """
+    tree = write_tree(
+        tmp_path,
+        {"repro/core/api.py": API_FIXTURE, "repro/core/svc.py": svc},
+    )
+    report = run_paths([str(tree)], rules=["error-surface"])
+    assert not findings_of(report, "error-surface")
+
+
+def test_error_surface_missing_retry_after(tmp_path):
+    api = """
+        ERROR_STATUS = {"INTERNAL": 500, "QUEUE_FULL": 429}
+
+        def dispatch(resp):
+            return resp
+    """
+    tree = write_tree(tmp_path, {"repro/core/api.py": api})
+    report = run_paths([str(tree)], rules=["error-surface"])
+    assert any("Retry-After" in f.message for f in findings_of(report, "error-surface"))
+
+
+def test_error_surface_retire_without_trace_finish(tmp_path):
+    sched = """
+        class Sched:
+            def _retire(self, req):
+                self.tracer.finish(req.rid)
+
+            def good_path(self, req):
+                req.error_code = "INTERNAL"
+                self._retire(req)
+
+            def leaky_path(self, req):
+                req.error_code = "QUEUE_FULL"
+                del self.active[req.slot]
+    """
+    tree = write_tree(
+        tmp_path,
+        {"repro/core/api.py": API_FIXTURE, "repro/serving/sched.py": sched},
+    )
+    report = run_paths([str(tree)], rules=["error-surface"])
+    hits = findings_of(report, "error-surface")
+    assert len(hits) == 1 and "leaky_path" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# pragmas & reporting
+# ---------------------------------------------------------------------------
+
+
+def test_pragma_without_reason_is_flagged(tmp_path):
+    src = """
+        import time
+
+        def f():
+            # maxlint: allow[clock-discipline]
+            return time.time()
+    """
+    tree = write_tree(tmp_path, {"repro/serving/p.py": src})
+    report = run_paths([str(tree)])
+    # the clock finding is suppressed, but the reasonless pragma is its own
+    pragma_hits = findings_of(report, "pragma")
+    assert len(pragma_hits) == 1 and "no reason" in pragma_hits[0].message
+    assert not findings_of(report, "clock-discipline")
+    assert len(report.suppressed) == 1
+
+
+def test_pragma_unknown_rule_is_flagged(tmp_path):
+    src = """
+        def f():
+            # maxlint: allow[no-such-rule] reason=oops
+            return 1
+    """
+    tree = write_tree(tmp_path, {"repro/serving/p.py": src})
+    report = run_paths([str(tree)])
+    assert any("unknown rule" in f.message for f in findings_of(report, "pragma"))
+
+
+def test_json_report_shape(tmp_path):
+    src = """
+        import time
+
+        def f():
+            return time.time()
+    """
+    tree = write_tree(tmp_path, {"repro/serving/p.py": src})
+    report = run_paths([str(tree)], rules=["clock-discipline"])
+    doc = json.loads(render_json(report))
+    assert doc["version"] == 1
+    assert doc["summary"]["findings"] == 1
+    assert doc["summary"]["clean"] is False
+    f = doc["findings"][0]
+    assert {"rule", "path", "line", "col", "message"} <= set(f)
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+
+def test_tree_is_clean():
+    report = run_paths([str(SRC)])
+    assert report.findings == [], "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in report.findings
+    )
+    # every suppression in the tree carries a written reason
+    assert all(f.suppress_reason for f in report.suppressed)
+    # the sanctioned chunk-boundary sync is present and suppressed, not absent
+    sched_syncs = [
+        f
+        for f in report.suppressed
+        if f.rule == "host-sync" and f.path.endswith("scheduler.py")
+    ]
+    assert len(sched_syncs) >= 2
+
+
+def test_cli_strict_clean_on_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict", str(SRC)],
+        capture_output=True,
+        text=True,
+        cwd=str(REPO),
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exit_nonzero_on_violation(tmp_path):
+    # re-introducing a fixed violation must fail the run (CI regression gate)
+    bad = """
+        import time
+
+        def generate():
+            t0 = time.perf_counter()
+            return t0
+    """
+    tree = write_tree(tmp_path, {"repro/serving/enginefix.py": bad})
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(tree)],
+        capture_output=True,
+        text=True,
+        cwd=str(REPO),
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1
+    assert "clock-discipline" in proc.stdout
