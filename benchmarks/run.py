@@ -44,6 +44,12 @@ architectural. Each benchmark below pins one of them to a number:
                           (also into BENCH_serving.json; part of
                           `--quick`; `--chaos-quick` runs ONLY this
                           fault smoke)
+  fleet_rps_scaling       replica-group scaling: requests/s at 2 replicas
+                          vs 1 under a deterministic per-tick stall
+                          profile, forced-8-device subprocess harness
+                          (also into BENCH_serving.json; part of
+                          `--quick`, fails when 2 replicas lose the
+                          >=1.5x rps edge)
   kernel_<name>           Pallas kernel (interpret) vs jnp oracle allclose +
                           oracle timing (CPU container: correctness-scale)
   roofline_terms          derived from the dry-run records (see
@@ -946,6 +952,67 @@ def bench_robustness(out_path: str = "BENCH_serving.json",
     return ok_comp and ok_ident and ok_good
 
 
+def bench_fleet(out_path: str = "BENCH_serving.json",
+                quick: bool = False) -> bool:
+    """Replica-group rps scaling: 1 vs 2 replicas under stall faults.
+
+    Runs in a subprocess with ``--xla_force_host_platform_device_count=8``
+    so the 2-replica placement lands on real (forced) multi-device slices
+    — the parent process already initialized jax with this container's
+    single device and cannot re-init. The harness interleaves paired
+    1-vs-2-replica trials; see ``fleet_harness.py`` for the scenario
+    design (why the gate lives on the stall scenario, not the fault-free
+    one, on a 1-core container).
+
+    Gate (``--quick``): stall-scenario rps at 2 replicas >= 1.5x the
+    1-replica rps, best paired trial.
+    """
+    import subprocess
+    import sys
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(here, "..", "src"),
+                    env.get("PYTHONPATH")) if p)
+    cmd = [sys.executable, os.path.join(here, "fleet_harness.py")]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=900)
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("{")]
+    if proc.returncode != 0 or not lines:
+        gate("fleet_rps_scaling", False,
+             f"harness exit {proc.returncode}", ">= 1.5x (harness failed)")
+        row("fleet_rps_scaling", 0.0,
+            f"harness failed: {proc.stderr.strip()[-200:]}")
+        return False
+    rep = json.loads(lines[-1])
+    ratio = rep["stall"]["ratio"]
+    entry = {
+        "devices": rep["devices"],
+        "requests": rep["requests"],
+        "stall_rps_1_replica": rep["stall"]["rps_1_replica"],
+        "stall_rps_2_replicas": rep["stall"]["rps_2_replicas"],
+        "stall_ratio": ratio,
+        "plain_ratio": rep["plain"]["ratio"],
+        "slices": rep["stall"]["slices"],
+    }
+    key = "fleet_quick" if quick else "fleet"
+    ok = gate("fleet_rps_scaling", ratio >= 1.5, f"{ratio}x",
+              ">= 1.5x rps at 2 replicas (stall scenario)")
+    _merge_bench(out_path, {key: entry})
+    row("fleet_rps_scaling", 0.0,
+        f"stall={ratio}x plain={entry['plain_ratio']}x "
+        f"devices={entry['devices']} slices={entry['slices']} "
+        f"-> {out_path}")
+    return ok
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -1019,8 +1086,9 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="run only the gated smokes (QoS overload, fused "
                          "decode, streaming TTFT, paged KV, prefix cache, "
-                         "tracing overhead, fault-injection robustness — "
-                         "<30s each); exit nonzero if any gate fails, "
+                         "tracing overhead, fault-injection robustness, "
+                         "fleet rps scaling — <60s each); exit nonzero "
+                         "if any gate fails, "
                          "printing EVERY failing gate with measured vs "
                          "bound")
     ap.add_argument("--chaos-quick", action="store_true",
@@ -1037,7 +1105,8 @@ def main(argv=None) -> None:
                   ("paged-kv", bench_paged_kv),
                   ("prefix-cache", bench_prefix_cache),
                   ("observability", bench_observability),
-                  ("robustness", bench_robustness)]
+                  ("robustness", bench_robustness),
+                  ("fleet", bench_fleet)]
         for name, fn in smokes:
             ok = fn(quick=True)
             print(f"# quick {name} smoke: {'ok' if ok else 'REGRESSION'}",
@@ -1059,6 +1128,7 @@ def main(argv=None) -> None:
     bench_prefix_cache()
     bench_observability()
     bench_robustness()
+    bench_fleet()
     bench_kernels()
     bench_roofline_terms()
     print_gate_report()     # informational in the full run (exit stays 0)

@@ -17,6 +17,8 @@ health.
         # span timelines, slow-request capture, Perfetto export
     PYTHONPATH=src python examples/serve_http.py --chaos   # robustness demo:
         # armed fault injection, safe retries, brownout + /v2/health
+    PYTHONPATH=src python examples/serve_http.py --replicas  # fleet demo:
+        # replica groups, session affinity, elastic scale up/down
 """
 
 import argparse
@@ -506,6 +508,68 @@ def chaos_demo():
               f"shed={rob['brownout']['shed']}")
 
 
+def replicas_demo():
+    """Fleet serving: deploy one model as a 2-replica group, watch the
+    front door spread distinct clients and pin each client to its home
+    replica (``X-MAX-Client`` session affinity), then scale the live
+    fleet up to 3 and back down to 1 — the drained replicas migrate
+    still-queued work onto the survivors instead of dropping it."""
+    with MAXServer(build_kw={"max_seq": 64, "max_batch": 4},
+                   auto_deploy=False,
+                   service_kw={"batch_window_s": 0.01}) as server:
+        print(f"MAX serving at {server.url}")
+        dep = post(server.url, "/v2/model/qwen3-4b/deploy",
+                   {"replicas": 2})
+        print(f"deployed replicas={dep['replicas']}")
+        health = get(server.url, "/v2/health")
+        fleet = health["deployments"]["qwen3-4b"]["fleet"]
+        for name, rep in sorted(
+                health["deployments"]["qwen3-4b"]["replicas"].items()):
+            print(f"  {name}: ready={rep['ready']} "
+                  f"degradation={rep['degradation']}")
+
+        # distinct clients spread; each client sticks to its home replica
+        results, threads = {}, []
+        for i in range(8):
+
+            def work(i=i):
+                results[i] = post(
+                    server.url, "/v2/model/qwen3-4b/predict",
+                    {"input": {"text": f"hello {i}", "max_new_tokens": 4}},
+                    headers={"X-MAX-Client": f"user-{i % 4}"})
+
+            th = threading.Thread(target=work)
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join()
+        ok = sum(1 for env in results.values()
+                 if env.get("status") == "ok")
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        print(f"\n8 requests from 4 clients: {ok}/8 ok")
+        print(f"  dispatch: {json.dumps(stats['dispatch'])}")
+        for name, rep in sorted(stats["per_replica"].items()):
+            print(f"  {name}: submitted={rep['submitted']} "
+                  f"completed={rep['completed']}")
+
+        # elastic scaling: redeploy with a new count, fleet scales in
+        # place (scale-down drains and migrates queued work)
+        post(server.url, "/v2/model/qwen3-4b/deploy", {"replicas": 3})
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        print(f"\nscaled up: replicas={stats['replicas']} "
+              f"placement={[d['slice'] for d in stats['placement']]}")
+        post(server.url, "/v2/model/qwen3-4b/deploy", {"replicas": 1})
+        stats = get(server.url, "/v2/model/qwen3-4b/stats")["service"]
+        env = post(server.url, "/v2/model/qwen3-4b/predict",
+                   {"input": {"text": "still serving",
+                              "max_new_tokens": 4}})
+        print(f"scaled down: replicas={stats['replicas']} "
+              f"migrated_on_drain={stats['migrated_on_drain']} "
+              f"post-scale predict -> {env['status']}")
+        print(f"fleet events: scale_events={stats['scale_events']} "
+              f"(was {fleet['size']} at deploy)")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--qos", action="store_true",
@@ -523,6 +587,9 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="run the fault-injection robustness demo "
                          "(safe retries, brownout, /v2/health)")
+    ap.add_argument("--replicas", action="store_true",
+                    help="run the fleet-serving demo (replica groups, "
+                         "session affinity, elastic scale up/down)")
     args = ap.parse_args()
     if args.qos:
         qos_demo()
@@ -536,5 +603,7 @@ if __name__ == "__main__":
         trace_demo()
     elif args.chaos:
         chaos_demo()
+    elif args.replicas:
+        replicas_demo()
     else:
         main()

@@ -5,3 +5,4 @@ from repro.analysis.rules import host_sync  # noqa: F401
 from repro.analysis.rules import locks  # noqa: F401
 from repro.analysis.rules import exceptions  # noqa: F401
 from repro.analysis.rules import errors  # noqa: F401
+from repro.analysis.rules import replica  # noqa: F401

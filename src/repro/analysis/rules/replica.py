@@ -1,0 +1,136 @@
+"""replica-discipline: engines are built by factories, replicas share nothing.
+
+Replica groups multiply every piece of serving state by N.  Two classes
+of bug follow directly:
+
+1. **Engine construction outside the factory path.**  A
+   ``GenerationEngine`` built ad hoc (in a handler, a service method, a
+   test helper that leaked into ``src/``) bypasses the asset ``build``
+   path that replica spawning goes through, so the engine lands on
+   whatever device happens to be default — not on the replica's mesh
+   slice — and is invisible to the fleet's placement accounting.
+   Engines may be constructed only in the designated factory modules
+   (``repro.core.assets``, which owns asset ``build``, and
+   ``repro.serving.engine`` itself).
+
+2. **Module-level mutable state in the serving stack.**  A module-level
+   ``[]`` / ``{}`` / ``set()`` is process-global: with N replicas in one
+   process it silently becomes *shared* state across replicas (and
+   across deployments), defeating the whole isolation story.  The same
+   goes for mutable default parameter values, which alias one object
+   across every call — and therefore across every replica's worker
+   thread.  Constants are fine; declare them as tuples/frozensets or
+   build them inside ``__init__``.
+
+Suppress intentionally-global registries with
+``# maxlint: allow[replica-discipline] reason=...``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import AnalysisContext, Finding, Rule, register
+
+# the only modules allowed to call the engine constructor: the asset
+# build path (what ReplicaSet._spawn runs per slice) and the engine's own
+# module
+FACTORY_MODULES = {"repro.core.assets", "repro.serving.engine"}
+ENGINE_TARGETS = {"repro.serving.engine.GenerationEngine",
+                  "GenerationEngine"}
+# mutable-state scan scope: the serving stack proper (module-level) plus
+# core (defaults); launch/analysis/benchmarks host no replica state
+STATE_SCOPES = ("repro.serving",)
+DEFAULT_SCOPES = ("repro.serving", "repro.core")
+MUTABLE_CALLS = {"list", "dict", "set"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in MUTABLE_CALLS
+            and not node.args and not node.keywords)
+
+
+@register
+class ReplicaRule(Rule):
+    name = "replica-discipline"
+    doc = ("engines come from the factory path; serving modules hold no "
+           "module-level or default-arg mutable state (shared across "
+           "replicas)")
+
+    def _engine_findings(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        for m in ctx.modules_under("repro"):
+            if m.modname in FACTORY_MODULES:
+                continue
+            for node in ast.walk(m.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                target = None
+                if isinstance(fn, ast.Name):
+                    target = m.aliases.get(fn.id, fn.id)
+                elif (isinstance(fn, ast.Attribute)
+                      and isinstance(fn.value, ast.Name)):
+                    base = m.aliases.get(fn.value.id, fn.value.id)
+                    target = f"{base}.{fn.attr}"
+                if target in ENGINE_TARGETS:
+                    yield Finding(
+                        rule=self.name, path=m.rel,
+                        line=node.lineno, col=node.col_offset,
+                        message=("GenerationEngine constructed outside "
+                                 "the factory path (repro.core.assets); "
+                                 "replica placement and fleet accounting "
+                                 "cannot see this engine"))
+
+    def _module_state_findings(self, ctx: AnalysisContext
+                               ) -> Iterator[Finding]:
+        for m in ctx.modules_under(*STATE_SCOPES):
+            for node in m.tree.body:         # module level only
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AnnAssign) \
+                        and node.value is not None:
+                    targets, value = [node.target], node.value
+                else:
+                    continue
+                if not _is_mutable_literal(value):
+                    continue
+                names = [t.id for t in targets if isinstance(t, ast.Name)]
+                if not names:
+                    continue
+                yield Finding(
+                    rule=self.name, path=m.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"module-level mutable "
+                             f"{', '.join(names)} is process-global "
+                             "state shared across replicas; make it "
+                             "immutable or move it into instance state"))
+
+    def _default_findings(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        for m in ctx.modules_under(*DEFAULT_SCOPES):
+            for node in ast.walk(m.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                args = node.args
+                for default in list(args.defaults) \
+                        + [d for d in args.kw_defaults if d is not None]:
+                    if _is_mutable_literal(default):
+                        yield Finding(
+                            rule=self.name, path=m.rel,
+                            line=default.lineno, col=default.col_offset,
+                            message=(f"mutable default argument in "
+                                     f"{node.name}(): one object is "
+                                     "aliased across every call and "
+                                     "every replica; default to None "
+                                     "and construct inside the body"))
+
+    def check(self, ctx: AnalysisContext) -> Iterator[Finding]:
+        yield from self._engine_findings(ctx)
+        yield from self._module_state_findings(ctx)
+        yield from self._default_findings(ctx)

@@ -75,6 +75,9 @@ from repro.core.service import ServiceOverloaded
 from repro.core.wrapper import MAXError, PromptTooLong
 from repro.serving.faults import BrownoutConfig, FaultSpec
 from repro.serving.qos import PRIORITIES, AdmissionError
+from repro.serving.replica import (
+    MeshSliceError, live_device_count, parse_mesh_slice,
+)
 
 API_VERSION = "v1"          # of the back-compat surface
 API_VERSIONS = ("v1", "v2")
@@ -84,6 +87,9 @@ ERROR_STATUS = {
     "BAD_JSON": 400,
     "MISSING_INPUT": 400,
     "INVALID_INPUT": 400,
+    # malformed / out-of-range / overlapping replica mesh-slice spec —
+    # rejected by the parser before any deployment is touched
+    "INVALID_MESH_SLICE": 400,
     "MODEL_NOT_FOUND": 404,
     "NOT_DEPLOYED": 404,
     "JOB_NOT_FOUND": 404,
@@ -264,8 +270,11 @@ def build_router(server: Optional["MAXServer"] = None) -> Router:
                   " enable content-addressed KV page sharing on top of it,"
                   " and the trace knobs size request-lifecycle tracing /"
                   " slow-request capture; 'faults': {...} arms deterministic"
-                  " fault injection and 'brownout': {...} tunes the"
-                  " NORMAL/SOFT/HARD degradation controller)")
+                  " fault injection (a list gives one spec per replica) and"
+                  " 'brownout': {...} tunes the NORMAL/SOFT/HARD degradation"
+                  " controller; 'replicas': N with optional 'mesh_slice'"
+                  " deploys a replica group on disjoint device slices behind"
+                  " a least-loaded, session-affine front door)")
     r.add("DELETE", "/v2/model/{model_id}", h("_h_undeploy"),
           summary="Undeploy an asset")
     r.add("GET", "/v2/model/{model_id}/stats", h("_h_stats_v2"),
@@ -790,13 +799,25 @@ class MAXServer:
         Perfetto process per model. Timestamps share one monotonic clock,
         so multi-deployment lanes line up."""
         events = []
-        for pid, asset_id in enumerate(self.manager.deployed(), start=1):
+        pid = 0
+        for asset_id in self.manager.deployed():
             try:
                 service = self.manager.get(asset_id).service
             except KeyError:
                 continue            # undeployed between list and get
+            # a fleet exports one process group per replica (each replica
+            # has its own tracer); pid keeps incrementing across lanes so
+            # every process row in Perfetto is distinct
+            replica_tracers = getattr(service, "replica_tracers", None)
+            if replica_tracers is not None:
+                for rname, tracer in replica_tracers():
+                    pid += 1
+                    events.extend(tracer.to_chrome(
+                        pid=pid, process_name=f"{asset_id}/{rname}"))
+                continue
             tracer = getattr(service, "tracer", None)
             if tracer is not None:
+                pid += 1
                 events.extend(tracer.to_chrome(pid=pid,
                                                process_name=asset_id))
         # the Chrome trace-event container format: an object with a
@@ -812,6 +833,28 @@ class MAXServer:
         qos = body.get("qos")
         if qos is not None and not isinstance(qos, dict):
             raise ApiError("INVALID_INPUT", "'qos' must be an object")
+        # fleet knobs: replica count + device-slice placement, both
+        # validated here — a bad spec answers 400 before any teardown
+        replicas = body.get("replicas")
+        if replicas is not None and (isinstance(replicas, bool)
+                                     or not isinstance(replicas, int)
+                                     or replicas < 1):
+            raise ApiError("INVALID_INPUT",
+                           "'replicas' must be a positive integer")
+        mesh_slice = body.get("mesh_slice")
+        if mesh_slice is not None and not isinstance(mesh_slice, str):
+            raise ApiError("INVALID_INPUT", "'mesh_slice' must be a string")
+        if mesh_slice is not None or (replicas or 1) > 1:
+            if replicas is not None and replicas > 1 and mode == "sync":
+                raise ApiError("INVALID_INPUT",
+                               "replica groups require the batched "
+                               "service ('service': 'sync' cannot host "
+                               "a fleet)")
+            try:
+                parse_mesh_slice(mesh_slice, replicas=replicas or 1,
+                                 device_count=live_device_count())
+            except MeshSliceError as e:
+                raise ApiError("INVALID_MESH_SLICE", str(e)) from None
         # KV cache layout knobs: paged (vLLM-style block tables) plus its
         # page size / pool size; an explicit request redeploys like an
         # explicit qos does
@@ -897,14 +940,44 @@ class MAXServer:
         # validate-before-teardown reason as the kv/qos knobs (a bad spec
         # must not leave the model undeployed)
         if body.get("faults") is not None:
-            if not isinstance(body["faults"], dict):
-                raise ApiError("INVALID_INPUT", "'faults' must be an object")
-            try:
-                FaultSpec.from_json(body["faults"])
-            except (TypeError, ValueError) as e:
+            faults = body["faults"]
+            if isinstance(faults, list):
+                # per-replica fault specs (chaos-test one replica while
+                # its siblings stay clean); one entry per replica slot
+                if (replicas or 1) < 2:
+                    raise ApiError(
+                        "INVALID_INPUT",
+                        "a 'faults' list requires 'replicas' > 1 "
+                        "(one spec per replica)")
+                if len(faults) > replicas:
+                    raise ApiError(
+                        "INVALID_INPUT",
+                        f"'faults' lists {len(faults)} specs for "
+                        f"{replicas} replicas")
+                for i, spec in enumerate(faults):
+                    if spec is None:
+                        continue
+                    if not isinstance(spec, dict):
+                        raise ApiError("INVALID_INPUT",
+                                       f"'faults'[{i}] must be an object "
+                                       "or null")
+                    try:
+                        FaultSpec.from_json(spec)
+                    except (TypeError, ValueError) as e:
+                        raise ApiError(
+                            "INVALID_INPUT",
+                            f"bad 'faults'[{i}] spec: {e}") from None
+            elif isinstance(faults, dict):
+                try:
+                    FaultSpec.from_json(faults)
+                except (TypeError, ValueError) as e:
+                    raise ApiError("INVALID_INPUT",
+                                   f"bad 'faults' spec: {e}") from None
+            else:
                 raise ApiError("INVALID_INPUT",
-                               f"bad 'faults' spec: {e}") from None
-            service_overrides["faults"] = body["faults"]
+                               "'faults' must be an object (all replicas) "
+                               "or a list of objects (per replica)")
+            service_overrides["faults"] = faults
         if body.get("brownout") is not None:
             if not isinstance(body["brownout"], dict):
                 raise ApiError("INVALID_INPUT",
@@ -918,6 +991,8 @@ class MAXServer:
         try:
             dep = self.manager.deploy(ctx.params["model_id"],
                                       service_mode=mode, qos=qos,
+                                      mesh_slice=mesh_slice,
+                                      replicas=replicas,
                                       force=bool(engine_kw)
                                       or bool(service_overrides),
                                       service_overrides=service_overrides
@@ -925,15 +1000,20 @@ class MAXServer:
                                       **{**self.build_kw, **engine_kw})
         except KeyError as e:
             raise ApiError("MODEL_NOT_FOUND", str(e)) from None
+        except MeshSliceError as e:
+            raise ApiError("INVALID_MESH_SLICE", str(e)) from None
         except ValueError as e:     # mode/qos infeasible for this wrapper
             raise ApiError("INVALID_INPUT", str(e)) from None
         cfg = dep.service.qos_cfg
         out = {"status": "ok", "model_id": dep.asset_id,
                "service": dep.service.kind,
+               "replicas": getattr(dep.service, "size", 1),
                "qos": {"policy": cfg.policy, "rate": cfg.rate,
                        "max_queue_per_class": cfg.max_queue,
                        "class_weights": dict(cfg.class_weights)},
                "deployed": self.manager.deployed()}
+        if dep.mesh_slice is not None:
+            out["mesh_slice"] = dep.mesh_slice
         engine = getattr(dep.wrapper, "engine", None)
         if engine is not None:
             out["kv_cache"] = engine.kv_stats()

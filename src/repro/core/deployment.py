@@ -28,10 +28,12 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.core.fleet import ReplicaSet
 from repro.core.registry import ModelRegistry, EXCHANGE
 from repro.core.service import InferenceService, Job, make_service
 from repro.core.wrapper import MAXModelWrapper
 from repro.serving.metrics import MetricsRegistry
+from repro.serving.replica import live_device_count, parse_mesh_slice
 from repro.serving.tracing import now as _now
 from repro.serving.qos import QoSConfig
 
@@ -128,6 +130,7 @@ class DeploymentManager:
         self._lock = threading.Lock()
 
     def deploy(self, asset_id: str, *, mesh_slice: Optional[str] = None,
+               replicas: Optional[int] = None,
                service_mode: Optional[str] = None,
                qos: Optional[Any] = None, force: bool = False,
                service_overrides: Optional[Dict[str, Any]] = None,
@@ -136,24 +139,70 @@ class DeploymentManager:
         tracing knobs ``trace``/``trace_buffer``/``slow_trace_ms``) merged
         over the manager-wide ``service_kw`` — callers that pass them
         should also pass ``force=True`` so they take effect on a live
-        deployment, mirroring the engine-knob rule."""
+        deployment, mirroring the engine-knob rule.
+
+        ``replicas: N`` (N > 1) deploys a :class:`ReplicaSet` — N batched
+        replicas on disjoint ``mesh_slice`` partitions behind one
+        replica-aware front door. Re-deploying a live fleet with a
+        different N scales it in place (drain-and-migrate on the way
+        down) instead of tearing it down, unless ``qos``/``force``/a
+        concrete mode demand a rebuild. ``replicas: 1`` / ``None`` keeps
+        the classic single-service path untouched."""
         if qos is not None and not isinstance(qos, QoSConfig):
             qos = QoSConfig.from_json(qos)    # validate before any teardown
+        if replicas is not None and (isinstance(replicas, bool)
+                                     or not isinstance(replicas, int)
+                                     or replicas < 1):
+            raise ValueError(
+                f"replicas must be a positive integer, got {replicas!r}")
+        # parse/validate the slice up front — a malformed or overlapping
+        # spec must never tear down the running deployment first
+        placement = None
+        if replicas is not None and replicas > 1:
+            if (service_mode or self.service_mode) == "sync":
+                raise ValueError(
+                    "replica groups require the batched service "
+                    "(service_mode 'sync' cannot host a fleet)")
+            placement = parse_mesh_slice(mesh_slice, replicas=replicas,
+                                         device_count=live_device_count())
+        elif mesh_slice is not None:
+            parse_mesh_slice(mesh_slice, replicas=1,
+                             device_count=live_device_count())
         while True:
             with self._lock:
                 dep = self._deployments.get(asset_id)
             if dep is not None:
+                cur = getattr(dep.service, "size", None) \
+                    if dep.service.kind == "fleet" else None
+                if (replicas is not None and cur is not None
+                        and qos is None and not force
+                        and service_mode in (None, "auto")):
+                    # live fleet, compatible knobs: scale in place
+                    if replicas != cur:
+                        spec = mesh_slice if mesh_slice is not None \
+                            else dep.service.placement.spec
+                        dep.service.scale(
+                            replicas,
+                            placement=parse_mesh_slice(
+                                spec, replicas=replicas,
+                                device_count=live_device_count()))
+                        if mesh_slice is not None:
+                            dep.mesh_slice = mesh_slice
+                    return dep
+                replicas_ok = (replicas is None
+                               or (replicas == 1 and cur is None))
                 # an explicitly requested concrete mode replaces a
                 # deployment of a different kind, and an explicit QoS
                 # config — or ``force`` (explicit engine knobs like the
                 # paged-KV layout) — always redeploys ("auto"/None accept
                 # whatever is running) — silently returning the old
                 # service would drop the operator's request
-                if (qos is None and not force
+                if (replicas_ok and qos is None and not force
                         and (service_mode in (None, "auto")
                              or dep.service.kind == service_mode)):
                     return dep
-                if (service_mode == "batched"
+                if ((service_mode == "batched"
+                     or (replicas is not None and replicas > 1))
                         and not dep.wrapper.supports_generation()):
                     # reject BEFORE tearing down the healthy deployment
                     raise ValueError(
@@ -172,15 +221,23 @@ class DeploymentManager:
             done.wait()
         try:
             asset = self.registry.get(asset_id)
-            wrapper = asset.build(**build_kw)       # the "container start"
             service_kw = dict(self.service_kw)
             service_kw.setdefault("metrics", self.metrics)
             if qos is not None:
                 service_kw["qos"] = qos             # per-deploy override
             if service_overrides:
                 service_kw.update(service_overrides)
-            service = make_service(
-                wrapper, service_mode or self.service_mode, **service_kw)
+            if replicas is not None and replicas > 1:
+                # each replica is its own "container start": the factory
+                # builds one engine per slice inside ReplicaSet._spawn
+                service: InferenceService = ReplicaSet(
+                    lambda: asset.build(**build_kw),
+                    replicas=replicas, placement=placement, **service_kw)
+            else:
+                wrapper = asset.build(**build_kw)   # the "container start"
+                service = make_service(
+                    wrapper, service_mode or self.service_mode,
+                    **service_kw)
             dep = Deployment(asset_id, service, mesh_slice=mesh_slice)
             with self._lock:
                 self._deployments[asset_id] = dep
@@ -219,6 +276,7 @@ class DeploymentManager:
                 "mean_latency_ms": round(d.stats.mean_latency_ms, 2),
                 "mesh_slice": d.mesh_slice,
                 "service": d.service.kind,
+                "replicas": getattr(d.service, "size", 1),
             }
             for aid, d in list(self._deployments.items())
         }

@@ -114,7 +114,8 @@ class Route:
 
     def to_json(self) -> Dict[str, Any]:
         return {"method": self.method, "path": self.template,
-                "summary": self.summary, "version": self.version}
+                "summary": self.summary, "version": self.version,
+                "media": self.response_media}
 
 
 class Router:

@@ -919,6 +919,7 @@ class BatchedService(InferenceService):
         self._inflight: Dict[int, _Work] = {}
         self._cv = threading.Condition()
         self._closed = False
+        self._draining = False            # fleet drain: stop admitting
         self._worker_error: Optional[str] = None
         # -- supervision / retry / brownout --------------------------------
         self.max_retries = max(0, int(max_retries))
@@ -1067,6 +1068,13 @@ class BatchedService(InferenceService):
         with self._cv:
             if self._closed:
                 raise MAXError(f"service for {self.model_id!r} is closed")
+            if self._draining:
+                # a draining replica finishes what it holds but admits
+                # nothing new — the fleet dispatcher fails over to a
+                # surviving replica on this rejection
+                self.batch_stats.rejected += 1
+                raise ServiceOverloaded(
+                    f"replica for {self.model_id!r} is draining")
             try:
                 work.request = self.scheduler.submit(
                     prompt, extra=extra,
@@ -1619,6 +1627,52 @@ class BatchedService(InferenceService):
             self._maybe_rebuild()
         self._reap()
 
+    # -- fleet hooks (replica groups) --------------------------------------
+
+    def load(self) -> int:
+        """Dispatch-load signal for the fleet's least-loaded picker:
+        queued + occupied decode slots + parked retries (point-in-time
+        reads; never blocks behind the worker)."""
+        return (self.scheduler.queued_count()
+                + self.scheduler.active_count() + len(self._retry_q))
+
+    def begin_drain(self):
+        """Stop admitting new work (fleet scale-down): everything already
+        accepted still runs to completion; fresh submissions raise
+        :class:`ServiceOverloaded` so the dispatcher fails over to a
+        surviving replica."""
+        with self._cv:
+            self._draining = True
+            self._cv.notify_all()
+
+    def idle(self) -> bool:
+        """True when nothing is queued, active, or parked for retry."""
+        with self._cv:
+            return (not self._inflight and not self._retry_q
+                    and not self.scheduler.has_work())
+
+    def export_restartable(self) -> List["_Work"]:
+        """Detach every zero-delivery in-flight work (queued, active, or
+        parked for retry) so the fleet can resubmit it on a surviving
+        replica. Safe for the same reason the fault-retry path is: no
+        token has reached a client, and greedy decode makes the replayed
+        run token-identical. Work that already delivered tokens stays
+        behind to finish on this replica."""
+        out: List[_Work] = []
+        with self._cv:
+            for rid in [rid for rid, w in self._inflight.items()
+                        if not w.delivered]:
+                out.append(self._inflight.pop(rid))
+            out.extend(w for _, w in self._retry_q)
+            self._retry_q.clear()
+        for w in out:
+            # retire the old scheduler entry (frees its slot / queue spot);
+            # the _Work is no longer tracked here, so the CANCELLED retire
+            # has nothing to finalize on this service
+            if w.request is not None:
+                self.scheduler.cancel(w.request.id)
+        return out
+
     # -- introspection / lifecycle ----------------------------------------
 
     def health(self) -> Dict[str, Any]:
@@ -1632,7 +1686,9 @@ class BatchedService(InferenceService):
             state = self._brownout.observe(self._queue_frac())
         return {
             "live": not self._closed,
-            "ready": (not self._closed) and alive and state != "hard",
+            "ready": (not self._closed and not self._draining
+                      and alive and state != "hard"),
+            "draining": self._draining,
             "degradation": state,
             "worker_alive": alive,
             "worker_restarts": self.worker_restarts,

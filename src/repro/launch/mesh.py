@@ -53,3 +53,30 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
 
 def num_chips(mesh: Mesh) -> int:
     return mesh.devices.size
+
+
+# -- topology geometry (pure; no device access) -----------------------------
+
+#: rows per pod and chips per row in the production topology — the
+#: coordinate system ``mesh_slice`` strings ("pod0/rows0-7") address.
+ROWS_PER_POD = SINGLE_POD_SHAPE[0]
+CHIPS_PER_ROW = SINGLE_POD_SHAPE[1]
+NUM_PODS = MULTI_POD_SHAPE[0]
+
+
+def pod_row_chips(pod: int, row_lo: int, row_hi: int) -> tuple:
+    """Flat chip indices of rows ``[row_lo, row_hi]`` (inclusive) of
+    ``pod`` in the production topology. Chips are row-major within a pod;
+    pods are consecutive ``ROWS_PER_POD * CHIPS_PER_ROW``-chip blocks —
+    the same ordering ``make_production_mesh`` lays devices out in, so a
+    row range is a contiguous, disjointly-partitionable device span."""
+    if not 0 <= pod < NUM_PODS:
+        raise ValueError(f"pod {pod} out of range (topology has "
+                         f"{NUM_PODS} pods)")
+    if not 0 <= row_lo <= row_hi < ROWS_PER_POD:
+        raise ValueError(
+            f"rows {row_lo}-{row_hi} out of range (each pod has "
+            f"{ROWS_PER_POD} rows)")
+    base = pod * ROWS_PER_POD * CHIPS_PER_ROW
+    return tuple(range(base + row_lo * CHIPS_PER_ROW,
+                       base + (row_hi + 1) * CHIPS_PER_ROW))

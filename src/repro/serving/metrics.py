@@ -123,6 +123,61 @@ class Histogram:
             return out
 
 
+class LabelledRegistry:
+    """A view of a :class:`MetricsRegistry` that stamps fixed labels onto
+    every series it records.
+
+    The fleet layer hands each replica's service a
+    ``LabelledRegistry(base, replica="rN")`` so the whole existing metric
+    surface (QoS counters, phase histograms, KV gauges) gains a
+    ``replica`` dimension without touching a single call site; explicit
+    labels at the call site win over the stamped ones. Gauge teardown
+    composes the same way: a replica's ``unregister_gauges(model=...)``
+    carries its ``replica`` label, so closing one replica never drops a
+    sibling's gauges."""
+
+    def __init__(self, base: "MetricsRegistry", **labels):
+        self._base = base
+        self._labels = {k: str(v) for k, v in labels.items()}
+
+    def _merge(self, labels: Dict[str, Any]) -> Dict[str, Any]:
+        return {**self._labels, **labels}
+
+    def describe(self, name: str, help_text: str):
+        self._base.describe(name, help_text)
+
+    def counter(self, name: str, **labels) -> "Counter":
+        return self._base.counter(name, **self._merge(labels))
+
+    def inc(self, name: str, n: float = 1.0, **labels):
+        self._base.inc(name, n, **self._merge(labels))
+
+    def histogram(self, name: str,
+                  buckets: Optional[Tuple[float, ...]] = None,
+                  **labels) -> "Histogram":
+        return self._base.histogram(name, buckets=buckets,
+                                    **self._merge(labels))
+
+    def observe(self, name: str, value: float, **labels):
+        self._base.observe(name, value, **self._merge(labels))
+
+    def register_gauge(self, name: str, fn: Callable[[], float], **labels):
+        self._base.register_gauge(name, fn, **self._merge(labels))
+
+    def unregister_gauges(self, **labels):
+        self._base.unregister_gauges(**self._merge(labels))
+
+    @property
+    def created_at(self) -> float:
+        return self._base.created_at
+
+    def to_json(self) -> Dict[str, Any]:
+        return self._base.to_json()
+
+    def to_prometheus(self) -> str:
+        return self._base.to_prometheus()
+
+
 class MetricsRegistry:
     """Named, labelled counters/histograms with two renderings."""
 

@@ -36,7 +36,8 @@ import itertools
 import math
 import threading
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
+from types import MappingProxyType
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.serving.metrics import MetricsRegistry
@@ -45,9 +46,9 @@ from repro.serving.tracing import now as tracing_now
 #: priority classes, highest first — order is the tiebreak in WRR
 PRIORITIES: Tuple[str, ...] = ("interactive", "batch", "best_effort")
 
-DEFAULT_CLASS_WEIGHTS: Dict[str, int] = {
+DEFAULT_CLASS_WEIGHTS: Mapping[str, int] = MappingProxyType({
     "interactive": 8, "batch": 3, "best_effort": 1,
-}
+})
 
 DEFAULT_CLIENT = "anon"
 
@@ -161,6 +162,16 @@ class QoSConfig:
         known = [c for c in PRIORITIES if c in self.class_weights]
         extra = sorted(c for c in self.class_weights if c not in PRIORITIES)
         return known + extra
+
+    def for_replica(self) -> "QoSConfig":
+        """Per-replica copy with client rate limiting stripped: the fleet
+        front door charges each client's token bucket once, globally;
+        replicas keep the queue bounds and DRR ordering only. Without the
+        strip, a dispatched request would be charged twice and every
+        client's effective rate would halve."""
+        if self.rate is None:
+            return self
+        return _dc_replace(self, rate=None, burst=None)
 
     @classmethod
     def from_json(cls, d: Optional[Mapping[str, Any]]) -> "QoSConfig":

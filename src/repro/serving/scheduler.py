@@ -316,6 +316,11 @@ class ContinuousBatchingScheduler:
                         or self.active)
         return bool(self.queue or self.active)
 
+    def active_count(self) -> int:
+        """Occupied decode slots right now (lock-free point-in-time read
+        — the fleet dispatcher's load signal alongside queued_count)."""
+        return len(self.active)
+
     # -- scheduling ----------------------------------------------------------
 
     def _retire(self, req: Request):

@@ -42,7 +42,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Any, Dict, List, Optional
 
-__all__ = ["now", "RequestTrace", "Tracer"]
+__all__ = ("now", "RequestTrace", "Tracer")
 
 
 def now() -> float:
@@ -214,10 +214,14 @@ class Tracer:
 
     def __init__(self, *, capacity: int = 256,
                  slow_trace_ms: Optional[float] = None,
-                 ticks: int = 2048, model: str = ""):
+                 ticks: int = 2048, model: str = "", replica: str = ""):
         self.capacity = max(1, int(capacity))
         self.slow_trace_ms = slow_trace_ms
         self.model = model
+        # fleet deployments stamp each replica's tracer ("r0", "r1", …):
+        # the Perfetto export gets one process group per replica and the
+        # stats snapshot says which replica's ring it describes
+        self.replica = replica
         self._lock = threading.Lock()
         self._live: Dict[int, RequestTrace] = {}
         self._done: "OrderedDict[int, RequestTrace]" = OrderedDict()
@@ -300,6 +304,8 @@ class Tracer:
             counters = list(self._counters)
         us = lambda t: round(t * 1e6, 1)  # noqa: E731
         name = process_name or self.model or "serving"
+        if process_name is None and self.replica:
+            name = f"{name}/{self.replica}"
         ev: List[Dict[str, Any]] = [
             {"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
              "args": {"name": name}},
@@ -370,7 +376,10 @@ class Tracer:
 
     def snapshot_stats(self) -> Dict[str, Any]:
         with self._lock:
-            return {"enabled": True, "live": len(self._live),
-                    "finished": len(self._done), "capacity": self.capacity,
-                    "dropped": self.dropped, "compacted": self.compacted,
-                    "slow_trace_ms": self.slow_trace_ms}
+            out = {"enabled": True, "live": len(self._live),
+                   "finished": len(self._done), "capacity": self.capacity,
+                   "dropped": self.dropped, "compacted": self.compacted,
+                   "slow_trace_ms": self.slow_trace_ms}
+            if self.replica:
+                out["replica"] = self.replica
+            return out

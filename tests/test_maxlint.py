@@ -513,6 +513,128 @@ def test_json_report_shape(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# replica-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_replica_engine_outside_factory_flagged(tmp_path):
+    src = """
+        from repro.serving.engine import GenerationEngine
+
+        def handler(model, params):
+            # ad-hoc engine: bypasses asset build and mesh placement
+            return GenerationEngine(model, params)
+    """
+    tree = write_tree(tmp_path, {"repro/serving/adhoc.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    fs = findings_of(report, "replica-discipline")
+    assert len(fs) == 1
+    assert "factory path" in fs[0].message
+
+
+def test_replica_engine_alias_and_attribute_forms_flagged(tmp_path):
+    src = """
+        from repro.serving.engine import GenerationEngine as GE
+        from repro.serving import engine as eng
+
+        def a(model, params):
+            return GE(model, params)
+
+        def b(model, params):
+            return eng.GenerationEngine(model, params)
+    """
+    tree = write_tree(tmp_path, {"repro/core/sneaky.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert len(findings_of(report, "replica-discipline")) == 2
+
+
+def test_replica_engine_in_factory_modules_allowed(tmp_path):
+    src = """
+        from repro.serving.engine import GenerationEngine
+
+        def build(model, params):
+            return GenerationEngine(model, params)
+    """
+    tree = write_tree(tmp_path, {"repro/core/assets.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert findings_of(report, "replica-discipline") == []
+
+
+def test_replica_module_level_mutable_state_flagged(tmp_path):
+    src = """
+        CACHE = {}
+        ITEMS = []
+        SEEN: set = set()
+    """
+    tree = write_tree(tmp_path, {"repro/serving/state.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    fs = findings_of(report, "replica-discipline")
+    assert len(fs) == 3
+    assert all("process-global" in f.message for f in fs)
+
+
+def test_replica_immutable_module_constants_allowed(tmp_path):
+    src = """
+        SITES = ("admission", "chunk", "stall", "kill")
+        CODES = frozenset({"QUEUE_FULL", "CANCELLED"})
+        LIMIT = 8
+    """
+    tree = write_tree(tmp_path, {"repro/serving/consts.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert findings_of(report, "replica-discipline") == []
+
+
+def test_replica_module_state_scope_is_serving_only(tmp_path):
+    # module-level mutables outside repro.serving are out of scope
+    src = """
+        REGISTRY = {}
+    """
+    tree = write_tree(tmp_path, {"repro/launch/reg.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert findings_of(report, "replica-discipline") == []
+
+
+def test_replica_mutable_default_argument_flagged(tmp_path):
+    src = """
+        def collect(x, acc=[]):
+            acc.append(x)
+            return acc
+
+        def merge(x, *, opts={}):
+            return {**opts, "x": x}
+    """
+    tree = write_tree(tmp_path, {"repro/core/helpers.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    fs = findings_of(report, "replica-discipline")
+    assert len(fs) == 2
+    assert all("aliased across every call" in f.message for f in fs)
+
+
+def test_replica_none_default_allowed(tmp_path):
+    src = """
+        def collect(x, acc=None):
+            acc = [] if acc is None else acc
+            acc.append(x)
+            return acc
+    """
+    tree = write_tree(tmp_path, {"repro/serving/ok.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert findings_of(report, "replica-discipline") == []
+
+
+def test_replica_pragma_suppresses_with_reason(tmp_path):
+    src = """
+        # maxlint: allow[replica-discipline] reason=intentional global registry
+        METRICS = {}
+    """
+    tree = write_tree(tmp_path, {"repro/serving/reg.py": src})
+    report = run_paths([str(tree)], rules=["replica-discipline"])
+    assert findings_of(report, "replica-discipline") == []
+    sup = [f for f in report.suppressed if f.rule == "replica-discipline"]
+    assert len(sup) == 1 and sup[0].suppress_reason
+
+
+# ---------------------------------------------------------------------------
 # the real tree
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,109 @@
+"""Property: the router's dispatch table, ``GET /v2/routes``, and
+``swagger.json`` are three views of one source of truth — every route
+dispatches to itself, the table row matches the spec operation, and no
+view has an entry the others lack."""
+
+import json
+import string
+import urllib.error
+import urllib.request
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.assets  # noqa: F401
+from repro.core import MAXServer
+from repro.core.api import build_router
+
+# path-parameter values a client could legally put in one URL segment
+_SEGMENT = st.text(
+    alphabet=string.ascii_lowercase + string.digits + "._-",
+    min_size=1, max_size=12)
+
+
+@pytest.fixture(scope="module")
+def server():
+    with MAXServer(build_kw={"max_seq": 64, "max_batch": 4},
+                   auto_deploy=False) as s:
+        yield s
+
+
+def _get(server, path):
+    req = urllib.request.Request(server.url + path)
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _fill(template, value):
+    out = template
+    while "{" in out:
+        lo, hi = out.index("{"), out.index("}")
+        out = out[:lo] + value + out[hi + 1:]
+    return out
+
+
+def test_routes_endpoint_mirrors_router_table(server):
+    code, body = _get(server, "/v2/routes")
+    assert code == 200
+    live = body["routes"]
+    table = build_router().table()      # unbound spec-only router
+    assert live == table
+    # every row is fully described — including the response media type
+    # the dispatcher will actually use
+    for row in live:
+        assert set(row) == {"method", "path", "summary", "version",
+                            "media"}
+        assert row["media"] in ("application/json", "text/event-stream")
+
+
+def test_swagger_and_table_enumerate_the_same_surface(server):
+    code, spec = _get(server, "/swagger.json")
+    assert code == 200
+    code, body = _get(server, "/v2/routes")
+    table = body["routes"]
+    # direction 1: every table row appears in the spec with the same
+    # method and response media
+    for row in table:
+        ops = spec["paths"].get(row["path"])
+        assert ops is not None, f"{row['path']} missing from swagger"
+        op = ops.get(row["method"].lower())
+        assert op is not None, f"{row['method']} {row['path']} missing"
+        media = list(op["responses"]["200"]["content"])
+        assert media == [row["media"]], (row, media)
+    # direction 2: every templated spec operation is a table row; the
+    # only sanctioned extras are concrete per-asset paths merged through
+    # extra_paths (those contain no template parameters)
+    table_keys = {(r["method"].upper(), r["path"]) for r in table}
+    for path, ops in spec["paths"].items():
+        for method in ops:
+            if (method.upper(), path) not in table_keys:
+                assert "{" not in path, \
+                    f"spec-only templated operation {method.upper()} {path}"
+
+
+@settings(max_examples=25)
+@given(value=_SEGMENT)
+def test_every_route_dispatches_to_itself(value):
+    """For any legal path-parameter value, substituting into a route's
+    template and dispatching resolves back to that exact route (method
+    included) — the table IS the dispatch behavior, not a parallel list."""
+    router = build_router()
+    for route in router.routes:
+        concrete = _fill(route.template, value)
+        resolved, params, allowed = router.dispatch(route.method, concrete)
+        assert resolved is route or (
+            # an earlier route may legitimately shadow this template for
+            # this value (e.g. a literal segment route); shadowing must
+            # still resolve to a route with the same method
+            resolved is not None and resolved.method == route.method), \
+            (route.method, route.template, value)
+        if resolved is route and "{" in route.template:
+            assert all(v == value for v in params.values())
+        # a wrong method on the same concrete path must 405 with the
+        # correct method in the allow list
+        wrong = "PATCH"
+        r2, _, allowed2 = router.dispatch(wrong, concrete)
+        assert r2 is None and route.method in allowed2
